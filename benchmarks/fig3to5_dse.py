@@ -1,0 +1,41 @@
+"""Paper Figs. 3-5: DSE Pareto + headline ratios per workload.
+
+Reports, for VGG-16 / ResNet-34 / ResNet-50: the normalized ratios of the
+best LightPE-1/LightPE-2 configs vs the best INT16 config and INT16 vs
+FP32 (paper: 4.9x/4.9x, 4.1x/4.2x, 1.7x/1.4x), plus sweep timing.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.dse import explore, pareto_front
+
+
+def run():
+    rows = []
+    agg = {}
+    for wl in ("vgg16", "resnet34", "resnet50"):
+        t0 = time.perf_counter()
+        res = explore(wl)
+        dt = time.perf_counter() - t0
+        n = len(res.points)
+        r = res.headline_ratios()
+        for k, v in r.items():
+            rows.append((f"dse/{wl}/{k}", 0.0, f"{v:.2f}"))
+            agg.setdefault(k, []).append(v)
+        front = pareto_front(res.points)
+        rows.append((f"dse/{wl}/pareto_size", 0.0, str(len(front))))
+        rows.append((f"dse/{wl}/sweep", dt / n * 1e6,
+                     f"us_per_design_point(n={n})"))
+    paper = {"lightpe1_perf_per_area_vs_int16": 4.9,
+             "lightpe1_energy_vs_int16": 4.9,
+             "lightpe2_perf_per_area_vs_int16": 4.1,
+             "lightpe2_energy_vs_int16": 4.2,
+             "int16_perf_per_area_vs_fp32": 1.7,
+             "int16_energy_vs_fp32": 1.4}
+    for k, vals in agg.items():
+        got = float(np.mean(vals))
+        rows.append((f"dse/mean/{k}", 0.0,
+                     f"{got:.2f}_vs_paper_{paper[k]}"))
+    return rows

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks (CPU reference path timings + derived rates).
+
+On this CPU container the Pallas kernels run in interpret mode (for
+correctness only); the timed numbers here are the jnp reference path —
+the production numbers come from the dry-run roofline (§Roofline).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.quant import quantizers as qz
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    m = k = n = 512
+    x = jax.random.normal(jax.random.key(0), (m, k))
+    w = jax.random.normal(jax.random.key(1), (k, n))
+    xs = qz.int_scale(x, 8)
+    xq = qz.quantize_int(x, xs, 8)
+    ws8 = qz.int_scale(w, 8, axis=0)
+    wq8 = qz.quantize_int(w, ws8, 8)
+    flops = 2 * m * k * n
+
+    us = _time(lambda a, b: ops.w8a8_matmul(a, b, xs, ws8, impl="ref"),
+               xq, wq8)
+    rows.append(("kernel/w8a8_ref_512", us,
+                 f"GFLOPs={flops / us / 1e3:.1f}"))
+
+    wsp = qz.pow2_scale(w, axis=0)
+    packed = qz.pack_int4(qz.pow2_encode(w, wsp).T).T
+    us = _time(lambda a, b: ops.w4a8_matmul(a, b, xs, wsp, impl="ref"),
+               xq, packed)
+    rows.append(("kernel/w4a8_ref_512", us,
+                 f"GFLOPs={flops / us / 1e3:.1f}"))
+
+    b, h, s, d = 1, 4, 512, 64
+    q = jax.random.normal(jax.random.key(2), (b, h, s, d))
+    kk = jax.random.normal(jax.random.key(3), (b, h, s, d))
+    v = jax.random.normal(jax.random.key(4), (b, h, s, d))
+    aflops = 4 * b * h * s * s * d
+    us = _time(lambda a, b_, c: ops.flash_attention(a, b_, c, impl="ref"),
+               q, kk, v)
+    rows.append(("kernel/attention_ref_512", us,
+                 f"GFLOPs={aflops / us / 1e3:.1f}"))
+
+    # interpret-mode pallas (correctness path) on a small shape
+    t0 = time.perf_counter()
+    ops.w8a8_matmul(xq[:64, :64], wq8[:64, :64], xs, ws8[:, :64],
+                    impl="interpret", bm=32, bn=32, bk=32).block_until_ready()
+    rows.append(("kernel/w8a8_pallas_interpret_64",
+                 (time.perf_counter() - t0) * 1e6, "validation_path"))
+    return rows

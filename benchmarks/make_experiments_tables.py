@@ -1,0 +1,117 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables
+prints the §Dry-run and §Roofline markdown tables.
+"""
+
+import glob
+import json
+import os
+
+DIR = os.environ.get(
+    "DRYRUN_DIR",
+    "experiments/dryrun_v3" if os.path.isdir("experiments/dryrun_v3")
+    else "experiments/dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "moonshot-v1-16b-a3b", "phi3.5-moe-42b-a6.6b", "mamba2-130m",
+    "starcoder2-7b", "phi4-mini-3.8b", "deepseek-67b", "gemma3-4b",
+    "llama-3.2-vision-90b", "whisper-medium", "zamba2-1.2b",
+]
+
+
+def _fmt_bytes(n):
+    return f"{n / 2**30:.2f}"
+
+
+def load(quant=False):
+    recs = {}
+    for f in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(f))
+        is_q = f.endswith("__quant.json")
+        if is_q != quant:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def roofline_table(recs, mesh="16x16"):
+    print("| arch | shape | bottleneck | compute s | memory s | collective s"
+          " | MODEL_FLOPS | useful (6ND/HLO) | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | — skipped (sub-quadratic attn"
+                      f" required) | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            ro = r["roofline"]
+            print(f"| {arch} | {shape} | **{ro['bottleneck']}** |"
+                  f" {ro['compute_s']:.3f} | {ro['memory_s']:.3f} |"
+                  f" {ro['collective_s']:.3f} | {ro['model_flops']:.2e} |"
+                  f" {ro['useful_flops_ratio']:.2f} |"
+                  f" {ro['roofline_fraction']:.4f} |")
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | per-dev args GiB | per-dev temp GiB |"
+          " HLO GFLOPs/dev | coll GiB/dev | AR/AG/RS/A2A/CP counts |"
+          " compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None or r["status"] != "ok":
+                    continue
+                s, m = r["stats"], r["memory_analysis"]
+                c = s["collective_count_by_kind"]
+                counts = "/".join(str(c.get(k, 0)) for k in (
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"))
+                print(f"| {arch} | {shape} | {mesh} |"
+                      f" {_fmt_bytes(m['argument_bytes'])} |"
+                      f" {_fmt_bytes(m['temp_bytes'])} |"
+                      f" {s['flops'] / 1e9:.0f} |"
+                      f" {_fmt_bytes(s['collective_bytes'])} |"
+                      f" {counts} | {r.get('compile_s', 0)} |")
+
+
+def summary(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"cells: ok={ok} skipped={sk} error={er}")
+    worst = sorted((r for r in recs.values() if r["status"] == "ok"),
+                   key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = sorted((r for r in recs.values() if r["status"] == "ok"),
+                  key=lambda r: -(r["roofline"]["collective_s"]
+                                  / max(r["roofline"]["step_time_s"],
+                                        1e-12)))
+    print("worst roofline fraction:",
+          [(r["arch"], r["shape"], r["mesh"],
+            round(r["roofline"]["roofline_fraction"], 4))
+           for r in worst[:6]])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"], r["mesh"],
+            round(r["roofline"]["collective_s"]
+                  / max(r["roofline"]["step_time_s"], 1e-12), 3))
+           for r in coll[:6]])
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## Dry-run table\n")
+    dryrun_table(recs)
+    print("\n## Roofline (single-pod 16x16)\n")
+    roofline_table(recs, "16x16")
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    roofline_table(recs, "2x16x16")
+    print()
+    summary(recs)

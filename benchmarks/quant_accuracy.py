@@ -1,0 +1,59 @@
+"""Quantization-mode accuracy ablation (paper Sec. 3.2: LightPEs achieve
+their gains "with only slight accuracy degradation", citing LightNN).
+
+Trains the same smoke model under each execution mode (paper PE-type
+analogue) on the same data/seed and reports the final training loss:
+fp32 / bf16 / w8a8 (LightPE-2) / w4a8_pow2 (LightPE-1).
+"""
+
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import Model
+from repro.optim import adamw
+
+MODES = ("fp32", "bf16", "w8a8", "w4a8_pow2")
+
+
+def _train_mode(mode: str, steps: int = 40):
+    cfg = dataclasses.replace(reduced(get_config("phi4-mini-3.8b")),
+                              quant=mode)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = adamw.init(params)
+    ocfg = adamw.AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=4)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                  global_batch=8))
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt, _ = adamw.update(ocfg, grads, opt, params)
+        return params, opt, loss
+
+    loss = None
+    for s in range(steps):
+        params, opt, loss = step(params, opt, data.batch(s))
+    return float(loss)
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    losses = {}
+    for mode in MODES:
+        losses[mode] = _train_mode(mode)
+        rows.append((f"quant_acc/{mode}_final_loss", 0.0,
+                     f"{losses[mode]:.4f}"))
+    base = losses["fp32"]
+    for mode in MODES[1:]:
+        rows.append((f"quant_acc/{mode}_degradation", 0.0,
+                     f"{losses[mode] - base:+.4f}_nats"))
+    rows.append(("quant_acc/total", (time.perf_counter() - t0) * 1e6,
+                 f"{len(MODES)}x40_steps"))
+    return rows

@@ -1,0 +1,47 @@
+"""§Roofline: aggregate the dry-run JSONs into the roofline table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per (arch x shape x mesh): the three terms, the bottleneck,
+and the roofline fraction.  Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import glob
+import json
+import os
+
+_DEFAULT = "experiments/dryrun_v3" \
+    if os.path.isdir("experiments/dryrun_v3") else "experiments/dryrun"
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", _DEFAULT)
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline/missing", 0.0,
+                 "run repro.launch.dryrun --all first")]
+    ok = skipped = failed = 0
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"{rec['arch']}x{rec['shape']}x{rec['mesh']}"
+        if rec["status"] == "skipped":
+            skipped += 1
+            rows.append((f"roofline/{tag}", 0.0, "skipped_subquadratic"))
+            continue
+        if rec["status"] != "ok":
+            failed += 1
+            rows.append((f"roofline/{tag}", 0.0, "ERROR"))
+            continue
+        ok += 1
+        r = rec["roofline"]
+        rows.append((
+            f"roofline/{tag}",
+            r["step_time_s"] * 1e6,
+            (f"bound={r['bottleneck']};frac={r['roofline_fraction']:.4f};"
+             f"c={r['compute_s']:.3f}s;m={r['memory_s']:.3f}s;"
+             f"n={r['collective_s']:.3f}s;useful={r['useful_flops_ratio']:.2f}")))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={ok};skipped={skipped};failed={failed}"))
+    return rows

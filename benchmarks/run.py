@@ -1,0 +1,33 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows: Fig. 2 (PPA model accuracy), Figs. 3-5 (DSE Pareto + headline
+# ratios), kernel micro-benches, and the §Roofline table from the dry-run.
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2_ppa_accuracy, fig3to5_dse, kernel_bench,
+                            quant_accuracy, roofline_bench)
+    modules = [
+        ("fig2", fig2_ppa_accuracy),
+        ("fig3to5", fig3to5_dse),
+        ("kernels", kernel_bench),
+        ("quant_acc", quant_accuracy),
+        ("roofline", roofline_bench),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{tag}/EXCEPTION,0.00,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,46 @@
+"""Swap the §Dry-run / §Roofline tables in EXPERIMENTS.md for the ones
+generated from the current DRYRUN_DIR (default: newest dryrun_v*)."""
+
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+
+from benchmarks.make_experiments_tables import (dryrun_table, load,
+                                                roofline_table, summary)
+
+
+def _capture(fn, *a, **k):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(*a, **k)
+    return buf.getvalue().strip()
+
+
+def main():
+    recs = load()
+    dry = _capture(dryrun_table, recs)
+    r1 = _capture(roofline_table, recs, "16x16")
+    r2 = _capture(roofline_table, recs, "2x16x16")
+    summ = _capture(summary, recs).splitlines()[0]
+
+    text = open("EXPERIMENTS.md").read()
+
+    def swap_table(text, anchor, new_table):
+        """Replace the first markdown table after ``anchor``."""
+        i = text.index(anchor)
+        m = re.search(r"\n\|[^\n]*\n\|[-| ]*\n(?:\|[^\n]*\n)+",
+                      text[i:])
+        start, end = i + m.start() + 1, i + m.end()
+        return text[:start] + new_table + "\n" + text[end:]
+
+    text = swap_table(text, "## §Dry-run", dry)
+    text = re.sub(r"Summary: cells:[^\n]*", f"Summary: {summ}", text, 1)
+    text = swap_table(text, "### Single-pod 16×16", r1)
+    text = swap_table(text, "### Multi-pod 2×16×16", r2)
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md tables updated;", summ)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Continuous-batching serving demo: requests of different lengths share
+slots, new requests are admitted mid-flight (Orca-style iteration-level
+scheduling), over int8-KV quantized decode.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models.model import Model
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def main():
+    cfg = reduced(get_config("gemma3-4b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(0, cfg.vocab,
+                                             size=rng.integers(2, 8))),
+                    max_new=int(rng.integers(3, 8)))
+            for i in range(6)]
+
+    bat = ContinuousBatcher(model, params, n_slots=3, max_seq=32,
+                            kv_quant=True)
+    for r in reqs:
+        bat.submit(r)
+    t0 = time.time()
+    iters = 0
+    while bat.busy:
+        bat.step()
+        iters += 1
+    dt = time.time() - t0
+    total = sum(len(r.generated) for r in bat.completed)
+    print(f"served {len(bat.completed)} requests / {total} tokens in "
+          f"{iters} iterations ({dt:.1f}s, 3 slots, int8 KV)")
+    for r in sorted(bat.completed, key=lambda r: r.rid):
+        print(f"  req {r.rid}: prompt_len={len(r.prompt)} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""The paper's headline experiment (Figs. 3-5): design-space exploration
+over PE types on VGG-16, normalized against the best INT16 config.
+
+  PYTHONPATH=src python examples/dse_explore.py [workload]
+"""
+import sys
+
+from repro.core.dse import explore, pareto_front
+from repro.core.pe import PEType
+
+
+def main():
+    wl = sys.argv[1] if len(sys.argv) > 1 else "vgg16"
+    res = explore(wl)
+    print(f"workload={wl}  design points={len(res.points)}")
+    print("\nbest config per PE type (perf/area anchor = best INT16):")
+    anchor = res.best_perf_per_area(PEType.INT16)
+    for t in PEType:
+        b = res.best_perf_per_area(t)
+        e = res.best_energy(t)
+        print(f"  {t.pretty:10s} perf/area {b.perf_per_area:8.1f} GMAC/s/mm^2"
+              f" ({b.perf_per_area / anchor.perf_per_area:4.2f}x)"
+              f"  best-energy {e.energy_j * 1e3:7.3f} mJ"
+              f"   [{b.config.name()}]")
+    print("\nheadline ratios (paper: 4.9/4.9, 4.1/4.2, 1.7/1.4):")
+    for k, v in res.headline_ratios().items():
+        print(f"  {k}: {v:.2f}")
+    front = pareto_front(res.points)
+    print(f"\nPareto frontier ({len(front)} points, all should be LightPE):")
+    for p in front[:10]:
+        print(f"  {p.config.pe_type.value:9s} perf/area="
+              f"{p.perf_per_area:8.1f} energy={p.energy_j * 1e3:7.3f} mJ")
+
+
+if __name__ == "__main__":
+    main()

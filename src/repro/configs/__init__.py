@@ -1,0 +1,35 @@
+"""Architecture configs (assigned 10-arch pool + the paper's CNNs)."""
+
+ALL_ARCHS = (
+    "moonshot-v1-16b-a3b",
+    "phi3.5-moe-42b-a6.6b",
+    "mamba2-130m",
+    "starcoder2-7b",
+    "phi4-mini-3.8b",
+    "deepseek-67b",
+    "gemma3-4b",
+    "llama-3.2-vision-90b",
+    "whisper-medium",
+    "zamba2-1.2b",
+)
+
+_MODULES = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "mamba2-130m": "mamba2_130m",
+    "starcoder2-7b": "starcoder2_7b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "deepseek-67b": "deepseek_67b",
+    "gemma3-4b": "gemma3_4b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "whisper-medium": "whisper_medium",
+    "zamba2-1.2b": "zamba2_1_2b",
+}
+
+
+def get_config(name: str):
+    import importlib
+    from repro.configs.base import _REGISTRY
+    if name not in _REGISTRY:
+        importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return _REGISTRY[name]

@@ -1,0 +1,3 @@
+"""The paper's own workloads (VGG-16 / ResNet-34 / ResNet-50) re-exported
+as configs for the DSE benchmarks; see repro.core.workloads."""
+from repro.core.workloads import WORKLOADS, get_workload  # noqa: F401

@@ -1,0 +1,13 @@
+"""QAPPA paper core: accelerator template, PE models, synthesis oracle,
+row-stationary dataflow, polynomial PPA regression, DSE, RTL generation,
+and the TPU roofline re-targeting."""
+
+from repro.core.accelerator import AcceleratorConfig, design_space  # noqa
+from repro.core.dataflow import map_layer, run_workload             # noqa
+from repro.core.dse import DSEResult, explore, pareto_front         # noqa
+from repro.core.pe import PEType, pe_spec                           # noqa
+from repro.core.ppa_model import fit_poly_model, fit_ppa_suite      # noqa
+from repro.core.rtl import generate_rtl                             # noqa
+from repro.core.synthesis import SynthesisReport, synthesize        # noqa
+from repro.core.tpu_roofline import Roofline, roofline_from_stats   # noqa
+from repro.core.workloads import get_workload                       # noqa

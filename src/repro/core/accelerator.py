@@ -1,0 +1,97 @@
+"""Parameterized spatial-array accelerator template (QAPPA Fig. 1).
+
+A 2-D array of PEs + per-PE scratchpads (ifmap / filter / psum), a shared
+global buffer, and a bandwidth-limited device interface.  Every structural
+parameter the paper sweeps is a field here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator
+
+from repro.core.pe import PEType, PESpec, pe_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    """One hardware design point in the QAPPA design space."""
+
+    pe_type: PEType = PEType.INT16
+    pe_rows: int = 12
+    pe_cols: int = 14
+    # per-PE scratchpad capacities in *entries* (words of the native width)
+    ifmap_spad: int = 12
+    filter_spad: int = 224
+    psum_spad: int = 24
+    glb_kb: int = 128              # shared global buffer capacity (kB)
+    dram_bw_gbps: float = 12.8     # device bandwidth, GB/s
+    clock_ghz: float | None = None  # None -> PE critical path sets the clock
+
+    def __post_init__(self):
+        object.__setattr__(self, "pe_type", PEType(self.pe_type))
+
+    @property
+    def num_pes(self) -> int:
+        return self.pe_rows * self.pe_cols
+
+    @property
+    def spec(self) -> PESpec:
+        return pe_spec(self.pe_type)
+
+    @property
+    def effective_clock_ghz(self) -> float:
+        max_clk = self.spec.max_clock_ghz
+        if self.clock_ghz is None:
+            return max_clk
+        return min(self.clock_ghz, max_clk)
+
+    @property
+    def peak_macs_per_s(self) -> float:
+        return self.num_pes * self.effective_clock_ghz * 1e9
+
+    @property
+    def glb_bits(self) -> int:
+        return self.glb_kb * 1024 * 8
+
+    def name(self) -> str:
+        return (f"{self.pe_type.value}_{self.pe_rows}x{self.pe_cols}"
+                f"_glb{self.glb_kb}k_sp{self.ifmap_spad}-{self.filter_spad}-"
+                f"{self.psum_spad}_bw{self.dram_bw_gbps:g}")
+
+    def features(self) -> dict[str, float]:
+        """Numeric features used by the polynomial PPA models."""
+        s = self.spec
+        return {
+            "num_pes": float(self.num_pes),
+            "pe_rows": float(self.pe_rows),
+            "pe_cols": float(self.pe_cols),
+            "ifmap_spad": float(self.ifmap_spad),
+            "filter_spad": float(self.filter_spad),
+            "psum_spad": float(self.psum_spad),
+            "glb_kb": float(self.glb_kb),
+            "dram_bw_gbps": float(self.dram_bw_gbps),
+            "act_bits": float(s.act_bits),
+            "weight_bits": float(s.weight_bits),
+        }
+
+
+def design_space(
+    pe_types: tuple[PEType, ...] = tuple(PEType),
+    array_dims: tuple[tuple[int, int], ...] = ((8, 8), (12, 14), (16, 16),
+                                               (24, 24), (32, 32)),
+    spad_scales: tuple[float, ...] = (0.5, 1.0, 2.0),
+    glb_kbs: tuple[int, ...] = (64, 128, 256, 512),
+    bws: tuple[float, ...] = (6.4, 12.8, 25.6),
+) -> Iterator[AcceleratorConfig]:
+    """Full-factorial QAPPA design space (paper Sec. 3.3)."""
+    for pe_type, (r, c), ss, glb, bw in itertools.product(
+            pe_types, array_dims, spad_scales, glb_kbs, bws):
+        yield AcceleratorConfig(
+            pe_type=pe_type, pe_rows=r, pe_cols=c,
+            ifmap_spad=max(4, int(12 * ss)),
+            filter_spad=max(16, int(224 * ss)),
+            psum_spad=max(8, int(24 * ss)),
+            glb_kb=glb, dram_bw_gbps=bw,
+        )

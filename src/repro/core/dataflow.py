@@ -1,0 +1,188 @@
+"""Row-stationary dataflow model (Eyeriss-style) for the QAPPA template.
+
+Maps a conv/FC layer onto the 2-D PE array the way Eyeriss does:
+
+* a *PE set* of ``R x E_tile`` computes one (channel, filter) plane —
+  PE ``(r, e)`` slides filter row ``r`` across ifmap row ``e*stride + r``,
+  producing ``F`` outputs of ``S`` MACs each;
+* PE sets are stacked vertically (``sets_fit = pe_rows // R``) over
+  channels first (so psums accumulate spatially), then filters;
+* output columns fold over the array width (``fit_horz``).
+
+From the mapping we derive compute cycles, utilization, and the access
+counts at every level of the storage hierarchy (spad / GLB / DRAM), all of
+which are quantization-aware: byte counts scale with the PE type's
+activation / weight / psum widths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.pe import rf_access_energy_pj, sram_access_energy_pj
+from repro.core.workloads import ConvLayer, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerResult:
+    name: str
+    macs: int
+    compute_cycles: int
+    mem_cycles: int
+    total_cycles: int
+    utilization: float
+    spad_accesses: int            # word accesses (MAC-local)
+    glb_bytes: int
+    dram_bytes: int
+    energy_pj: float
+
+    @property
+    def bound(self) -> str:
+        return "memory" if self.mem_cycles > self.compute_cycles else "compute"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadResult:
+    workload: str
+    config_name: str
+    layers: tuple[LayerResult, ...]
+    area_mm2: float
+    clock_ghz: float
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def total_cycles(self) -> int:
+        return sum(l.total_cycles for l in self.layers)
+
+    @property
+    def latency_s(self) -> float:
+        return self.total_cycles / (self.clock_ghz * 1e9)
+
+    @property
+    def energy_j(self) -> float:
+        return sum(l.energy_pj for l in self.layers) / 1e12
+
+    @property
+    def throughput_gmacs(self) -> float:
+        return self.total_macs / self.latency_s / 1e9
+
+    @property
+    def perf_per_area(self) -> float:
+        """GMAC/s per mm^2 — the paper's performance-per-area metric."""
+        return self.throughput_gmacs / self.area_mm2
+
+    @property
+    def edp(self) -> float:
+        return self.energy_j * self.latency_s
+
+
+def map_layer(layer: ConvLayer, cfg: AcceleratorConfig,
+              clock_ghz: float, area_mm2: float,
+              leakage_mw: float) -> LayerResult:
+    s = cfg.spec
+    r, e, f_, ss = layer.r, layer.e, layer.f, layer.s
+    c, k, n = layer.c, layer.k, layer.batch
+
+    # ---- spatial mapping ---------------------------------------------------
+    sets_fit = max(1, cfg.pe_rows // r)            # PE sets stacked vertically
+    c_simult = min(c, sets_fit)                    # channels accumulated in-array
+    k_simult = max(1, sets_fit // c_simult)        # filters in parallel
+    fit_horz = min(e, cfg.pe_cols)                 # output rows across width
+    n_e_groups = math.ceil(e / fit_horz)
+    n_c_groups = math.ceil(c / c_simult)
+    n_k_groups = math.ceil(k / k_simult)
+
+    passes = n * n_e_groups * n_c_groups * n_k_groups
+    compute_cycles = passes * ss * f_
+    macs = layer.macs
+    utilization = macs / max(1, compute_cycles * cfg.num_pes)
+
+    # ---- element / byte counts (quantization-aware) -------------------------
+    ab, wb, pb = s.act_bits, s.weight_bits, s.psum_bits
+    ifmap_elems = n * c * layer.h * layer.w
+    weight_elems = k * c * r * ss
+    ofmap_elems = n * k * e * f_
+    ifmap_bytes = ifmap_elems * ab // 8
+    weight_bytes = weight_elems * wb // 8
+    ofmap_bytes = ofmap_elems * ab // 8
+
+    # DRAM traffic (streaming DMA packs elements into bursts, so *bytes*
+    # scale with precision): weights stream once; the ifmap is re-streamed
+    # per filter group that does not fit the GLB (half of the GLB is
+    # allocated to each of ifmap/weights).
+    glb_half = cfg.glb_kb * 1024 // 2
+    filt_bytes_one = max(1, c * r * ss * wb // 8)
+    k_fit_glb = max(1, glb_half // filt_bytes_one)
+    n_k_glb = math.ceil(k / k_fit_glb)
+    ifmap_resident = ifmap_bytes <= glb_half
+    ifmap_dram = ifmap_bytes * (1 if ifmap_resident else n_k_glb)
+    dram_bytes = ifmap_dram + weight_bytes + ofmap_bytes
+
+    # GLB traffic in *elements* (the GLB port is fixed-width; see pe.py):
+    # fills/drains mirror the DRAM stream, the ifmap is multicast-read once
+    # per filter iteration, weights re-read when the filter spad cannot hold
+    # its working set, psums spill between channel groups when the psum spad
+    # cannot hold an output strip.
+    dram_elems = ifmap_elems * (1 if ifmap_resident else n_k_glb) \
+        + weight_elems + ofmap_elems
+    # the ifmap row parked in the ifmap spad is reused across all filters
+    # whose rows are simultaneously resident in the filter spad (k_res),
+    # so the GLB multicast-read repeats only per filter *residency* group
+    k_res = max(1, cfg.filter_spad // max(1, ss))
+    glb_ifmap = ifmap_elems * math.ceil(n_k_groups / k_res)
+    w_res = min(n_e_groups, max(1, cfg.filter_spad // max(1, ss)))
+    glb_weight = weight_elems * max(1, n_e_groups // w_res)
+    psum_strip = f_  # psum entries a PE must hold per pass
+    spill = 0 if cfg.psum_spad >= psum_strip else (n_c_groups - 1)
+    glb_psum = 2 * ofmap_elems * max(0, spill)
+    glb_elems = 2 * dram_elems + glb_ifmap + glb_weight + glb_psum
+    glb_bytes = glb_elems * ab // 8  # reported for reference
+
+    # ---- stalls -------------------------------------------------------------
+    bw_bytes_per_cycle = cfg.dram_bw_gbps / clock_ghz
+    mem_cycles = int(dram_bytes / max(1e-9, bw_bytes_per_cycle))
+    total_cycles = max(compute_cycles, mem_cycles)   # double-buffered overlap
+
+    # ---- energy (paper-faithful: post-synthesis accelerator energy; the
+    # DRAM is not in the netlist, so DRAM energy is excluded -- DESIGN.md §2)
+    spad_bits = s.scratchpad_bits(cfg.ifmap_spad, cfg.filter_spad,
+                                  cfg.psum_spad)
+    # ifmap read + weight read + ~1 psum spad access per MAC (the running
+    # sum lives in a register; the spad is touched on row hand-off).
+    spad_accesses = 3 * macs
+    e_spad = spad_accesses * rf_access_energy_pj(spad_bits)
+    e_mac = macs * s.mac_energy_pj
+    e_glb = glb_elems * sram_access_energy_pj(cfg.glb_bits)
+    e_leak = leakage_mw * 1e-3 * (total_cycles / (clock_ghz * 1e9)) * 1e12
+    energy_pj = e_mac + e_spad + e_glb + e_leak
+
+    return LayerResult(
+        name=layer.name, macs=macs,
+        compute_cycles=compute_cycles, mem_cycles=mem_cycles,
+        total_cycles=total_cycles, utilization=utilization,
+        spad_accesses=spad_accesses, glb_bytes=glb_bytes,
+        dram_bytes=dram_bytes, energy_pj=energy_pj,
+    )
+
+
+def run_workload(workload: Workload, cfg: AcceleratorConfig,
+                 report=None) -> WorkloadResult:
+    """Evaluate a workload on a design point (synthesis report optional)."""
+    if report is None:
+        from repro.core.synthesis import synthesize
+        report = synthesize(cfg)
+    from repro.core.pe import _P_PE_LEAK_UW
+    leakage_mw = cfg.num_pes * _P_PE_LEAK_UW[cfg.pe_type] * 1e-3 \
+        + 0.002 * cfg.glb_kb
+    layers = tuple(
+        map_layer(l, cfg, report.clock_ghz, report.area_mm2, leakage_mw)
+        for l in workload.layers)
+    return WorkloadResult(
+        workload=workload.name, config_name=cfg.name(), layers=layers,
+        area_mm2=report.area_mm2, clock_ghz=report.clock_ghz,
+    )

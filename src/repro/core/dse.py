@@ -1,0 +1,114 @@
+"""Design-space exploration (paper Sec. 4, Figs. 3-5).
+
+Sweeps the QAPPA design space, evaluates each design point on a workload via
+the row-stationary dataflow model, and reports normalized
+performance-per-area vs normalized energy with respect to the *best INT16
+configuration* (the paper's anchor).  Also extracts Pareto frontiers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from repro.core.accelerator import AcceleratorConfig, design_space
+from repro.core.dataflow import WorkloadResult, run_workload
+from repro.core.pe import PEType
+from repro.core.synthesis import synthesize
+from repro.core.workloads import Workload, get_workload
+
+
+@dataclasses.dataclass(frozen=True)
+class DSEPoint:
+    config: AcceleratorConfig
+    result: WorkloadResult
+
+    @property
+    def perf_per_area(self) -> float:
+        return self.result.perf_per_area
+
+    @property
+    def energy_j(self) -> float:
+        return self.result.energy_j
+
+
+@dataclasses.dataclass
+class DSEResult:
+    workload: str
+    points: list[DSEPoint]
+
+    def by_type(self, pe_type: PEType) -> list[DSEPoint]:
+        return [p for p in self.points if p.config.pe_type == pe_type]
+
+    def best_perf_per_area(self, pe_type: PEType) -> DSEPoint:
+        return max(self.by_type(pe_type), key=lambda p: p.perf_per_area)
+
+    def best_energy(self, pe_type: PEType) -> DSEPoint:
+        return min(self.by_type(pe_type), key=lambda p: p.energy_j)
+
+    def normalized(self) -> list[dict]:
+        """Per paper Figs. 3-5: normalize against best-perf/area INT16."""
+        anchor = self.best_perf_per_area(PEType.INT16)
+        out = []
+        for p in self.points:
+            out.append({
+                "config": p.config.name(),
+                "pe_type": p.config.pe_type.value,
+                "norm_perf_per_area": p.perf_per_area / anchor.perf_per_area,
+                "norm_energy": p.energy_j / anchor.energy_j,
+            })
+        return out
+
+    def headline_ratios(self) -> dict[str, float]:
+        """The paper's headline numbers (Sec. 4):
+
+        * LightPE-1 vs best INT16: perf/area and energy improvement
+        * LightPE-2 vs best INT16: perf/area and energy improvement
+        * INT16 vs best FP32: perf/area and energy improvement
+        Each ratio compares the best configuration of each PE type,
+        matching "when compared to the best INT16 hardware configuration".
+        """
+        b = {t: self.best_perf_per_area(t) for t in PEType}
+        e = {t: self.best_energy(t) for t in PEType}
+        return {
+            "lightpe1_perf_per_area_vs_int16":
+                b[PEType.LIGHTPE1].perf_per_area / b[PEType.INT16].perf_per_area,
+            "lightpe1_energy_vs_int16":
+                e[PEType.INT16].energy_j / e[PEType.LIGHTPE1].energy_j,
+            "lightpe2_perf_per_area_vs_int16":
+                b[PEType.LIGHTPE2].perf_per_area / b[PEType.INT16].perf_per_area,
+            "lightpe2_energy_vs_int16":
+                e[PEType.INT16].energy_j / e[PEType.LIGHTPE2].energy_j,
+            "int16_perf_per_area_vs_fp32":
+                b[PEType.INT16].perf_per_area / b[PEType.FP32].perf_per_area,
+            "int16_energy_vs_fp32":
+                e[PEType.FP32].energy_j / e[PEType.INT16].energy_j,
+        }
+
+
+def pareto_front(points: Sequence[DSEPoint]) -> list[DSEPoint]:
+    """Non-dominated set for (maximize perf/area, minimize energy)."""
+    front: list[DSEPoint] = []
+    for p in points:
+        dominated = any(
+            (q.perf_per_area >= p.perf_per_area and q.energy_j <= p.energy_j
+             and (q.perf_per_area > p.perf_per_area
+                  or q.energy_j < p.energy_j))
+            for q in points)
+        if not dominated:
+            front.append(p)
+    return sorted(front, key=lambda p: p.energy_j)
+
+
+def explore(workload: Workload | str,
+            configs: Iterable[AcceleratorConfig] | None = None) -> DSEResult:
+    if isinstance(workload, str):
+        workload = get_workload(workload)
+    if configs is None:
+        configs = design_space()
+    points = []
+    for cfg in configs:
+        rep = synthesize(cfg)
+        points.append(DSEPoint(config=cfg,
+                               result=run_workload(workload, cfg, rep)))
+    return DSEResult(workload=workload.name, points=points)

@@ -1,0 +1,173 @@
+"""Processing-element models for the QAPPA accelerator template.
+
+Four PE types from the paper (Sec. 3):
+
+* ``FP32``     -- fp32 multiply-accumulate.
+* ``INT16``    -- 16-bit integer MAC.
+* ``LightPE-1``-- 8-bit activations x 4-bit power-of-two weights; the
+  multiplier is replaced by ONE barrel shift (LightNN, Ding et al. 2018).
+* ``LightPE-2``-- 8-bit activations x 8-bit weights constrained to a sum of
+  <=2 powers of two; the multiplier is replaced by two shifts + one add.
+
+Per-op energy/area/delay constants are grounded in published 45 nm numbers
+(Horowitz, ISSCC'14; FreePDK45-era synthesis literature).  They stand in for
+the paper's Synopsys DC + FreePDK45 synthesis flow -- see DESIGN.md §2.
+Energy in pJ, area in um^2, delay in ns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+
+class PEType(str, enum.Enum):
+    FP32 = "fp32"
+    INT16 = "int16"
+    LIGHTPE1 = "lightpe1"
+    LIGHTPE2 = "lightpe2"
+
+    @property
+    def pretty(self) -> str:
+        return {
+            PEType.FP32: "FP32",
+            PEType.INT16: "INT16",
+            PEType.LIGHTPE1: "LightPE-1",
+            PEType.LIGHTPE2: "LightPE-2",
+        }[self]
+
+
+# ---------------------------------------------------------------------------
+# 45nm per-op constants.
+#
+# Baseline values follow Horowitz (ISSCC'14); the per-PE-type aggregates are
+# then CALIBRATED against the QAPPA paper's reported synthesis ratios (the
+# raw Synopsys DC / FreePDK45 data is not public), standing in for their
+# flow: the FP32 datapath is a pipelined, DVFS-tuned FPU macro rather than a
+# naive unpipelined MAC, and the LightPE datapaths take the LightNN paper's
+# synthesis results (Ding et al. 2018).  See DESIGN.md §2 and
+# EXPERIMENTS.md §Paper-claims for the calibration story.
+# ---------------------------------------------------------------------------
+# energy per MAC-equivalent op (pJ), datapath + local pipeline registers
+_E_FP32_MAC = 1.38      # pipelined + voltage-tuned fused fp32 MAC macro
+_E_INT16_MAC = 1.00     # 16b integer MAC incl. pipeline registers
+_E_L1_MAC = 0.105       # one 8b barrel shift + 24b accumulate (LightNN)
+_E_L2_MAC = 0.135       # two shifts + adder tree + 24b accumulate
+
+# datapath + per-PE control/NoC-port area (um^2)
+_A_FP32_MAC = 12050.0   # FPU macro + 32b operand buses + wide control
+_A_INT16_MAC = 8850.0   # 16b MAC, 32b accumulator, pipeline + control
+_A_L1_MAC = 1430.0      # shifter + 24b accumulator + narrow control
+_A_L2_MAC = 1450.0      # two shifters + adder + 24b accumulator
+
+# critical-path delay (ns) -> bounds the PE-array clock
+_D_FP32_MAC = 1.39      # ~0.72 GHz pipelined fp32 MAC @45nm
+_D_INT16_MAC = 1.25     # ~0.80 GHz
+_D_SHIFT_ADD = 0.80     # ~1.25 GHz  (shift + short add)
+_D_SHIFT2_ADD = 0.893   # ~1.12 GHz  (two shifts + adder tree)
+
+_P_PE_LEAK_UW = {       # static power per PE (uW) -- scales with area
+    PEType.FP32: 14.0,
+    PEType.INT16: 3.0,
+    PEType.LIGHTPE1: 0.9,
+    PEType.LIGHTPE2: 1.3,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PESpec:
+    """Resolved datapath characteristics of one PE type."""
+
+    pe_type: PEType
+    act_bits: int
+    weight_bits: int
+    psum_bits: int
+    mac_energy_pj: float          # energy of one MAC-equivalent op
+    mac_area_um2: float           # datapath area (no scratchpads)
+    mac_delay_ns: float           # critical path -> max clock
+    multiplier_free: bool         # LightPE: shifts instead of multiplies
+
+    @property
+    def max_clock_ghz(self) -> float:
+        return 1.0 / self.mac_delay_ns
+
+    def scratchpad_bits(self, ifmap_entries: int, filter_entries: int,
+                        psum_entries: int) -> int:
+        """Total per-PE scratchpad storage in bits (quantization-aware)."""
+        return (ifmap_entries * self.act_bits
+                + filter_entries * self.weight_bits
+                + psum_entries * self.psum_bits)
+
+
+_SPECS = {
+    PEType.FP32: PESpec(
+        pe_type=PEType.FP32, act_bits=32, weight_bits=32, psum_bits=32,
+        mac_energy_pj=_E_FP32_MAC, mac_area_um2=_A_FP32_MAC,
+        mac_delay_ns=_D_FP32_MAC, multiplier_free=False,
+    ),
+    PEType.INT16: PESpec(
+        pe_type=PEType.INT16, act_bits=16, weight_bits=16, psum_bits=32,
+        mac_energy_pj=_E_INT16_MAC, mac_area_um2=_A_INT16_MAC,
+        mac_delay_ns=_D_INT16_MAC, multiplier_free=False,
+    ),
+    # 8b act x 4b pow2 weight: one shift + 24b accumulate
+    PEType.LIGHTPE1: PESpec(
+        pe_type=PEType.LIGHTPE1, act_bits=8, weight_bits=4, psum_bits=24,
+        mac_energy_pj=_E_L1_MAC, mac_area_um2=_A_L1_MAC,
+        mac_delay_ns=_D_SHIFT_ADD, multiplier_free=True,
+    ),
+    # 8b act x 8b (sum of <=2 pow2) weight: two shifts + adds
+    PEType.LIGHTPE2: PESpec(
+        pe_type=PEType.LIGHTPE2, act_bits=8, weight_bits=8, psum_bits=24,
+        mac_energy_pj=_E_L2_MAC, mac_area_um2=_A_L2_MAC,
+        mac_delay_ns=_D_SHIFT2_ADD, multiplier_free=True,
+    ),
+}
+
+
+def pe_spec(pe_type: PEType | str) -> PESpec:
+    return _SPECS[PEType(pe_type)]
+
+
+# ---------------------------------------------------------------------------
+# SRAM macro models (CACTI-style scaling, 45 nm).
+# ---------------------------------------------------------------------------
+
+def rf_access_energy_pj(size_bits: int) -> float:
+    """Per-access energy of a small PE-local register-file scratchpad.
+
+    Port energy dominates for these small RFs, so the per-access cost is
+    (to first order) independent of the word width and scales weakly with
+    capacity.  ~0.03 pJ for an Eyeriss-sized 0.5 kB spad.
+    """
+    size_kb = max(size_bits / 8192.0, 0.03125)
+    return 0.035 * math.sqrt(size_kb) + 0.015
+
+
+def sram_access_energy_pj(size_bits: int, word_bits: int = 32) -> float:
+    """Per-access energy of a banked SRAM (the global buffer).
+
+    The GLB has fixed-width ports (one element per access regardless of the
+    PE type's payload width -- the RTL keeps a common interface across
+    precisions), so this is per *element*, not per byte.
+    """
+    size_kb = max(size_bits / 8192.0, 0.03125)
+    del word_bits  # fixed-width port
+    return 0.09 * math.sqrt(size_kb) + 0.04
+
+
+def sram_area_um2(size_bits: int) -> float:
+    """Area of an SRAM macro.  ~0.55 um^2/bit @45nm + fixed periphery."""
+    if size_bits <= 0:
+        return 0.0
+    return 0.55 * size_bits + 300.0
+
+
+def dram_energy_pj_per_byte() -> float:
+    """LPDDR @45nm-era: ~80 pJ/byte.  NOTE: used only for system-level
+    context; the paper's energy metric is post-synthesis accelerator energy
+    (Design Compiler + VCS) and the DRAM is *not in the netlist*, so the
+    paper-faithful energy model in :mod:`repro.core.dataflow` excludes it.
+    """
+    return 80.0

@@ -1,0 +1,164 @@
+"""QAPPA's PPA models: polynomial regression + k-fold CV model selection.
+
+The paper (Sec. 3.3) collects power/area/timing from the synthesis flow over
+many design points and fits polynomial regression models per PE type, using
+k-fold cross-validation (Mosteller & Tukey 1968) to select the model.  This
+module implements exactly that on top of the analytical synthesis oracle:
+
+    configs --synthesize--> (power, area, perf) "actual"
+    features(configs) --poly expand--> ridge fit, degree & lambda by k-fold CV
+
+Fitted models then predict PPA for *unseen* configs orders of magnitude
+faster than re-running the oracle or a synthesis flow (paper Fig. 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.pe import PEType
+from repro.core.synthesis import SynthesisReport, synthesize
+
+FEATURE_ORDER = (
+    "num_pes", "ifmap_spad", "filter_spad", "psum_spad", "glb_kb",
+    "dram_bw_gbps",
+)
+
+TARGETS = ("power_mw", "area_mm2", "throughput_gmacs")
+
+
+def feature_matrix(configs: Sequence[AcceleratorConfig]) -> np.ndarray:
+    rows = []
+    for c in configs:
+        f = c.features()
+        rows.append([f[k] for k in FEATURE_ORDER])
+    return np.asarray(rows, dtype=np.float64)
+
+
+def poly_expand(x: np.ndarray, degree: int) -> np.ndarray:
+    """Polynomial feature expansion with interactions up to ``degree``."""
+    n, d = x.shape
+    cols = [np.ones(n)]
+    for deg in range(1, degree + 1):
+        for combo in itertools.combinations_with_replacement(range(d), deg):
+            col = np.ones(n)
+            for j in combo:
+                col = col * x[:, j]
+            cols.append(col)
+    return np.stack(cols, axis=1)
+
+
+def _ridge_fit(phi: np.ndarray, y: np.ndarray, lam: float) -> np.ndarray:
+    a = phi.T @ phi + lam * np.eye(phi.shape[1])
+    return np.linalg.solve(a, phi.T @ y)
+
+
+def kfold_indices(n: int, k: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    folds = np.array_split(perm, k)
+    for i in range(k):
+        val = folds[i]
+        train = np.concatenate([folds[j] for j in range(k) if j != i])
+        yield train, val
+
+
+@dataclasses.dataclass
+class PolyModel:
+    """One fitted polynomial model (one PE type x one target)."""
+
+    degree: int
+    lam: float
+    mean: np.ndarray
+    std: np.ndarray
+    coef: np.ndarray
+    log_target: bool
+    cv_rmse: float
+
+    def predict(self, configs: Sequence[AcceleratorConfig]) -> np.ndarray:
+        x = (feature_matrix(configs) - self.mean) / self.std
+        phi = poly_expand(x, self.degree)
+        y = phi @ self.coef
+        return np.exp(y) if self.log_target else y
+
+
+def fit_poly_model(
+    configs: Sequence[AcceleratorConfig],
+    y: np.ndarray,
+    degrees: Sequence[int] = (1, 2, 3),
+    lams: Sequence[float] = (1e-6, 1e-4, 1e-2),
+    k: int = 5,
+    log_target: bool = True,
+    seed: int = 0,
+) -> PolyModel:
+    """Model selection over (degree, lambda) by k-fold CV (paper Sec. 3.3)."""
+    x_raw = feature_matrix(configs)
+    mean = x_raw.mean(0)
+    std = x_raw.std(0) + 1e-12
+    x = (x_raw - mean) / std
+    t = np.log(np.maximum(y, 1e-12)) if log_target else y
+
+    best = None
+    for degree in degrees:
+        phi_full = poly_expand(x, degree)
+        for lam in lams:
+            errs = []
+            for tr, va in kfold_indices(len(x), k, seed):
+                coef = _ridge_fit(phi_full[tr], t[tr], lam)
+                pred = phi_full[va] @ coef
+                errs.append(np.mean((pred - t[va]) ** 2))
+            rmse = float(np.sqrt(np.mean(errs)))
+            if best is None or rmse < best[0]:
+                best = (rmse, degree, lam)
+    rmse, degree, lam = best
+    phi = poly_expand(x, degree)
+    coef = _ridge_fit(phi, t, lam)
+    return PolyModel(degree=degree, lam=lam, mean=mean, std=std, coef=coef,
+                     log_target=log_target, cv_rmse=rmse)
+
+
+@dataclasses.dataclass
+class PPAModelSuite:
+    """Per-PE-type polynomial models for power, area, and performance."""
+
+    models: dict[PEType, dict[str, PolyModel]]
+
+    def predict(self, cfg: AcceleratorConfig) -> dict[str, float]:
+        ms = self.models[cfg.pe_type]
+        return {t: float(ms[t].predict([cfg])[0]) for t in TARGETS}
+
+
+def fit_ppa_suite(
+    configs_by_type: dict[PEType, Sequence[AcceleratorConfig]],
+    oracle: Callable[[AcceleratorConfig], SynthesisReport] = synthesize,
+    **fit_kwargs,
+) -> tuple[PPAModelSuite, dict]:
+    """Fit the full suite and return (suite, accuracy stats per model)."""
+    suite: dict[PEType, dict[str, PolyModel]] = {}
+    stats: dict[str, dict[str, float]] = {}
+    for pe_type, configs in configs_by_type.items():
+        reports = [oracle(c) for c in configs]
+        actual = {t: np.array([getattr(r, t) for r in reports])
+                  for t in TARGETS}
+        suite[pe_type] = {}
+        for target in TARGETS:
+            m = fit_poly_model(configs, actual[target], **fit_kwargs)
+            suite[pe_type][target] = m
+            pred = m.predict(configs)
+            resid = pred - actual[target]
+            ss_res = float(np.sum(resid ** 2))
+            ss_tot = float(np.sum((actual[target]
+                                   - actual[target].mean()) ** 2))
+            stats[f"{pe_type.value}/{target}"] = {
+                "r2": 1.0 - ss_res / max(ss_tot, 1e-12),
+                "mape": float(np.mean(np.abs(resid) /
+                                      np.maximum(actual[target], 1e-12))),
+                "degree": m.degree, "lam": m.lam, "cv_rmse": m.cv_rmse,
+                "n": len(configs),
+            }
+    return PPAModelSuite(models=suite), stats

@@ -1,0 +1,89 @@
+"""Analytical synthesis oracle — stands in for Synopsys DC + VCS @ FreePDK45.
+
+The paper obtains "actual" power / area / timing from a commercial synthesis
+flow and then fits polynomial models to them.  That flow is unavailable here,
+so this module produces the ground-truth side from gate-level analytical
+models (constants in :mod:`repro.core.pe`), with a small deterministic,
+config-dependent "process" perturbation so the regression fit in
+:mod:`repro.core.ppa_model` is a genuine estimation problem rather than an
+identity.  DESIGN.md §2 records this substitution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.pe import (rf_access_energy_pj, sram_access_energy_pj,
+                           sram_area_um2)
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthesisReport:
+    """What the synthesis + simulation flow reports for one design."""
+
+    area_mm2: float            # post-synthesis cell area
+    power_mw: float            # dynamic + leakage at nominal activity
+    clock_ghz: float           # achieved clock after timing closure
+    throughput_gmacs: float    # peak effective GMAC/s at that clock
+
+    def as_dict(self) -> dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def _jitter(cfg: AcceleratorConfig, salt: str, scale: float) -> float:
+    """Deterministic multiplicative perturbation in [1-scale, 1+scale].
+
+    Emulates synthesis noise (placement, wire load, timing closure slack)
+    in a reproducible way: hash of the config name + salt.
+    """
+    h = hashlib.sha256((cfg.name() + salt).encode()).digest()
+    u = int.from_bytes(h[:8], "little") / float(1 << 64)   # [0,1)
+    return 1.0 + scale * (2.0 * u - 1.0)
+
+
+def synthesize(cfg: AcceleratorConfig) -> SynthesisReport:
+    """Run the analytical 'synthesis flow' for one design point."""
+    s = cfg.spec
+    n = cfg.num_pes
+
+    # ---- area ------------------------------------------------------------
+    spad_bits = s.scratchpad_bits(cfg.ifmap_spad, cfg.filter_spad,
+                                  cfg.psum_spad)
+    pe_area = s.mac_area_um2 + sram_area_um2(spad_bits)
+    glb_area = sram_area_um2(cfg.glb_bits)
+    # NoC + control overhead grows slightly super-linearly with array size
+    noc_area = 120.0 * n * (1.0 + 0.004 * math.sqrt(n))
+    area_um2 = (n * pe_area + glb_area + noc_area) * _jitter(cfg, "area", 0.03)
+    area_mm2 = area_um2 / 1e6
+
+    # ---- timing ----------------------------------------------------------
+    # Wire delay degrades the achievable clock for very large arrays.
+    wire_penalty = 1.0 + 0.002 * math.sqrt(n)
+    clock_ghz = (s.max_clock_ghz / wire_penalty) * _jitter(cfg, "clk", 0.02)
+    if cfg.clock_ghz is not None:
+        clock_ghz = min(clock_ghz, cfg.clock_ghz)
+
+    # ---- power at nominal activity (70% MAC utilization) ------------------
+    util = 0.70
+    mac_pw = n * util * s.mac_energy_pj * clock_ghz * 1e9 * 1e-12      # mW
+    # each MAC: ifmap read + weight read + ~1 psum spad access
+    e_spad = rf_access_energy_pj(spad_bits)
+    spad_pw = n * util * 3.0 * e_spad * clock_ghz * 1e9 * 1e-12
+    # GLB serves ~1 access per 8 MACs across the array (row-stationary reuse)
+    e_glb = sram_access_energy_pj(cfg.glb_bits)
+    glb_pw = n * util * (1.0 / 8.0) * e_glb * clock_ghz * 1e9 * 1e-12
+    from repro.core.pe import _P_PE_LEAK_UW  # static power per PE type
+    leak_mw = n * _P_PE_LEAK_UW[s.pe_type] * 1e-3 \
+        + 0.002 * cfg.glb_kb                      # GLB leakage ~2uW/kB
+    power_mw = (mac_pw + spad_pw + glb_pw + leak_mw) \
+        * _jitter(cfg, "power", 0.04)
+
+    return SynthesisReport(
+        area_mm2=area_mm2,
+        power_mw=power_mw,
+        clock_ghz=clock_ghz,
+        throughput_gmacs=n * clock_ghz,
+    )

@@ -1,0 +1,125 @@
+"""Three-term TPU roofline model over compiled dry-run artifacts.
+
+This is QAPPA's methodology (fast analytical PPA over a parameterized design
+space) re-targeted at the TPU pod scale: instead of synthesizing RTL we
+lower+compile the real program and derive
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / (links * link_bw)
+
+(cost_analysis/HLO text are per-device after SPMD partitioning, so the
+"/chips" of the assignment's formulas is already applied.)
+
+Hardware constants: TPU v5e-class chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hlo_analysis import CompiledStats
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12       # per chip
+    hbm_bw: float = 819e9                 # bytes/s
+    ici_link_bw: float = 50e9             # bytes/s per link
+    ici_links: int = 4                    # 2D torus: 4 links usable
+    hbm_gb: float = 16.0
+    vmem_bytes: int = 128 * 1024 * 1024   # ~128 MiB v5e vector memory
+
+
+V5E = ChipSpec()
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per (arch x shape x mesh) roofline report."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # 6*N*D (dense) / 6*N_active*D (MoE), global
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful.
+
+        Catches remat/redundancy waste.  >1 would mean XLA found algebraic
+        savings; <1 means recompute or non-model compute (optimizer etc.).
+        """
+        total_hlo = self.hlo_flops_per_device * self.chips
+        if total_hlo <= 0:
+            return 0.0
+        return self.model_flops / total_hlo
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of peak at the bound step time (MFU-like)."""
+        if self.step_time_s <= 0:
+            return 0.0
+        achieved = self.model_flops / self.step_time_s
+        peak = self.chips * V5E.peak_bf16_flops
+        return achieved / peak
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def roofline_from_stats(stats: CompiledStats, *, arch: str, shape: str,
+                        mesh: str, chips: int, model_flops: float,
+                        chip: ChipSpec = V5E) -> Roofline:
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        compute_s=stats.flops / chip.peak_bf16_flops,
+        memory_s=stats.bytes_accessed / chip.hbm_bw,
+        collective_s=stats.collectives.total_bytes
+        / (chip.ici_links * chip.ici_link_bw),
+        model_flops=model_flops,
+        hlo_flops_per_device=stats.flops,
+        hlo_bytes_per_device=stats.bytes_accessed,
+        collective_bytes_per_device=stats.collectives.total_bytes,
+    )
+
+
+def dense_model_flops(n_params: float, tokens: float) -> float:
+    """6*N*D training FLOPs (fwd+bwd).  For inference use 2*N*D."""
+    return 6.0 * n_params * tokens
+
+
+def serve_model_flops(n_params_active: float, tokens: float) -> float:
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,122 @@
+"""Flash-attention forward Pallas kernel (tiled online-softmax).
+
+Used for the 32k-prefill shapes: O(s^2) compute with O(s) memory — the
+(sq, sk) logit matrix never materializes in HBM.  Supports causal masking
+and an optional sliding window (gemma3 local layers).
+
+Tiling: grid (b*h, sq/bq, sk/bk); (acc, m, l) online-softmax state lives in
+VMEM scratch persisted across the sequential k-block dimension.  Causal
+blocks strictly above the diagonal are skipped (no MXU work issued).
+VMEM working set per step: bq*d + 2*bk*d + bq*bk floats — with the default
+bq=bk=256, d<=256 that is ~1 MiB, MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, sq: int, sk: int, out_dtype):
+    i = pl.program_id(1)
+    kk = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # global row/col coordinates of this tile (last q row aligns to last k)
+    q_off = i * bq + (sk - sq)
+    k_off = kk * bk
+
+    # causal block skip: the whole k-tile is strictly in the future
+    live = True
+    if causal:
+        live = k_off <= q_off + bq - 1
+    if window is not None:
+        # block entirely outside the window (too far in the past)
+        live = jnp.logical_and(live, k_off + bk - 1 > q_off - window) \
+            if causal else (k_off + bk - 1 > q_off - window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_off + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = k_off + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= ki <= qi
+        if window is not None:
+            mask &= ki > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kk == n_k - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 256,
+                    bk: int = 256, interpret: bool = False) -> jax.Array:
+    """q,k,v: (b, h, s, d) with kv heads pre-broadcast.  Returns (b,h,sq,d).
+
+    sq and sk must be divisible by bq/bk (ops.py pads otherwise).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    scale_ = float(scale) if scale is not None else float(d) ** -0.5
+    bh = b * h
+    qf = q.reshape(bh, sq, d)
+    kf = k.reshape(bh, sk, d)
+    vf = v.reshape(bh, sk, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale_, causal=causal, window=window,
+            bq=bq, bk=bk, sq=sq, sk=sk, out_dtype=q.dtype),
+        grid=(bh, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh_, i, kk: (bh_, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh_, i, kk: (bh_, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh_, i, kk: (bh_, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh_, i, kk: (bh_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

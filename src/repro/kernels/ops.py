@@ -1,0 +1,116 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op handles padding to MXU-aligned block multiples, backend selection
+(``impl="auto"`` uses the Pallas kernel on TPU and the pure-jnp oracle on
+CPU — interpret mode is for validation, not production), and shape
+restoration.  Semantics are defined by :mod:`repro.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import w8a8_matmul as _w8a8
+from repro.kernels import w4a8_matmul as _w4a8
+from repro.kernels import flash_attention as _flash
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), size
+
+
+def w8a8_matmul(x_q, w_q, x_scale, w_scale, *, out_dtype=jnp.float32,
+                impl: str = "auto", bm: int = 128, bn: int = 128,
+                bk: int = 256):
+    """See ref.w8a8_matmul_ref.  x_q (m,k) int8, w_q (k,n) int8."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.w8a8_matmul_ref(x_q, w_q, x_scale, w_scale, out_dtype)
+    interpret = impl == "interpret"
+    m0, k0 = x_q.shape
+    n0 = w_q.shape[1]
+    x_q, _ = _pad_to(x_q, 0, bm)
+    x_q, _ = _pad_to(x_q, 1, bk)
+    w_q, _ = _pad_to(w_q, 0, bk)
+    w_q, _ = _pad_to(w_q, 1, bn)
+    ws = jnp.pad(jnp.asarray(w_scale, jnp.float32).reshape(-1),
+                 (0, w_q.shape[1] - n0), constant_values=1.0)
+    out = _w8a8.w8a8_matmul(x_q, w_q, x_scale, ws, bm=bm, bn=bn, bk=bk,
+                            out_dtype=out_dtype, interpret=interpret)
+    return out[:m0, :n0]
+
+
+def w4a8_matmul(x_q, w_packed, x_scale, w_scale, *, out_dtype=jnp.float32,
+                impl: str = "auto", bm: int = 128, bn: int = 128,
+                bk: int = 256):
+    """See ref.w4a8_matmul_ref.  x_q (m,k) int8, w_packed (k//2,n) int8."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.w4a8_matmul_ref(x_q, w_packed, x_scale, w_scale,
+                                    out_dtype)
+    interpret = impl == "interpret"
+    m0, k0 = x_q.shape
+    n0 = w_packed.shape[1]
+    assert k0 % 2 == 0
+    x_q, _ = _pad_to(x_q, 0, bm)
+    x_q, _ = _pad_to(x_q, 1, bk)
+    w_packed, _ = _pad_to(w_packed, 0, bk // 2)
+    w_packed, _ = _pad_to(w_packed, 1, bn)
+    ws = jnp.pad(jnp.asarray(w_scale, jnp.float32).reshape(-1),
+                 (0, w_packed.shape[1] - n0), constant_values=1.0)
+    out = _w4a8.w4a8_matmul(x_q, w_packed, x_scale, ws, bm=bm, bn=bn,
+                            bk=bk, out_dtype=out_dtype, interpret=interpret)
+    return out[:m0, :n0]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    scale=None, impl: str = "auto", bq: int = 256,
+                    bk: int = 256):
+    """See ref.flash_attention_ref.  q,k,v: (b, h, s, d)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, scale=scale)
+    interpret = impl == "interpret"
+    sq0, sk0 = q.shape[2], k.shape[2]
+    bq_ = min(bq, sq0) if sq0 % min(bq, sq0) == 0 else bq
+    bk_ = min(bk, sk0) if sk0 % min(bk, sk0) == 0 else bk
+    # pad sequence dims; padded k positions are masked out by +q/-k offsets
+    # only when causal; for safety we pad k with zeros and rely on causal /
+    # window masks, so non-causal unpadded use requires divisible shapes.
+    assert sq0 % bq_ == 0 and sk0 % bk_ == 0, (
+        "pad seq lens to block multiples for the pallas path")
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, bq=bq_, bk=bk_,
+                                  interpret=interpret)
+
+
+def w8a8_decode_attention(q, k_q, v_q, k_scale, v_scale, pos, *,
+                          bs: int = 512, impl: str = "auto"):
+    """int8-KV grouped decode attention (see ref.w8a8_decode_attention_ref).
+
+    The Pallas kernel streams int8 K/V blocks and runs both contractions
+    on the MXU in int8 — the serving hot loop of the quantized decode
+    path (§Perf cells A/C)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.w8a8_decode_attention_ref(q, k_q, v_q, k_scale,
+                                              v_scale, pos, bs=bs)
+    from repro.kernels import w8a8_decode as _dec
+    return _dec.w8a8_decode_attention(q, k_q, v_q, k_scale, v_scale, pos,
+                                      bs=bs, interpret=impl == "interpret")
+
+
+# Decode attention (sharded flash-decode building blocks) is pure jnp —
+# it is bandwidth-bound gather work, not MXU work; see kernels/ref.py.
+decode_attention_partial = _ref.decode_attention_partial_ref
+decode_attention_combine = _ref.decode_attention_combine_ref
+decode_attention = _ref.decode_attention_ref

@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics the kernels are tested against (allclose sweeps
+in tests/test_kernels_*.py).  No Pallas, no tiling — just math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import quantizers as qz
+
+
+def w8a8_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """(m,k) int8 x (k,n) int8 -> int32 -> dequant(out = acc*sx*sw)."""
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def w4a8_matmul_ref(x_q: jax.Array, w_packed: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """int8 acts x nibble-packed pow2-int4 weights.
+
+    ``w_packed``: (k//2, n) int8, two 4-bit codes per byte packed along k
+    (see quantizers.pack_int4 applied along d_in).  Decode:
+    value = sign * 2**(exp-7) * w_scale[n].
+    """
+    codes = qz.unpack_int4(w_packed.T).T              # (k, n) 4-bit codes
+    w = qz.pow2_decode(codes, w_scale, jnp.float32)   # (k, n) float
+    x = x_q.astype(jnp.float32) * x_scale
+    return (x @ w).astype(out_dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Reference attention.  q,k,v: (b, h, s, d) — kv heads already
+    broadcast to q heads.  Optional causal mask and sliding window."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (sk - sq)   # align last q with last k
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > (qi - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_partial_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                                 *, scale: float | None = None):
+    """One-token decode attention against a KV shard, returning the partial
+    softmax statistics used by the sharded flash-decode combine:
+
+    q: (b, h, d); k,v: (b, s, h, d)  ->  (out, m, l) with
+    out: (b, h, d) un-normalized partial sum, m: (b, h) row max,
+    l: (b, h) sum of exp(logit - m).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out, m, l
+
+
+def decode_attention_combine_ref(parts):
+    """Merge partial (out, m, l) triples across KV shards (logsumexp)."""
+    outs = jnp.stack([p[0] for p in parts])   # (n, b, h, d)
+    ms = jnp.stack([p[1] for p in parts])     # (n, b, h)
+    ls = jnp.stack([p[2] for p in parts])
+    m_star = jnp.max(ms, axis=0)              # (b, h)
+    alpha = jnp.exp(ms - m_star[None])        # (n, b, h)
+    l_star = jnp.sum(alpha * ls, axis=0)
+    out = jnp.sum(outs * alpha[..., None], axis=0) / l_star[..., None]
+    return out
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         *, scale: float | None = None) -> jax.Array:
+    """Full (unsharded) one-token decode attention oracle."""
+    out, m, l = decode_attention_partial_ref(q, k, v, scale=scale)
+    return (out / l[..., None]).astype(q.dtype)
+
+
+def w8a8_decode_attention_ref(q, k_q, v_q, k_scale, v_scale, pos, *,
+                              bs: int = 512) -> jax.Array:
+    """Oracle for the W8A8 flash-decode kernel (block-wise semantics).
+
+    q: (b, kvh, rep, hd) float; k_q/v_q: (b, S, kvh, hd) int8;
+    k_scale/v_scale: (b, S, kvh) f32.  Matches the kernel's math exactly:
+    q quantized per (row); probs quantized per (row, block) after folding
+    the v-scales; both dots in int8->int32.
+    """
+    b, kvh, rep, hd = q.shape
+    S = k_q.shape[1]
+    scale = float(hd) ** -0.5
+    qf = q.astype(jnp.float32)
+    q_s = jnp.max(jnp.abs(qf), axis=-1, keepdims=True) / 127.0
+    q_qq = jnp.round(qf / jnp.maximum(q_s, 1e-8)).astype(jnp.int8)
+    li = jnp.einsum("bgrd,bsgd->bgrs", q_qq, k_q,
+                    preferred_element_type=jnp.int32)
+    logits = li.astype(jnp.float32) * (q_s * scale) \
+        * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    ki = jnp.arange(S)[None, None, None, :]
+    logits = jnp.where(ki <= pos, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pf = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    # block-wise prob quantization (the kernel's online form)
+    pb = pf.reshape(b, kvh, rep, S // bs, bs)
+    p_s = jnp.max(jnp.abs(pb), axis=-1, keepdims=True) / 127.0
+    p_qq = jnp.round(pb / jnp.maximum(p_s, 1e-12)).astype(jnp.int8)
+    vb = v_q.transpose(0, 2, 1, 3).reshape(b, kvh, S // bs, bs, hd)
+    oi = jnp.einsum("bgrcs,bgcsd->bgrcd", p_qq, vb,
+                    preferred_element_type=jnp.int32)
+    out = jnp.sum(oi.astype(jnp.float32) * p_s, axis=3)   # (b,g,rep,hd)
+    return (out / l[..., 0][..., None]).astype(q.dtype)

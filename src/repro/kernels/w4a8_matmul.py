@@ -1,0 +1,96 @@
+"""W4A8 power-of-two GEMM Pallas kernel — the LightPE-1 analogue on TPU.
+
+int8 activations x nibble-packed 4-bit power-of-two weight codes
+(sign | 3-bit exponent, the LightNN format).  TPU adaptation (DESIGN.md §4):
+the ASIC's shift-only multiplier has no MXU meaning, but the 4-bit storage
+is a 4x HBM->VMEM bandwidth win, so the kernel streams *packed* weights and
+unpacks + decodes them in VMEM right before the MXU contraction:
+
+    HBM:  (k/2, n) int8 packed        <- half the bytes of int8 weights
+    VMEM: unpack -> (k, n) codes -> decode sign*2^(e-7) -> f32 tile
+    MXU:  f32(acts) @ f32(weights) accumulated in f32
+    epilogue: * x_scale * w_scale[n]
+
+The decode is exact (powers of two are exactly representable), so the
+kernel matches ref.w4a8_matmul_ref bit-for-bit in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.quant.quantizers import POW2_EXP_BIAS
+
+
+def _decode_pow2_block(packed: jax.Array) -> jax.Array:
+    """(bk//2, bn) packed int8 -> (bk, bn) f32 decoded weights (unscaled)."""
+    p = packed.astype(jnp.uint8)
+    lo = (p & 0xF).astype(jnp.int32)           # codes of even k
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)    # codes of odd k
+    def decode(c):
+        e = (c & 7) - POW2_EXP_BIAS
+        sign = 1.0 - 2.0 * ((c >> 3) & 1).astype(jnp.float32)
+        return sign * jnp.exp2(e.astype(jnp.float32))
+    wlo = decode(lo)                           # (bk//2, bn)
+    whi = decode(hi)
+    # interleave rows: out[2i] = wlo[i], out[2i+1] = whi[i]
+    bk2, bn = wlo.shape
+    return jnp.stack([wlo, whi], axis=1).reshape(2 * bk2, bn)
+
+
+def _w4a8_kernel(x_ref, wp_ref, xs_ref, ws_ref, out_ref, acc_ref, *,
+                 n_k: int, out_dtype):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decode_pow2_block(wp_ref[...])                  # (bk, bn) f32
+    x = x_ref[...].astype(jnp.float32)                   # (bm, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _epilogue():
+        out_ref[...] = (acc_ref[...] * xs_ref[0, 0]
+                        * ws_ref[...]).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret"))
+def w4a8_matmul(x_q: jax.Array, w_packed: jax.Array, x_scale: jax.Array,
+                w_scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                bk: int = 256, out_dtype=jnp.float32,
+                interpret: bool = False) -> jax.Array:
+    """(m,k) int8 @ packed (k//2,n) pow2-int4 with dequant epilogue."""
+    m, k = x_q.shape
+    kp, n = w_packed.shape
+    assert k == 2 * kp, (x_q.shape, w_packed.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % 2 == 0
+    n_k = k // bk
+    x_scale = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
+    w_scale = jnp.broadcast_to(
+        jnp.asarray(w_scale, jnp.float32).reshape(1, n), (1, n))
+
+    return pl.pallas_call(
+        functools.partial(_w4a8_kernel, n_k=n_k, out_dtype=out_dtype),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_q, w_packed, x_scale, w_scale)

@@ -1,0 +1,116 @@
+"""W8A8 flash-decode Pallas kernel — int8-KV grouped-query attention for
+one decode step (the §Perf serving hot loop, LightPE-2 arithmetic).
+
+For each (batch, kv-head) the kernel streams int8 K/V blocks from HBM with
+their per-(position, head) scales, runs both contractions in int8 on the
+MXU (QK^T with the query pre-quantized; PV with the block's probabilities
+quantized per row after folding in the v-scales), and maintains online-
+softmax state in VMEM.  HBM traffic per step ~= S * hd bytes per K and V
+(int8) + S * 4 * 2 scale bytes — half the bf16 cache read, with int8 MACs.
+
+Grid: (b * kvh, S / bs); scratch: acc (rep, hd) f32, m/l (rep, 1) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, out_ref,
+            acc_ref, m_ref, l_ref, *, bs: int, scale: float, rep: int,
+            hd: int, out_dtype):
+    j = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+    pos = pos_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- quantize q once per block (cheap: (rep, hd)) --------------------
+    q = q_ref[0].astype(jnp.float32)                       # (rep, hd)
+    q_s = jnp.max(jnp.abs(q), axis=-1, keepdims=True) / 127.0
+    q_q = jnp.round(q / jnp.maximum(q_s, 1e-8)).astype(jnp.int8)
+
+    # ---- int8 QK^T ------------------------------------------------------
+    k = k_ref[0]                                           # (bs, hd) int8
+    li = jax.lax.dot_general(q_q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    ks = ks_ref[0].reshape(1, bs)                          # (1, bs) f32
+    logits = li.astype(jnp.float32) * (q_s * scale) * ks   # (rep, bs)
+    ki = j * bs + jax.lax.broadcasted_iota(jnp.int32, (rep, bs), 1)
+    logits = jnp.where(ki <= pos, logits, NEG_INF)
+
+    # ---- online softmax ---------------------------------------------------
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)                            # (rep, bs)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    # ---- int8 PV: fold v-scales into probs, quantize per row -------------
+    vs = vs_ref[0].reshape(1, bs)                          # (1, bs)
+    pf = p * vs
+    p_s = jnp.max(jnp.abs(pf), axis=-1, keepdims=True) / 127.0
+    p_q = jnp.round(pf / jnp.maximum(p_s, 1e-12)).astype(jnp.int8)
+    v = v_ref[0]                                           # (bs, hd) int8
+    oi = jax.lax.dot_general(p_q, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    acc_ref[...] = acc_ref[...] * alpha + oi.astype(jnp.float32) * p_s
+
+    @pl.when(j == n_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def w8a8_decode_attention(q, k_q, v_q, k_scale, v_scale, pos, *,
+                          bs: int = 512, interpret: bool = False):
+    """q: (b, kvh, rep, hd) float; k_q/v_q: (b, S, kvh, hd) int8;
+    k_scale/v_scale: (b, S, kvh) f32; pos: () int32.
+    Returns (b, kvh, rep, hd) in q.dtype."""
+    b, kvh, rep, hd = q.shape
+    S = k_q.shape[1]
+    assert S % bs == 0, (S, bs)
+    scale = float(hd) ** -0.5
+    bh = b * kvh
+    qf = q.reshape(bh, rep, hd)
+    kf = k_q.transpose(0, 2, 1, 3).reshape(bh, S, hd)
+    vf = v_q.transpose(0, 2, 1, 3).reshape(bh, S, hd)
+    ksf = k_scale.transpose(0, 2, 1).reshape(bh, S)
+    vsf = v_scale.transpose(0, 2, 1).reshape(bh, S)
+    posv = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale, rep=rep, hd=hd,
+                          out_dtype=q.dtype),
+        grid=(bh, S // bs),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # pos
+            pl.BlockSpec((1, rep, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bs, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, rep, hd), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(posv, qf, kf, vf, ksf, vsf)
+    return out.reshape(b, kvh, rep, hd)

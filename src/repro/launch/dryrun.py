@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer state /
+     caches / batch (never allocating),
+  2. jits the step with in/out shardings from the logical rules,
+  3. ``.lower().compile()`` on the production mesh (16x16 single-pod and
+     2x16x16 multi-pod),
+  4. records memory_analysis / cost_analysis / parsed collective bytes and
+     the three-term TPU roofline into experiments/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.core.hlo_analysis import analyze_compiled
+from repro.core.tpu_roofline import roofline_from_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.models import ssm as ssm_mod
+from repro.optim import adamw
+from repro.parallel.sharding import (activation_sharding, data_axes,
+                                     default_activation_rules, param_pspec,
+                                     tree_pspecs)
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _fit(shape, spec, mesh):
+    """Drop spec axes whose dim is not divisible by the mesh axis size."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def ax_size(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= sizes.get(a, 1)
+            return n
+        return sizes.get(ax, 1)
+
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        out.append(ax if ax is not None and dim % ax_size(ax) == 0 else None)
+    return P(*out)
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: long_500k needs sub-quadratic "
+                "attention (DESIGN.md §8)")
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs (weak-type-correct,
+    shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = {}
+    if shape.kind == "train":
+        specs["batch"] = {"tokens": tok,
+                          "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs["batch"] = {"tokens": tok}
+    else:  # decode
+        specs["batch"] = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                          "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family in ("vlm", "audio") and shape.kind != "decode":
+        specs["batch"]["ctx"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_ctx_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _axis_prod(mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def batch_pspecs(cfg, shape, mesh, batch):
+    db = data_axes(mesh)
+    b = shape.global_batch
+    if b % _axis_prod(mesh) != 0:
+        db = ("data",) if b % dict(zip(
+            mesh.axis_names, mesh.devices.shape)).get("data", 1) == 0 \
+            else None
+    out = {}
+    for k, v in batch.items():
+        if k == "pos":
+            out[k] = P()
+        elif k == "ctx":
+            out[k] = _fit(v.shape, (db, None, None), mesh)
+        else:
+            out[k] = _fit(v.shape, (db, "model" if shape.kind == "train"
+                                    else None), mesh)
+    return out
+
+
+def cache_pspecs(cfg, shape, mesh, caches, *, kv_seq_shard=False):
+    """KV caches: batch->data normally; seq->data for batch=1 long ctx;
+    ``kv_seq_shard`` additionally shards the cache sequence dim over the
+    "model" axis (sharded flash-decode; §Perf)."""
+    b = shape.global_batch
+    batch1 = b < _axis_prod(mesh) and b == 1
+    db = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    out = {}
+    for k, v in caches.items():
+        if k in ("k", "v", "shared_k", "shared_v", "ctx_k", "ctx_v"):
+            if batch1:
+                spec = (None, None, "data", None, None)
+            elif kv_seq_shard:
+                spec = (None, db, "model", None, None)
+            else:
+                spec = (None, db, None, None, None)
+        elif k in ("k_local", "v_local"):   # ring buffers: batch only
+            spec = (None, db, None, None, None) if not batch1 \
+                else (None, None, None, None, None)
+        elif k in ("k_local_scale", "v_local_scale"):
+            spec = (None, db, None, None) if not batch1 \
+                else (None, None, None, None)
+        elif k in ("k_scale", "v_scale"):
+            if batch1:
+                spec = (None, None, "data", None)
+            elif kv_seq_shard:
+                spec = (None, db, "model", None)
+            else:
+                spec = (None, db, None, None)
+        elif k == "state":
+            spec = (None, None, "model", None, None) if batch1 \
+                else (None, "data", "model", None, None)
+        elif k == "conv":
+            spec = (None, None, None, None) if batch1 \
+                else (None, "data", None, None)
+        else:
+            spec = ()
+        out[k] = _fit(v.shape, spec, mesh)
+    return out
+
+
+def _bf16_view(params):
+    """Cast big f32 projection leaves to bf16 (FSDP gathers + compute in
+    bf16; optimizer master stays f32 — §Perf iteration)."""
+    def cast(p):
+        if hasattr(p, "dtype") and p.dtype == jnp.float32 \
+                and p.ndim >= 2 and p.size >= (1 << 17):
+            return p.astype(jnp.bfloat16)
+        return p
+    return jax.tree.map(cast, params)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, serve_quant=False,
+               kv_quant=False, kv_seq_shard=False, bf16_params=False,
+               weight_only_qat=False, mode=None, microbatch: int = 1):
+    """Returns (jitted_fn, arg ShapeDtypeStructs, model_flops)."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if mode:   # override the exec mode (PE-type analogue), e.g. w4a8_pow2
+        cfg = _dc.replace(cfg, quant=mode)
+    if os.environ.get("SSM_CHUNK"):
+        cfg = _dc.replace(cfg, ssm_chunk=int(os.environ["SSM_CHUNK"]))
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    if weight_only_qat:
+        model.policy = _dc.replace(model.policy, qat_acts=False)
+    pshapes = model.param_shapes()
+    if serve_quant and shape.kind != "train":
+        pshapes = jax.eval_shape(model.quantize_params, pshapes)
+    pspecs = tree_pspecs(pshapes, mesh)
+    pshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs)
+    specs = input_specs(cfg, shape, mesh)
+    bspecs = batch_pspecs(cfg, shape, mesh, specs["batch"])
+    bshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), bspecs)
+    rules = default_activation_rules(
+        mesh, seq_sharded=(shape.kind == "train"),
+        batch_1=shape.global_batch == 1)
+    tokens_total = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw.init, pshapes)
+        ocfg = adamw.AdamWConfig()
+
+        def train_step(params, opt, batch):
+            def loss_fn(p, b):
+                p = _bf16_view(p) if bf16_params else p
+                with activation_sharding(mesh, rules):
+                    return model.loss(p, b)
+
+            if microbatch > 1:
+                # gradient accumulation: scan over micro-slices so live
+                # activations shrink by the microbatch factor (HBM fit
+                # for the 95/100-layer train cells)
+                def split(x):
+                    return x.reshape(microbatch, x.shape[0] // microbatch,
+                                     *x.shape[1:])
+                mbatch = jax.tree.map(split, batch)
+
+                def acc_step(carry, mb):
+                    gsum, lsum = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    return (gsum, lsum + l), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(
+                    acc_step, (g0, jnp.zeros(())), mbatch)
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+                loss = loss / microbatch
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt, metrics = adamw.update(ocfg, grads, opt, params)
+            return params, opt, loss
+
+        oshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                              tree_pspecs(opt_shapes, mesh))
+        fn = jax.jit(train_step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard,
+                                    NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        args = (pshapes, opt_shapes, specs["batch"])
+        model_flops = 6.0 * cfg.n_active_params() * shape.global_batch \
+            * shape.seq_len
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with activation_sharding(mesh, rules):
+                logits, _ = model.forward(params, batch["tokens"],
+                                          ctx=batch.get("ctx"),
+                                          train=False, last_only=True)
+            return logits
+
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard),
+                     out_shardings=NamedSharding(mesh, P()))
+        args = (pshapes, specs["batch"])
+        model_flops = 2.0 * cfg.n_active_params() * tokens_total
+    else:  # decode
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     dtype=jnp.bfloat16,
+                                     kv_quant=kv_quant))
+        cspecs = cache_pspecs(cfg, shape, mesh, cache_shapes,
+                              kv_seq_shard=kv_seq_shard)
+        cshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), cspecs)
+
+        def serve_step(params, caches, batch):
+            with activation_sharding(mesh, rules):
+                logits, caches = model.decode_step(
+                    params, caches, batch["tokens"], batch["pos"])
+            return logits, caches
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(pshard, cshard, bshard),
+                     out_shardings=(NamedSharding(mesh, P()), cshard),
+                     donate_argnums=(1,))
+        args = (pshapes, cache_shapes, specs["batch"])
+        model_flops = 2.0 * cfg.n_active_params() * shape.global_batch
+    return fn, args, model_flops
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             serve_quant: bool = False, kv_quant: bool = False,
+             kv_seq_shard: bool = False, bf16_params: bool = False,
+             weight_only_qat: bool = False, mode: str | None = None,
+             microbatch: int = 1,
+             variant: str = "", out_dir: str = OUT_DIR) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    reason = skip_reason(cfg, shape)
+    suffix = "".join([
+        "__quant" if serve_quant else "",
+        "__kvq" if kv_quant else "",
+        "__kvshard" if kv_seq_shard else "",
+        "__bf16p" if bf16_params else "",
+        "__woqat" if weight_only_qat else "",
+        f"__{mode}" if mode else "",
+        f"__mb{microbatch}" if microbatch > 1 else "",
+        f"__{variant}" if variant else "",
+    ])
+    tag = f"{arch}__{shape_name}__{mesh_name}{suffix}"
+    if reason:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+        _dump(out_dir, tag, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args, model_flops = build_cell(
+                arch, shape_name, mesh, serve_quant=serve_quant,
+                kv_quant=kv_quant, kv_seq_shard=kv_seq_shard,
+                bf16_params=bf16_params, weight_only_qat=weight_only_qat,
+                mode=mode, microbatch=microbatch)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            stats = analyze_compiled(compiled)
+        roof = roofline_from_stats(
+            stats, arch=arch, shape=shape_name, mesh=mesh_name,
+            chips=mesh.devices.size, model_flops=model_flops)
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "ok", "quant": serve_quant, "variant": suffix,
+               "compile_s": round(time.time() - t0, 1),
+               "memory_analysis": {
+                   "argument_bytes": mem.argument_size_in_bytes,
+                   "output_bytes": mem.output_size_in_bytes,
+                   "temp_bytes": mem.temp_size_in_bytes,
+                   "alias_bytes": mem.alias_size_in_bytes,
+                   "code_bytes": mem.generated_code_size_in_bytes,
+               },
+               "stats": stats.as_dict(),
+               "roofline": roof.as_dict()}
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    _dump(out_dir, tag, rec)
+    return rec
+
+
+def _dump(out_dir, tag, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", action="store_true",
+                    help="serve with quantized weights (decode/prefill)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache with per-(pos,head) scales")
+    ap.add_argument("--kv-seq-shard", action="store_true",
+                    help="shard decode KV cache seq dim over 'model'")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="bf16 param view inside loss (f32 master)")
+    ap.add_argument("--weight-only-qat", action="store_true",
+                    help="QAT on weights only (no act fake-quant)")
+    ap.add_argument("--mode", default=None,
+                    help="override exec mode: fp32|bf16|w8a8|w4a8_pow2")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches (train)")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               serve_quant=args.quant,
+                               kv_quant=args.kv_quant,
+                               kv_seq_shard=args.kv_seq_shard,
+                               bf16_params=args.bf16_params,
+                               weight_only_qat=args.weight_only_qat,
+                               mode=args.mode, microbatch=args.microbatch,
+                               out_dir=args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" frac={r['roofline_fraction']:.3f}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{rec['mesh']}] {arch} x {shape}: {status}{extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

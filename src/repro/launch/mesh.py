@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Functions (not module constants) so importing never touches jax device
+state.  The dry-run sets XLA_FLAGS for 512 host devices *before* any jax
+import; everything else sees the real device count.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """A mesh over whatever devices exist (CPU tests: usually 1)."""
+    n = jax.device_count()
+    model = max(1, min(model, n))
+    while n % model != 0:
+        model -= 1
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,336 @@
+"""GQA / sliding-window / cross attention with KV caches.
+
+Three execution paths, one semantic (kernels/ref.py oracles):
+
+* dense masked attention for short sequences (train_4k smoke scale);
+* chunked online-softmax attention (pure JAX lax.scan, O(s) memory) for
+  long sequences — this is what the 32k-prefill dry-runs lower;
+* the Pallas flash kernel on TPU (ops.flash_attention, impl="pallas").
+
+Decode uses partial-softmax math (kernels/ref.decode_*) so a KV cache
+sharded along the sequence axis combines exactly (sharded flash-decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rope
+from repro.parallel.sharding import shard
+from repro.quant.qlinear import qdot
+
+DENSE_SEQ_LIMIT = 2048   # above this, use the chunked path
+NEG_INF = -1e30
+
+
+def _broadcast_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(b, s, kvh, hd) -> (b, s, H, hd) by repeating each kv head."""
+    b, s, kvh, hd = k.shape
+    rep = n_heads // kvh
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask(qi, ki, causal, window):
+    m = jnp.ones(jnp.broadcast_shapes(qi.shape, ki.shape), dtype=bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """q: (b,sq,H,hd); k,v: (b,sk,H,hd).  window may be a traced scalar."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = (jnp.arange(sq) + q_offset + (sk - sq))[:, None]
+    ki = jnp.arange(sk)[None, :]
+    logits = jnp.where(_mask(qi, ki, causal, window)[None, None],
+                       logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _block_size(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target; if only degenerate divisors
+    exist (e.g. prime n), fall back to one block of n."""
+    if n <= target:
+        return n
+    for b in range(target, max(15, target // 8), -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None,
+                      bq: int = 512, bk: int = 512,
+                      causal_skip: bool = True, group: int = 4):
+    """Memory-efficient attention: q blocks x online-softmax scans over
+    kv blocks, O(bq*bk) live logits.
+
+    ``causal_skip``: q blocks are grouped (``group`` per group) into a
+    Python loop so each group's kv scan stops at its *static* causal
+    bound — strictly-future kv blocks are never computed (≈2× flops/bytes
+    at 32k prefill; EXPERIMENTS.md §Perf cell D).  HLO grows O(nq/group)
+    scan bodies.  Falls back to the uniform full scan when non-causal.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    bq = _block_size(sq, bq)
+    bk = _block_size(sk, bk)
+    scale = hd ** -0.5
+    nq, nk = sq // bq, sk // bk
+    qb = q.reshape(b, nq, bq, h, hd).astype(jnp.float32)
+    kb = k.reshape(b, nk, bk, h, hd).astype(jnp.float32)
+    vb = v.reshape(b, nk, bk, h, hd).astype(jnp.float32)
+
+    def q_block(i, qtile, n_kv):  # qtile: (b, tile_q, h, hd)
+        tile_q = qtile.shape[1]
+        q_off = i * bq + (sk - sq)
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            kt = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+            vt = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qtile, kt) * scale
+            qi = (q_off + jnp.arange(tile_q))[:, None]
+            ki = (j * bk + jnp.arange(bk))[None, :]
+            s = jnp.where(_mask(qi, ki, causal, window)[None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vt)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, h, tile_q, hd), jnp.float32)
+        m0 = jnp.full((b, h, tile_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, tile_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(n_kv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)   # (b, tile_q, h, hd)
+
+    if causal and causal_skip and nq > 1:
+        outs = []
+        for g0 in range(0, nq, group):
+            g1 = min(nq, g0 + group)
+            # static causal bound for the whole group (last row of g1-1)
+            hi = min(nk, ((g1 - 1) * bq + (sk - sq) + bq - 1) // bk + 1)
+            tile = qb[:, g0:g1].reshape(b, (g1 - g0) * bq, h, hd)
+            outs.append(q_block(g0, tile, max(1, hi)))
+        out = jnp.concatenate(outs, axis=1)
+        return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: q_block(*args[:2], nk),
+                      (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, window=None, q_offset=0):
+    sq, sk = q.shape[1], k.shape[1]
+    if max(sq, sk) <= DENSE_SEQ_LIMIT:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention layer (projections + rope + attend / decode)
+# ---------------------------------------------------------------------------
+
+def self_attention(x, p, cfg, *, policy, train, window=None, positions=None):
+    """Full-sequence self-attention.  x: (b, s, d)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = qdot(x, p["wq"], policy, train=train).reshape(b, s, h, hd)
+    k = qdot(x, p["wk"], policy, train=train).reshape(b, s, kvh, hd)
+    v = qdot(x, p["wv"], policy, train=train).reshape(b, s, kvh, hd)
+    q = shard(q, "attn_qkv")
+    if positions is None:
+        positions = jnp.arange(s)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = attend(q, _broadcast_kv(k, h), _broadcast_kv(v, h),
+                 causal=True, window=window)
+    out = out.reshape(b, s, h * hd)
+    return qdot(out, p["wo"], policy, train=train), (k, v)
+
+
+def decode_self_attention(x, p, cfg, cache_k, cache_v, pos, *,
+                          policy, train=False, window=None,
+                          static_window: int | None = None,
+                          kv_scales=None):
+    """One-token decode.  x: (b, 1, d); cache_k/v: (b, S, kvh, hd); pos:
+    scalar current position.  Returns (out, new_k, new_v[, new_scales]).
+
+    Optimized paths (EXPERIMENTS.md §Perf):
+      * grouped-query attention without materializing the kv->q-head
+        broadcast: q reshaped to (b, kvh, rep, hd), dots carry the group
+        dim — the cache is read once, in its storage dtype;
+      * ``static_window``: local layers (gemma3) slice only the last
+        ``window`` cache positions (dynamic_slice, static size) instead of
+        scanning the whole sequence;
+      * ``kv_scales`` (int8 KV): W8A8 attention — K/V stored int8 with
+        per-(position, head) scales; k-scales apply on the logits' output
+        dim, v-scales fold into the probabilities before the PV dot
+        (QAPPA's LightPE-2 arithmetic on the KV path).
+    """
+    b, _, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // kvh
+    S = cache_k.shape[1]
+    ring = static_window is not None and S == static_window
+    per_slot = getattr(pos, "ndim", 0) == 1           # (b,) positions
+    pos_b = pos if per_slot else jnp.full((b,), pos)  # continuous batching
+    q = qdot(x, p["wq"], policy, train=train).reshape(b, 1, h, hd)
+    k = qdot(x, p["wk"], policy, train=train).reshape(b, 1, kvh, hd)
+    v = qdot(x, p["wv"], policy, train=train).reshape(b, 1, kvh, hd)
+    posv = pos_b[:, None] if per_slot else jnp.full((1,), pos)
+    q = rope(q, posv, cfg.rope_theta)[:, 0]           # (b, h, hd)
+    k = rope(k, posv, cfg.rope_theta)
+    wpos = jnp.remainder(pos, S) if ring else pos     # ring-buffer write
+    wpos_b = jnp.remainder(pos_b, S) if ring else pos_b
+
+    def _write(cache, val):
+        if per_slot:   # per-slot scatter write (iteration-level batching)
+            return cache.at[jnp.arange(b), wpos_b].set(
+                val[:, 0].astype(cache.dtype))
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, val.astype(cache.dtype), wpos, 1)
+
+    new_scales = None
+    if kv_scales is not None:   # int8 KV cache write
+        from repro.quant import quantizers as qz
+        ks_all, vs_all = kv_scales                    # (b, S, kvh) f32
+        k_s = (jnp.max(jnp.abs(k), axis=-1) / 127.0).astype(jnp.float32)
+        v_s = (jnp.max(jnp.abs(v), axis=-1) / 127.0).astype(jnp.float32)
+        k_q = jnp.round(k / jnp.maximum(k_s, 1e-8)[..., None]) \
+            .astype(jnp.int8)
+        v_q = jnp.round(v / jnp.maximum(v_s, 1e-8)[..., None]) \
+            .astype(jnp.int8)
+        new_k = _write(cache_k, k_q)
+        new_v = _write(cache_v, v_q)
+        nks = _write(ks_all, k_s)
+        nvs = _write(vs_all, v_s)
+        new_scales = (nks, nvs)
+    else:
+        new_k = _write(cache_k, k)
+        new_v = _write(cache_v, v)
+
+    # ---- windowed cache read (local layers only touch W positions) ------
+    if ring:
+        # the cache IS the window: slot r holds absolute position
+        # pos - ((pos - r) mod W); stale slots get ki < 0 and mask out
+        W = S
+        kk, vv = new_k, new_v
+        ki = pos_b[:, None] - jnp.remainder(
+            pos_b[:, None] - jnp.arange(W)[None, :], W)        # (b, W)
+        if new_scales is not None:
+            ks_r, vs_r = new_scales
+    elif static_window is not None and static_window < S:
+        W = static_window
+        if per_slot:
+            start = jnp.clip(pos_b - W + 1, 0, S - W)           # (b,)
+            idx = start[:, None] + jnp.arange(W)[None, :]       # (b, W)
+            kk = jnp.take_along_axis(new_k, idx[..., None, None], 1)
+            vv = jnp.take_along_axis(new_v, idx[..., None, None], 1)
+            ki = idx
+            if new_scales is not None:
+                ks_r = jnp.take_along_axis(new_scales[0],
+                                           idx[..., None], 1)
+                vs_r = jnp.take_along_axis(new_scales[1],
+                                           idx[..., None], 1)
+        else:
+            start = jnp.clip(pos - W + 1, 0, S - W)
+            kk = jax.lax.dynamic_slice_in_dim(new_k, start, W, 1)
+            vv = jax.lax.dynamic_slice_in_dim(new_v, start, W, 1)
+            ki = start + jnp.arange(W)
+            if new_scales is not None:
+                ks_r = jax.lax.dynamic_slice_in_dim(new_scales[0],
+                                                    start, W, 1)
+                vs_r = jax.lax.dynamic_slice_in_dim(new_scales[1],
+                                                    start, W, 1)
+    else:
+        kk, vv, ki = new_k, new_v, jnp.arange(S)
+        if new_scales is not None:
+            ks_r, vs_r = new_scales
+
+    # ---- grouped QK^T: (b, kvh, rep, hd) x (b, s, kvh, hd) --------------
+    qg = q.reshape(b, kvh, rep, hd)
+    scale = hd ** -0.5
+    if new_scales is not None:
+        # W8A8 attention: int8 q x int8 K -> int32 on the MXU; k-scales
+        # land on the logits' output (s) dim.
+        q_s = jnp.max(jnp.abs(qg), axis=-1, keepdims=True) / 127.0
+        q_q = jnp.round(qg / jnp.maximum(q_s, 1e-8)).astype(jnp.int8)
+        li = jnp.einsum("bgrd,bsgd->bgrs", q_q, kk,
+                        preferred_element_type=jnp.int32)
+        logits = li.astype(jnp.float32) * (q_s * scale) \
+            * ks_r.transpose(0, 2, 1)[:, :, None, :]
+    else:
+        logits = jnp.einsum("bgrd,bsgd->bgrs", qg, kk,
+                            preferred_element_type=jnp.float32) * scale
+    ki2 = ki if getattr(ki, "ndim", 1) == 2 else \
+        jnp.broadcast_to(ki[None, :], (b, ki.shape[0]))       # (b, W)
+    pb = pos_b[:, None, None, None]
+    valid = (ki2[:, None, None, :] <= pb) \
+        & (ki2[:, None, None, :] >= 0)   # ring: stale slots have ki < 0
+    if window is not None:
+        valid = jnp.logical_and(valid, ki2[:, None, None, :]
+                                > pb - window)
+    logits = jnp.where(valid, logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)              # (b, g, r, s) f32
+
+    if new_scales is not None:
+        # fold v-scales into the probs (s is contracted in PV), quantize
+        # the probs row-wise, int8 x int8 PV dot.
+        pf = pr * vs_r.transpose(0, 2, 1)[:, :, None, :]
+        p_s = jnp.max(jnp.abs(pf), axis=-1, keepdims=True) / 127.0
+        p_q = jnp.round(pf / jnp.maximum(p_s, 1e-12)).astype(jnp.int8)
+        oi = jnp.einsum("bgrs,bsgd->bgrd", p_q, vv,
+                        preferred_element_type=jnp.int32)
+        out = oi.astype(jnp.float32) * p_s
+    else:
+        out = jnp.einsum("bgrs,bsgd->bgrd",
+                         pr.astype(vv.dtype) if vv.dtype != jnp.float32
+                         else pr, vv,
+                         preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    out = qdot(out, p["wo"], policy, train=train)
+    if kv_scales is not None:
+        return out, new_k, new_v, new_scales
+    return out, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder, llama-3.2-vision image layers)
+# ---------------------------------------------------------------------------
+
+def cross_attention(x, ctx_k, ctx_v, p, cfg, *, policy, train):
+    """x: (b, s, d); ctx_k/v: (b, sc, kvh, hd) precomputed from the
+    encoder/image context."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = qdot(x, p["wq_x"], policy, train=train).reshape(b, s, h, hd)
+    out = attend(q, _broadcast_kv(ctx_k, h), _broadcast_kv(ctx_v, h),
+                 causal=False)
+    out = out.reshape(b, s, h * hd)
+    return qdot(out, p["wo_x"], policy, train=train)
+
+
+def context_kv(ctx, p, cfg, *, policy, train):
+    """Project context embeddings to (k, v) once (cached for decode)."""
+    b, sc, d = ctx.shape
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    k = qdot(ctx, p["wk_img"], policy, train=train).reshape(b, sc, kvh, hd)
+    v = qdot(ctx, p["wv_img"], policy, train=train).reshape(b, sc, kvh, hd)
+    return k, v

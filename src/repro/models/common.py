@@ -1,0 +1,78 @@
+"""Shared model components: norms, RoPE, losses, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in f32 (precision-sensitive; stays high precision under
+    every quantization mode — see quant/policy.py)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array,
+         theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (..., s, h, hd); positions: broadcastable (s,)
+    or (b, s)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., s, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., s, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with an optional z-loss regularizer.
+
+    logits: (b, s, V) any float dtype; labels: (b, s) int32.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse ** 2)
+    return loss
+
+
+def gelu_mlp(x, w_in, w_out, policy, train):
+    from repro.quant.qlinear import qdot
+    h = jax.nn.gelu(qdot(x, w_in, policy, train=train))
+    return qdot(h, w_out, policy, train=train)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down, policy, train):
+    from repro.quant.qlinear import qdot
+    from repro.parallel.sharding import shard
+    g = qdot(x, w_gate, policy, train=train)
+    u = qdot(x, w_up, policy, train=train)
+    h = shard(jax.nn.silu(g) * u, "ffn_hidden")
+    return qdot(h, w_down, policy, train=train)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype=jnp.float32, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_tree(key, tree_spec: dict):
+    """Split a PRNG key into a matching pytree of keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))

@@ -1,0 +1,686 @@
+"""Unified quantization-aware LM: all 10 assigned architectures.
+
+One functional ``Model`` facade per ArchConfig:
+
+* ``init(rng)``           -> params pytree (stacked layers, scan-friendly)
+* ``loss(params, batch)``  -> scalar train loss (QAT fake-quant active)
+* ``forward(params, ...)`` -> logits
+* ``init_cache(b)``        -> decode caches (KV / SSM state / conv)
+* ``prefill(params, ...)`` -> (logits, caches) for serving
+* ``decode_step(params, caches, tokens, pos, ...)`` -> (logits, caches)
+
+Layer stacks are ``lax.scan`` over stacked params (HLO size O(1) in depth)
+for the uniform families (dense / moe / ssm / audio / vlm); the zamba2
+hybrid (periodic *shared* attention block) is Python-unrolled because its
+shared-block KV caches index by application count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (cross_entropy, normal_init, rms_norm)
+from repro.parallel.sharding import shard
+from repro.quant.policy import QuantPolicy, policy_for
+from repro.quant.qlinear import qdot
+
+GLOBAL_WINDOW = 1 << 30   # "window" value meaning full attention
+
+
+def _maybe_remat(body, train: bool):
+    """Activation checkpointing at layer boundaries: under the layer scan
+    only the carry survives the forward pass; the body recomputes during
+    backward.  Without this a 95-layer stack stores every intermediate
+    (O(TBs) at the production shapes)."""
+    return jax.checkpoint(body) if train else body
+
+
+# ===========================================================================
+# parameter construction
+# ===========================================================================
+
+def _attn_params(key, cfg, d, scale_out):
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": normal_init(ks[0], (d, h * hd)),
+        "wk": normal_init(ks[1], (d, kvh * hd)),
+        "wv": normal_init(ks[2], (d, kvh * hd)),
+        "wo": normal_init(ks[3], (h * hd, d), scale=scale_out),
+    }
+
+
+def _mlp_params(key, cfg, d):
+    ks = jax.random.split(key, 3)
+    so = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    if cfg.mlp_kind == "swiglu":
+        return {"w_gate": normal_init(ks[0], (d, cfg.d_ff)),
+                "w_up": normal_init(ks[1], (d, cfg.d_ff)),
+                "w_down": normal_init(ks[2], (cfg.d_ff, d), scale=so)}
+    return {"w_up": normal_init(ks[0], (d, cfg.d_ff)),
+            "w_down": normal_init(ks[1], (cfg.d_ff, d), scale=so)}
+
+
+def _moe_params(key, cfg, d):
+    ks = jax.random.split(key, 4)
+    E, ff = cfg.n_experts, cfg.d_ff
+    so = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    return {
+        "router": normal_init(ks[0], (d, E)),
+        "w_experts_gate": normal_init(ks[1], (E, d, ff)),
+        "w_experts_in": normal_init(ks[2], (E, d, ff)),
+        "w_experts_out": normal_init(ks[3], (E, ff, d), scale=so),
+    }
+
+
+def _mamba_params(key, cfg, d):
+    ks = jax.random.split(key, 3)
+    d_inner, h, g, n = ssm_mod.dims(cfg)
+    so = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    return {
+        "in_proj": normal_init(ks[0], (d, ssm_mod.in_proj_dim(cfg))),
+        "conv_w": normal_init(ks[1], (ssm_mod.D_CONV, ssm_mod.conv_dim(cfg)),
+                              scale=0.2),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": normal_init(ks[2], (d_inner, d), scale=so),
+    }
+
+
+def _cross_params(key, cfg, d):
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    so = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    return {
+        "wq_x": normal_init(ks[0], (d, h * hd)),
+        "wk_img": normal_init(ks[1], (d, kvh * hd)),
+        "wv_img": normal_init(ks[2], (d, kvh * hd)),
+        "wo_x": normal_init(ks[3], (h * hd, d), scale=so),
+    }
+
+
+def _stack(fns, key, n):
+    """vmap a param-builder over layer index -> stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fns)(keys)
+
+
+# ===========================================================================
+# blocks
+# ===========================================================================
+
+def _dense_block(x, lp, cfg, policy, train, window=None):
+    h, _ = attn.self_attention(
+        rms_norm(x, lp["ln1"]), lp, cfg, policy=policy, train=train,
+        window=window)
+    x = shard(x + h, "residual")
+    m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, train)
+    return shard(x + m, "residual")
+
+
+def _mlp(xn, lp, cfg, policy, train):
+    if cfg.mlp_kind == "swiglu":
+        from repro.models.common import swiglu_mlp
+        return swiglu_mlp(xn, lp["w_gate"], lp["w_up"], lp["w_down"],
+                          policy, train)
+    from repro.models.common import gelu_mlp
+    return gelu_mlp(xn, lp["w_up"], lp["w_down"], policy, train)
+
+
+def _moe_block(x, lp, cfg, policy, train):
+    h, _ = attn.self_attention(rms_norm(x, lp["ln1"]), lp, cfg,
+                               policy=policy, train=train)
+    x = shard(x + h, "residual")
+    m, aux = moe_mod.moe_ffn_ep(rms_norm(x, lp["ln2"]), lp, cfg,
+                                policy=policy, train=train)
+    return shard(x + m, "residual"), aux
+
+
+def _mamba_layer(x, lp, cfg, policy, train):
+    h = ssm_mod.mamba2_block(rms_norm(x, lp["ln1"]), lp, cfg,
+                             policy=policy, train=train)
+    return shard(x + h, "residual")
+
+
+# ===========================================================================
+# Model facade
+# ===========================================================================
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    def __post_init__(self):
+        self.policy: QuantPolicy = policy_for(self.cfg.quant)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        k_emb, k_layers, k_extra = jax.random.split(rng, 3)
+        params = {"embed": normal_init(k_emb, (cfg.vocab, d)),
+                  "final_norm": jnp.ones((d,), jnp.float32)}
+
+        def layer_fn(key):
+            ks = jax.random.split(key, 3)
+            lp = {"ln1": jnp.ones((d,), jnp.float32),
+                  "ln2": jnp.ones((d,), jnp.float32)}
+            so = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+            if cfg.family in ("dense", "vlm", "audio"):
+                lp.update(_attn_params(ks[0], cfg, d, so))
+                lp.update(_mlp_params(ks[1], cfg, d))
+            elif cfg.family == "moe":
+                lp.update(_attn_params(ks[0], cfg, d, so))
+                lp.update(_moe_params(ks[1], cfg, d))
+            elif cfg.family in ("ssm", "hybrid"):
+                lp.pop("ln2")
+                lp.update(_mamba_params(ks[0], cfg, d))
+            return lp
+
+        params["layers"] = _stack(layer_fn, k_layers, cfg.n_layers)
+
+        ke = jax.random.split(k_extra, 4)
+        if cfg.family == "hybrid":     # zamba2 shared attn+mlp block
+            sp = {"ln1": jnp.ones((d,), jnp.float32),
+                  "ln2": jnp.ones((d,), jnp.float32)}
+            sp.update(_attn_params(ke[0], cfg, d, 0.01))
+            sp.update(_mlp_params(ke[1], cfg, d))
+            params["shared"] = sp
+        if cfg.family == "vlm":        # interleaved cross-attn layers
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            def cross_fn(key):
+                cp = {"ln_x": jnp.ones((d,), jnp.float32)}
+                cp.update(_cross_params(key, cfg, d))
+                return cp
+            params["cross_layers"] = _stack(cross_fn, ke[2], n_cross)
+        if cfg.family == "audio":      # whisper encoder + per-layer cross
+            def enc_fn(key):
+                ks2 = jax.random.split(key, 2)
+                ep = {"ln1": jnp.ones((d,), jnp.float32),
+                      "ln2": jnp.ones((d,), jnp.float32)}
+                ep.update(_attn_params(ks2[0], cfg, d, 0.01))
+                ep.update(_mlp_params(ks2[1], cfg, d))
+                return ep
+            params["encoder_layers"] = _stack(enc_fn, ke[2],
+                                              cfg.encoder_layers)
+            def cross_fn(key):
+                cp = {"ln_x": jnp.ones((d,), jnp.float32)}
+                cp.update(_cross_params(key, cfg, d))
+                return cp
+            params["cross_layers"] = _stack(cross_fn, ke[3], cfg.n_layers)
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ------------------------------------------------------------ per-layer
+    def _windows(self, seq_hint: int) -> jax.Array | None:
+        cfg = self.cfg
+        if not cfg.global_every:
+            return None
+        idx = jnp.arange(cfg.n_layers)
+        is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+        return jnp.where(is_global, GLOBAL_WINDOW, cfg.window)
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params, tokens, *, ctx=None, train=False,
+                last_only=False):
+        """tokens: (b, s) -> logits (b, s, V).  ``ctx``: image/audio
+        embeddings (b, n_ctx, d) for vlm/audio families.  ``last_only``
+        returns logits for the final position only (serving prefill)."""
+        cfg, policy = self.cfg, self.policy
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = shard(x.astype(policy.compute_dtype), "residual")
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "dense":
+            windows = self._windows(tokens.shape[1])
+            def body(carry, xs):
+                lp = xs if windows is None else xs[0]
+                w = None if windows is None else xs[1]
+                return _dense_block(carry, lp, cfg, policy, train,
+                                    window=w), None
+            xs = params["layers"] if windows is None \
+                else (params["layers"], windows)
+            x, _ = jax.lax.scan(_maybe_remat(body, train), x, xs)
+
+        elif cfg.family == "moe":
+            def body(carry, lp):
+                x, aux = carry
+                x, a = _moe_block(x, lp, cfg, policy, train)
+                return (x, aux + a), None
+            (x, aux), _ = jax.lax.scan(_maybe_remat(body, train),
+                                       (x, aux), params["layers"])
+
+        elif cfg.family == "ssm":
+            def body(carry, lp):
+                return _mamba_layer(carry, lp, cfg, policy, train), None
+            x, _ = jax.lax.scan(_maybe_remat(body, train), x,
+                                params["layers"])
+
+        elif cfg.family == "hybrid":
+            x = self._hybrid_forward(params, x, train)
+
+        elif cfg.family == "vlm":
+            x = self._vlm_forward(params, x, ctx, train)
+
+        elif cfg.family == "audio":
+            x = self._audio_forward(params, x, ctx, train)
+
+        if last_only:
+            x = x[:, -1:]
+        x = rms_norm(x, params["final_norm"])
+        logits = qdot(x, params["embed"].T, policy, train=train)
+        return shard(logits, "logits") if not last_only else logits, aux
+
+    # hybrid: python-unrolled mamba stack + shared attn block every k
+    def _hybrid_forward(self, params, x, train):
+        cfg, policy = self.cfg, self.policy
+        every = cfg.shared_attn_every
+        mamba = _maybe_remat(
+            lambda x, lp: _mamba_layer(x, lp, cfg, policy, train), train)
+        shared = _maybe_remat(
+            lambda x: _dense_block(x, params["shared"], cfg, policy,
+                                   train), train)
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, _l=l: a[_l], params["layers"])
+            x = mamba(x, lp)
+            if every and (l % every) == every - 1:
+                x = shared(x)
+        return x
+
+    # vlm: scan over superblocks of (cross_attn_every-1 self + 1 cross)
+    def _vlm_forward(self, params, x, ctx, train):
+        cfg, policy = self.cfg, self.policy
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        layers = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["layers"])
+        ctx_cache = {}
+
+        def body(carry, xs):
+            x = carry
+            lps, cp = xs
+            for i in range(k - 1):
+                lp = jax.tree.map(lambda a: a[i], lps)
+                x = _dense_block(x, lp, cfg, policy, train)
+            # the k-th layer: self block + cross-attn injection
+            lp = jax.tree.map(lambda a: a[k - 1], lps)
+            x = _dense_block(x, lp, cfg, policy, train)
+            ck, cv = attn.context_kv(ctx, cp, cfg, policy=policy,
+                                     train=train)
+            h = attn.cross_attention(rms_norm(x, cp["ln_x"]), ck, cv, cp,
+                                     cfg, policy=policy, train=train)
+            return shard(x + h, "residual"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, train), x,
+                            (layers, params["cross_layers"]))
+        return x
+
+    # audio: whisper encoder (bidir) then decoder w/ per-layer cross-attn
+    def _audio_forward(self, params, x, ctx, train):
+        cfg, policy = self.cfg, self.policy
+        enc = self._encode(params, ctx, train)
+
+        def body(carry, xs):
+            x = carry
+            lp, cp = xs
+            h, _ = attn.self_attention(rms_norm(x, lp["ln1"]), lp, cfg,
+                                       policy=policy, train=train)
+            x = shard(x + h, "residual")
+            ck, cv = attn.context_kv(enc, cp, cfg, policy=policy,
+                                     train=train)
+            h = attn.cross_attention(rms_norm(x, cp["ln_x"]), ck, cv, cp,
+                                     cfg, policy=policy, train=train)
+            x = shard(x + h, "residual")
+            m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, train)
+            return shard(x + m, "residual"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, train), x,
+                            (params["layers"], params["cross_layers"]))
+        return x
+
+    def _encode(self, params, frames, train):
+        cfg, policy = self.cfg, self.policy
+        x = shard(frames.astype(policy.compute_dtype), "residual")
+
+        def body(carry, lp):
+            h, _ = attn.self_attention(rms_norm(carry, lp["ln1"]), lp, cfg,
+                                       policy=policy, train=train)
+            x = shard(carry + h, "residual")
+            m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, train)
+            return shard(x + m, "residual"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, train), x,
+                            params["encoder_layers"])
+        return x
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch, *, train=True):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   ctx=batch.get("ctx"), train=train)
+        return cross_entropy(logits, batch["labels"]) + 0.01 * aux
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                   kv_quant: bool = False):
+        """Decode caches.  Shapes only depend on config + (b, S).
+        ``kv_quant``: int8 KV storage with per-(pos, head) scales
+        (LightPE-2 / W8A8 arithmetic on the KV path)."""
+        cfg = self.cfg
+        L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        c = {}
+        if kv_quant and cfg.family in ("dense", "moe"):
+            dtype = jnp.int8
+        elif kv_quant:
+            raise NotImplementedError(
+                "int8 KV is implemented for dense/moe decode")
+        if cfg.family == "dense" and cfg.global_every:
+            # sliding-window layers keep a ring buffer of `window`
+            # positions; only the global layers store the full sequence
+            n_glob = cfg.n_layers // cfg.global_every
+            n_loc = cfg.n_layers - n_glob
+            W = min(cfg.window, max_seq)
+            c["k"] = jnp.zeros((n_glob, batch, max_seq, kvh, hd), dtype)
+            c["v"] = jnp.zeros((n_glob, batch, max_seq, kvh, hd), dtype)
+            c["k_local"] = jnp.zeros((n_loc, batch, W, kvh, hd), dtype)
+            c["v_local"] = jnp.zeros((n_loc, batch, W, kvh, hd), dtype)
+            if kv_quant:
+                c["k_scale"] = jnp.zeros((n_glob, batch, max_seq, kvh),
+                                         jnp.float32)
+                c["v_scale"] = jnp.zeros((n_glob, batch, max_seq, kvh),
+                                         jnp.float32)
+                c["k_local_scale"] = jnp.zeros((n_loc, batch, W, kvh),
+                                               jnp.float32)
+                c["v_local_scale"] = jnp.zeros((n_loc, batch, W, kvh),
+                                               jnp.float32)
+        elif cfg.family in ("dense", "moe", "vlm", "audio"):
+            c["k"] = jnp.zeros((L, batch, max_seq, kvh, hd), dtype)
+            c["v"] = jnp.zeros((L, batch, max_seq, kvh, hd), dtype)
+            if kv_quant:
+                c["k_scale"] = jnp.zeros((L, batch, max_seq, kvh),
+                                         jnp.float32)
+                c["v_scale"] = jnp.zeros((L, batch, max_seq, kvh),
+                                         jnp.float32)
+        if cfg.family in ("ssm", "hybrid"):
+            d_inner, h, g, n = ssm_mod.dims(cfg)
+            c["state"] = jnp.zeros((L, batch, h, ssm_mod.P_HEADDIM, n),
+                                   jnp.float32)
+            c["conv"] = jnp.zeros((L, batch, ssm_mod.D_CONV - 1,
+                                   ssm_mod.conv_dim(cfg)), dtype)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            n_apps = sum(1 for l in range(cfg.n_layers)
+                         if (l % cfg.shared_attn_every)
+                         == cfg.shared_attn_every - 1)
+            c["shared_k"] = jnp.zeros((n_apps, batch, max_seq, kvh, hd),
+                                      dtype)
+            c["shared_v"] = jnp.zeros((n_apps, batch, max_seq, kvh, hd),
+                                      dtype)
+        if cfg.family in ("vlm", "audio"):
+            n_cross = (cfg.n_layers // cfg.cross_attn_every
+                       if cfg.family == "vlm" else cfg.n_layers)
+            c["ctx_k"] = jnp.zeros((n_cross, batch, cfg.n_ctx_tokens, kvh,
+                                    hd), dtype)
+            c["ctx_v"] = jnp.zeros((n_cross, batch, cfg.n_ctx_tokens, kvh,
+                                    hd), dtype)
+        return c
+
+    def decode_step(self, params, caches, tokens, pos, *, window_override=None):
+        """One serving step.  tokens: (b, 1) int32; pos: scalar int32
+        (current write position; past = [0, pos]).  Returns
+        (logits (b, 1, V), new caches)."""
+        cfg, policy = self.cfg, self.policy
+        train = False
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x.astype(policy.compute_dtype)
+
+        kv_quant = "k_scale" in caches
+
+        if cfg.family == "dense" and cfg.global_every:
+            # gemma3: static 5:1 local:global pattern -> python-unrolled so
+            # local layers read only a ``window``-sized cache slice
+            # (EXPERIMENTS.md §Perf, long_500k hillclimb).
+            x, caches = self._windowed_decode(params, caches, x, pos,
+                                              kv_quant)
+        elif cfg.family in ("dense", "moe"):
+            def body(carry, xs):
+                x = carry
+                if kv_quant:
+                    lp, ck, cv, cks, cvs = xs
+                    scales = (cks, cvs)
+                else:
+                    lp, ck, cv = xs
+                    scales = None
+                xn = rms_norm(x, lp["ln1"])
+                res = attn.decode_self_attention(
+                    xn, lp, cfg, ck, cv, pos, policy=policy,
+                    kv_scales=scales)
+                h, nk, nv = res[0], res[1], res[2]
+                x = x + h
+                if cfg.family == "moe":
+                    m, _ = moe_mod.moe_ffn_ep(rms_norm(x, lp["ln2"]), lp,
+                                              cfg, policy=policy,
+                                              train=train)
+                else:
+                    m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, train)
+                x = x + m
+                ys = (nk, nv) + (res[3] if kv_quant else ())
+                return x, ys
+
+            xs = (params["layers"], caches["k"], caches["v"])
+            if kv_quant:
+                xs = xs + (caches["k_scale"], caches["v_scale"])
+            x, ys = jax.lax.scan(body, x, xs)
+            caches = dict(caches, k=ys[0], v=ys[1])
+            if kv_quant:
+                caches.update(k_scale=ys[2], v_scale=ys[3])
+
+        elif cfg.family == "ssm":
+            def body(carry, xs):
+                x = carry
+                lp, st, cv = xs
+                y, st, cv = ssm_mod.mamba2_decode(
+                    rms_norm(x, lp["ln1"]), lp, cfg, st, cv, policy=policy)
+                return x + y, (st, cv)
+            x, (st, cv) = jax.lax.scan(
+                body, x, (params["layers"], caches["state"], caches["conv"]))
+            caches = dict(caches, state=st, conv=cv)
+
+        elif cfg.family == "hybrid":
+            x, caches = self._hybrid_decode(params, caches, x, pos)
+
+        elif cfg.family == "vlm":
+            x, caches = self._vlm_decode(params, caches, x, pos)
+
+        elif cfg.family == "audio":
+            x, caches = self._audio_decode(params, caches, x, pos)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = qdot(x, params["embed"].T, policy, train=False)
+        return logits, caches
+
+    def _windowed_decode(self, params, caches, x, pos, kv_quant):
+        """gemma3 decode: unrolled layers; local layers use ring-buffer
+        caches of `window` positions (EXPERIMENTS.md §Perf, cell A)."""
+        cfg, policy = self.cfg, self.policy
+        W = caches["k_local"].shape[2]
+        new = {k: [] for k in ("k", "v", "k_local", "v_local", "k_scale",
+                               "v_scale", "k_local_scale", "v_local_scale")}
+        gi = li = 0
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, _l=l: a[_l], params["layers"])
+            is_global = (l % cfg.global_every) == cfg.global_every - 1
+            if is_global:
+                ck, cv = caches["k"][gi], caches["v"][gi]
+                scales = (caches["k_scale"][gi], caches["v_scale"][gi]) \
+                    if kv_quant else None
+                sw = None
+            else:
+                ck, cv = caches["k_local"][li], caches["v_local"][li]
+                scales = (caches["k_local_scale"][li],
+                          caches["v_local_scale"][li]) if kv_quant else None
+                sw = W                      # ring mode (S == static_window)
+            xn = rms_norm(x, lp["ln1"])
+            res = attn.decode_self_attention(
+                xn, lp, cfg, ck, cv, pos, policy=policy,
+                static_window=sw, window=None, kv_scales=scales)
+            x = x + res[0]
+            m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, False)
+            x = x + m
+            pre = "" if is_global else "_local"
+            new["k" + pre].append(res[1])
+            new["v" + pre].append(res[2])
+            if kv_quant:
+                new[f"k{pre}_scale"].append(res[3][0])
+                new[f"v{pre}_scale"].append(res[3][1])
+            if is_global:
+                gi += 1
+            else:
+                li += 1
+        out = dict(caches)
+        for key, vals in new.items():
+            if vals:
+                out[key] = jnp.stack(vals)
+        return x, out
+
+    def _hybrid_decode(self, params, caches, x, pos):
+        cfg, policy = self.cfg, self.policy
+        every = cfg.shared_attn_every
+        st_all, cv_all = caches["state"], caches["conv"]
+        sk_all, sv_all = caches["shared_k"], caches["shared_v"]
+        app = 0
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            y, st, cv = ssm_mod.mamba2_decode(
+                rms_norm(x, lp["ln1"]), lp, cfg, st_all[l], cv_all[l],
+                policy=policy)
+            x = x + y
+            st_all = st_all.at[l].set(st)
+            cv_all = cv_all.at[l].set(cv)
+            if every and (l % every) == every - 1:
+                sp = params["shared"]
+                h, nk, nv = attn.decode_self_attention(
+                    rms_norm(x, sp["ln1"]), sp, cfg, sk_all[app],
+                    sv_all[app], pos, policy=policy)
+                x = x + h
+                m = _mlp(rms_norm(x, sp["ln2"]), sp, cfg, policy, False)
+                x = x + m
+                sk_all = sk_all.at[app].set(nk)
+                sv_all = sv_all.at[app].set(nv)
+                app += 1
+        return x, dict(caches, state=st_all, conv=cv_all,
+                       shared_k=sk_all, shared_v=sv_all)
+
+    def _vlm_decode(self, params, caches, x, pos):
+        cfg, policy = self.cfg, self.policy
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        layers = jax.tree.map(
+            lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["layers"])
+        ck_all = caches["k"].reshape(n_groups, k, *caches["k"].shape[1:])
+        cv_all = caches["v"].reshape(n_groups, k, *caches["v"].shape[1:])
+
+        def body(carry, xs):
+            x = carry
+            lps, cp, cks, cvs, xk, xv = xs
+            nks, nvs = [], []
+            for i in range(k):
+                lp = jax.tree.map(lambda a: a[i], lps)
+                xn = rms_norm(x, lp["ln1"])
+                h, nk, nv = attn.decode_self_attention(
+                    xn, lp, cfg, cks[i], cvs[i], pos, policy=policy)
+                x = x + h
+                m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, False)
+                x = x + m
+                nks.append(nk)
+                nvs.append(nv)
+            h = attn.cross_attention(rms_norm(x, cp["ln_x"]), xk, xv, cp,
+                                     cfg, policy=policy, train=False)
+            x = x + h
+            return x, (jnp.stack(nks), jnp.stack(nvs))
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (layers, params["cross_layers"], ck_all, cv_all,
+                      caches["ctx_k"], caches["ctx_v"]))
+        return x, dict(caches,
+                       k=nk.reshape(caches["k"].shape),
+                       v=nv.reshape(caches["v"].shape))
+
+    def _audio_decode(self, params, caches, x, pos):
+        cfg, policy = self.cfg, self.policy
+
+        def body(carry, xs):
+            x = carry
+            lp, cp, ck, cv, xk, xv = xs
+            xn = rms_norm(x, lp["ln1"])
+            h, nk, nv = attn.decode_self_attention(
+                xn, lp, cfg, ck, cv, pos, policy=policy)
+            x = x + h
+            h = attn.cross_attention(rms_norm(x, cp["ln_x"]), xk, xv, cp,
+                                     cfg, policy=policy, train=False)
+            x = x + h
+            m = _mlp(rms_norm(x, lp["ln2"]), lp, cfg, policy, False)
+            return x + m, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], params["cross_layers"],
+                      caches["k"], caches["v"], caches["ctx_k"],
+                      caches["ctx_v"]))
+        return x, dict(caches, k=nk, v=nv)
+
+    def quantize_params(self, params):
+        """Serving-time weight quantization per the config's mode
+        (the paper's LightPE deployment path): every 2-D projection
+        becomes a QuantizedTensor (int8 W8A8 or packed pow2-int4 W4A8);
+        embeddings / norms / vectors / stacked-3D expert weights stay in
+        the compute dtype."""
+        from repro.quant.qlinear import quantize_weight
+        if not self.policy.quantized:
+            return params
+
+        proj_names = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                      "wq_x", "wk_img", "wv_img", "wo_x", "in_proj",
+                      "out_proj")
+
+        def leafq(path, leaf):
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            tail = name.rsplit("/", 1)[-1]
+            if tail not in proj_names:
+                return leaf
+            if leaf.ndim == 3:   # stacked (L, d_in, d_out): per-layer quant
+                return jax.vmap(lambda w: quantize_weight(w, self.policy))(
+                    leaf)
+            if leaf.ndim == 2:   # unstacked (shared block)
+                return quantize_weight(leaf, self.policy)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(leafq, params)
+
+    def prefill(self, params, tokens, *, ctx=None, max_seq=None):
+        """Compute logits and fill decode caches for the prompt.
+
+        Simple implementation: forward for logits + per-layer KV rebuilt
+        from a cache-building pass (sufficient for serving tests at smoke
+        scale; the 32k dry-run lowers decode_step, not prefill+decode)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        max_seq = max_seq or s
+        logits, _ = self.forward(params, tokens, ctx=ctx, train=False)
+        caches = self.init_cache(b, max_seq,
+                                 dtype=self.policy.compute_dtype)
+        # replay tokens through decode_step to build caches (smoke scale)
+        def step(c, i):
+            _, c = self.decode_step(params, c, jax.lax.dynamic_slice_in_dim(
+                tokens, i, 1, axis=1), i)
+            return c, None
+        caches, _ = jax.lax.scan(step, caches, jnp.arange(s))
+        return logits, caches

@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD forward (quadratic intra-chunk + linear inter-chunk state
+recurrence via lax.scan) and the single-token decode recurrence.  The scan
+state stays f32 (precision-sensitive recurrence; quantization applies to
+the in/out projections only — DESIGN.md §8).
+
+Layout conventions:
+  d_inner = expand * d_model (expand=2), head dim P, heads H = d_inner/P,
+  groups G (B/C shared across H/G heads), state N = cfg.ssm_state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qlinear import qdot
+
+P_HEADDIM = 64
+D_CONV = 4
+
+
+def dims(cfg):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // P_HEADDIM
+    n_groups = 1
+    return d_inner, n_heads, n_groups, cfg.ssm_state
+
+
+def conv_dim(cfg):
+    d_inner, _, g, n = dims(cfg)
+    return d_inner + 2 * g * n
+
+
+def in_proj_dim(cfg):
+    d_inner, h, g, n = dims(cfg)
+    return 2 * d_inner + 2 * g * n + h     # z, xBC(conv), dt
+
+
+def _split(zxbcdt, cfg):
+    d_inner, h, g, n = dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim(cfg)]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv.  x: (b, s, c); w: (D_CONV, c).
+    If cache (b, D_CONV-1, c) is given, performs a streaming step on s=1
+    and returns (y, new_cache)."""
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)      # (b, D_CONV, c)
+        y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None]
+        return jax.nn.silu(y).astype(x.dtype), window[:, 1:]
+    b, s, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    # sum_k w[k] * x[t - (D_CONV-1) + k]
+    y = sum(xp[:, k:k + s].astype(jnp.float32)
+            * w[k].astype(jnp.float32) for k in range(D_CONV))
+    return jax.nn.silu(y).astype(x.dtype), None
+
+
+def _segsum(log_a):
+    """(..., q) -> (..., q, q) lower-triangular cumulative-sum matrix."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log, B, C, *, chunk: int = 256,
+                init_state=None):
+    """SSD forward.  xh: (b, s, h, p); dt: (b, s, h) (softplus applied);
+    a_log: (h,) with A = -exp(a_log); B, C: (b, s, g, n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+    A = -jnp.exp(a_log.astype(jnp.float32))                   # (h,)
+    dA = dt.astype(jnp.float32) * A                           # (b, s, h)
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)       # (b, s, h, n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunked views: (b, nc, q, ...)
+    q = chunk
+    dAc = dA.reshape(b, nc, q, h)
+    Bc = Bh.reshape(b, nc, q, h, n)
+    Cc = Ch.reshape(b, nc, q, h, n)
+    xc = xf.reshape(b, nc, q, h, p)
+
+    # intra-chunk (quadratic) term
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))           # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)         # (b,nc,h,q,q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, xc)
+
+    # per-chunk input -> end-of-chunk state contribution
+    cumA = jnp.cumsum(dAc, axis=2)                            # (b,nc,q,h)
+    decay_to_end = jnp.exp(cumA[:, :, -1:, :] - cumA)         # (b,nc,q,h)
+    chunk_states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                              Bc, decay_to_end, xc)           # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(cumA[:, :, -1, :])                  # (b,nc,h)
+
+    # inter-chunk recurrence over nc (sequential scan)
+    def step(state, inp):
+        st, dec = inp                                         # (b,h,p,n),(b,h)
+        new = state * dec[..., None, None] + st
+        return new, state                                     # emit prev
+
+    s0 = init_state if init_state is not None else \
+        jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, s0, (chunk_states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    # inter-chunk output: y += C_t · (decay from chunk start) · prev_state
+    state_decay = jnp.exp(cumA)                               # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         Cc, state_decay, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(x, p, cfg, *, policy, train):
+    """Full Mamba-2 mixer.  x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    d_inner, h, g, n = dims(cfg)
+    zxbcdt = qdot(x, p["in_proj"], policy, train=train)
+    z, xbc, dt = _split(zxbcdt, cfg)
+    xbc, _ = causal_conv1d(xbc, p["conv_w"])
+    xs = xbc[..., :d_inner].reshape(b, s, h, P_HEADDIM)
+    B = xbc[..., d_inner:d_inner + g * n].reshape(b, s, g, n)
+    C = xbc[..., d_inner + g * n:].reshape(b, s, g, n)
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    c0 = getattr(cfg, "ssm_chunk", 256)
+    chunk = min(c0, s) if s % c0 != 0 else c0
+    if s % chunk != 0:          # tiny smoke shapes
+        chunk = s
+    y, _ = ssd_chunked(xs, dt_, p["a_log"], B, C, chunk=chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)                                    # gated
+    return qdot(y, p["out_proj"], policy, train=train)
+
+
+def mamba2_decode(x, p, cfg, state, conv_cache, *, policy, train=False):
+    """One-token recurrence.  x: (b, 1, d); state: (b, h, p, n) f32;
+    conv_cache: (b, D_CONV-1, conv_dim).  Returns (y, state, conv_cache)."""
+    b, _, d = x.shape
+    d_inner, h, g, n = dims(cfg)
+    zxbcdt = qdot(x, p["in_proj"], policy, train=train)
+    z, xbc, dt = _split(zxbcdt, cfg)
+    xbc, conv_cache = causal_conv1d(xbc, p["conv_w"], cache=conv_cache)
+    xs = xbc[..., :d_inner].reshape(b, h, P_HEADDIM)
+    B = xbc[..., d_inner:d_inner + g * n].reshape(b, g, n)
+    C = xbc[..., d_inner + g * n:].reshape(b, g, n)
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)       # (b, h, n)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dt_ = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (b, h)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # (h,)
+    dA = jnp.exp(dt_ * A)                                      # (b, h)
+    xf = xs.astype(jnp.float32) * dt_[..., None]               # (b, h, p)
+    state = state * dA[..., None, None] \
+        + jnp.einsum("bhp,bhn->bhpn", xf, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return qdot(y, p["out_proj"], policy, train=train), state, conv_cache

@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback for DP all-reduce.
+
+QAPPA's low-bit insight applied to the network: before the data-parallel
+gradient all-reduce, gradients are quantized to int8 (per-leaf scale) and
+the quantization residual is carried to the next step (error feedback,
+1-bit-Adam style), keeping convergence unbiased in the long run.
+
+In the pjit world the all-reduce is implicit (XLA inserts it from the
+sharding), so compression is expressed as quantize -> (XLA reduces int8*
+-> here the mean of dequantized grads) -> dequantize + residual carry.
+The compression hook is exact in expectation and unit-tested for the
+error-feedback invariant; collective-byte savings appear in the HLO when
+the quantized tensors are what crosses the DP axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import quantizers as qz
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, err_state):
+    """Returns (int8 grads tree, scales tree, new error-feedback tree)."""
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    e_leaves = jax.tree_util.tree_leaves(err_state)
+    qs, scales, errs = [], [], []
+    for g, e in zip(g_leaves, e_leaves):
+        gf = g.astype(jnp.float32) + e
+        scale = qz.int_scale(gf, 8)
+        q = qz.quantize_int(gf, scale, 8)
+        deq = qz.dequantize_int(q, scale)
+        qs.append(q)
+        scales.append(scale)
+        errs.append(gf - deq)
+    unf = treedef.unflatten
+    return unf(qs), unf(scales), unf(errs)
+
+
+def decompress_grads(qgrads, scales):
+    return jax.tree.map(qz.dequantize_int, qgrads, scales)
+
+
+def compress_roundtrip(grads, err_state):
+    """One-step compress+decompress (what each step applies)."""
+    qg, scales, err = compress_grads(grads, err_state)
+    return decompress_grads(qg, scales), err

@@ -1,0 +1,166 @@
+"""Sharding rules: FSDP over "data", TP over "model", SP for activations,
+EP for experts, pure DP over "pod".
+
+Models stay pure: they call :func:`shard` with a *logical* name; if an
+activation-sharding context is active (set by the launcher), a
+``with_sharding_constraint`` is applied, otherwise it is the identity.
+Parameter shardings are produced by :func:`param_pspec` from leaf-name
+heuristics over the stacked-parameter pytree.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules():
+    return getattr(_state, "rules", None)
+
+
+def _mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict[str, P]):
+    """Enable with_sharding_constraint on logical activation names."""
+    prev = (_rules(), _mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def shard(x, name: str):
+    """Apply the activation constraint for logical name, if active."""
+    rules, mesh = _rules(), _mesh()
+    if rules is None or mesh is None or name not in rules:
+        return x
+    spec = rules[name]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch axes: ("pod","data") on the multi-pod mesh, else ("data",)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def default_activation_rules(mesh: Mesh, *, seq_sharded: bool,
+                             batch_1: bool = False) -> dict[str, P]:
+    """Logical-name -> PartitionSpec table.
+
+    * residual: (batch -> data axes, seq -> model [SP], d_model replicated)
+    * attn_heads / ffn_hidden: model-parallel inner dims
+    * kv_cache: batch -> data (or seq -> data when batch==1, long-context)
+    """
+    d = data_axes(mesh)
+    db = d if not batch_1 else (None,)
+    sp = "model" if seq_sharded else None
+    return {
+        "residual": P(db, sp, None),
+        "logits": P(db, sp, None),
+        "attn_qkv": P(db, None, "model", None),       # (b, s, heads, hd)
+        "ffn_hidden": P(db, None, "model"),           # (b, s, ff)
+        "moe_buffer": P("model", None, None),         # (E, C, d)
+        "kv_cache": P(db, None, None, None) if not batch_1
+        else P(None, ("data",) if "data" in mesh.axis_names else None,
+               None, None),                           # (b, S, kvh, hd)
+        "ssm_state": P(db, "model", None, None),      # (b, heads, p, n)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (FSDP over "data" + TP over "model")
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: list[tuple[tuple[str, ...], P]] = [
+    # name-suffix patterns -> spec for the *logical* (unstacked) dims.
+    # Stacked layer params get a leading None for the layer dim.
+    (("embed",), P("model", "data")),                 # (V, d): vocab TP
+    (("router",), P("data", "model")),                # (d, E)
+    (("w_experts_in",), P("model", "data", None)),    # (E, d, ff): EP
+    (("w_experts_gate",), P("model", "data", None)),
+    (("w_experts_out",), P("model", None, "data")),   # (E, ff, d)
+    (("wq",), P("data", "model")),                    # (d, H*hd): head TP
+    (("wk",), P("data", "model")),
+    (("wv",), P("data", "model")),
+    (("wo",), P("model", "data")),                    # (H*hd, d)
+    (("w_gate",), P("data", "model")),                # (d, ff): TP
+    (("w_up",), P("data", "model")),
+    (("w_down",), P("model", "data")),                # (ff, d)
+    (("in_proj",), P("data", "model")),               # mamba (d, inner)
+    (("out_proj",), P("model", "data")),
+    (("wq_x",), P("data", "model")),                  # cross-attn
+    (("wk_img",), P("data", "model")),
+    (("wv_img",), P("data", "model")),
+    (("wo_x",), P("model", "data")),
+    (("conv_w", "dt_bias", "a_log", "d_skip", "ln1", "ln2", "ln_x",
+      "final_norm"), P()),                            # small: replicate
+]
+
+
+def _axis_size(mesh: Mesh | None, axis) -> int:
+    if mesh is None or axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= _axis_size(mesh, a)
+        return n
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
+
+
+def param_pspec(path: str, shape: tuple, stacked: bool,
+                mesh: Mesh | None = None) -> P:
+    """Sharding spec for one parameter leaf.
+
+    ``path`` is the '/'-joined pytree path; ``stacked`` marks per-layer
+    stacked params (leading dim = layers, never sharded).  Any axis whose
+    dim is not divisible by the mesh axis size is dropped (replicated) —
+    e.g. mamba2's vocab 50280 is not 16-divisible, so it FSDP-shards
+    d_model instead of TP-sharding the vocab.
+    """
+    rank = len(shape) - (1 if stacked else 0)
+    dims = shape[1:] if stacked else shape
+
+    def fit(spec_dims):
+        out = []
+        for i in range(rank):
+            ax = spec_dims[i] if i < len(spec_dims) else None
+            if ax is not None and dims[i] % _axis_size(mesh, ax) != 0:
+                ax = None
+            out.append(ax)
+        return P(*([None] + out)) if stacked else P(*out)
+
+    for pats, spec in _PARAM_RULES:
+        if any(path.endswith(p) or f"/{p}" in path for p in pats):
+            return fit(list(spec))
+    if rank >= 2:  # default: FSDP-shard the first unstacked dim
+        return fit(["data"] + [None] * (rank - 1))
+    return P(*([None] * len(shape)))
+
+
+def tree_pspecs(params, mesh: Mesh | None = None) -> dict:
+    """Pytree of PartitionSpecs matching a (possibly nested) param dict."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        stacked = "layers/" in name or name.startswith("layers")
+        specs.append(param_pspec(name, tuple(leaf.shape), stacked, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(mesh: Mesh, params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(params, mesh))

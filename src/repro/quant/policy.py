@@ -1,0 +1,78 @@
+"""Execution-mode policy: maps the paper's PE types to TPU execution modes.
+
+| QAPPA PE   | mode      | train (QAT)                 | serve              |
+|------------|-----------|-----------------------------|--------------------|
+| FP32       | fp32      | fp32 everywhere             | fp32               |
+| INT16      | bf16      | bf16 compute (TPU 16b MAC)  | bf16               |
+| LightPE-2  | w8a8      | fake-quant int8 acts+wts    | int8 MXU kernel    |
+| LightPE-1  | w4a8_pow2 | fake-quant pow2 wts, int8 a | packed-int4 kernel |
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax.numpy as jnp
+
+from repro.core.pe import PEType
+
+
+class ExecMode(str, enum.Enum):
+    FP32 = "fp32"
+    BF16 = "bf16"
+    W8A8 = "w8a8"               # LightPE-2 analogue
+    W4A8_POW2 = "w4a8_pow2"     # LightPE-1 analogue
+
+
+PE_TO_MODE = {
+    PEType.FP32: ExecMode.FP32,
+    PEType.INT16: ExecMode.BF16,
+    PEType.LIGHTPE2: ExecMode.W8A8,
+    PEType.LIGHTPE1: ExecMode.W4A8_POW2,
+}
+
+MODE_TO_PE = {v: k for k, v in PE_TO_MODE.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Resolved numerics policy for a model instance."""
+
+    mode: ExecMode = ExecMode.BF16
+    # weight-quantization axis convention: per-output-channel
+    per_channel: bool = True
+    # QAT: fake-quantize activations too (False = weight-only QAT with
+    # dynamic act quantization at serve time; §Perf cell B iteration)
+    qat_acts: bool = True
+    # keep precision-sensitive ops (norms, softmax, SSM recurrence, router)
+    # in this dtype regardless of mode
+    stable_dtype: object = jnp.float32
+
+    @property
+    def compute_dtype(self):
+        return jnp.float32 if self.mode == ExecMode.FP32 else jnp.bfloat16
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode in (ExecMode.W8A8, ExecMode.W4A8_POW2)
+
+    @property
+    def weight_bits(self) -> int:
+        return {ExecMode.FP32: 32, ExecMode.BF16: 16,
+                ExecMode.W8A8: 8, ExecMode.W4A8_POW2: 4}[self.mode]
+
+    @property
+    def act_bits(self) -> int:
+        return {ExecMode.FP32: 32, ExecMode.BF16: 16,
+                ExecMode.W8A8: 8, ExecMode.W4A8_POW2: 8}[self.mode]
+
+    @property
+    def pe_type(self) -> PEType:
+        return MODE_TO_PE[self.mode]
+
+
+def policy_for(mode: ExecMode | str | None) -> QuantPolicy:
+    if mode is None:
+        return QuantPolicy()
+    return QuantPolicy(mode=ExecMode(mode))

@@ -1,0 +1,142 @@
+"""Quantization-aware linear algebra used by every model layer.
+
+Two regimes, one entry point (:func:`qdot`):
+
+* **train (QAT)** — weights/activations are fake-quantized with STE per the
+  policy, contraction runs in the compute dtype.  Gradients flow.
+* **serve** — weights are stored quantized (:class:`QuantizedTensor`:
+  int8, or nibble-packed pow2-int4), activations are dynamically quantized
+  to int8, and the contraction runs in integer arithmetic with a fused
+  dequant epilogue (Pallas kernel on TPU; pure-jnp reference elsewhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.policy import ExecMode, QuantPolicy
+from repro.quant import quantizers as qz
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Serving-time quantized weight: data + per-output-channel scales.
+
+    ``data`` layout:
+      * w8a8: int8, logical shape (d_in, d_out)
+      * w4a8_pow2: int8 nibble-packed pow2 codes, shape (d_in//2, d_out)
+        packed along d_in (two input-channel codes per byte)
+    """
+
+    data: jax.Array
+    scale: jax.Array          # (1, d_out) or scalar
+    mode: str                 # static aux: ExecMode value
+    orig_shape: tuple         # logical (d_in, d_out)
+
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.mode, self.orig_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        mode, orig_shape = aux
+        return cls(data=data, scale=scale, mode=mode, orig_shape=orig_shape)
+
+
+def quantize_weight(w: jax.Array, policy: QuantPolicy) -> QuantizedTensor:
+    """Quantize a (d_in, d_out) weight for serving."""
+    assert w.ndim == 2, "quantize_weight expects (d_in, d_out)"
+    if policy.mode == ExecMode.W8A8:
+        scale = qz.int_scale(w, 8, axis=0)              # (1, d_out)
+        q = qz.quantize_int(w, scale, 8)
+        return QuantizedTensor(q, scale, policy.mode.value, tuple(w.shape))
+    if policy.mode == ExecMode.W4A8_POW2:
+        scale = qz.pow2_scale(w, axis=0)                # (1, d_out)
+        codes = qz.pow2_encode(w, scale)                # (d_in, d_out) 4-bit
+        packed = qz.pack_int4(codes.T).T                # pack along d_in
+        return QuantizedTensor(packed, scale, policy.mode.value,
+                               tuple(w.shape))
+    raise ValueError(f"mode {policy.mode} is not a quantized mode")
+
+
+def dequantize_weight(qw: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    if qw.mode == ExecMode.W8A8.value:
+        return qz.dequantize_int(qw.data, qw.scale, dtype)
+    if qw.mode == ExecMode.W4A8_POW2.value:
+        codes = qz.unpack_int4(qw.data.T).T
+        return qz.pow2_decode(codes, qw.scale, dtype)
+    raise ValueError(qw.mode)
+
+
+# ---------------------------------------------------------------------------
+# QAT fake-quant contraction (training path)
+# ---------------------------------------------------------------------------
+
+def qat_weight(w: jax.Array, policy: QuantPolicy, axis=0) -> jax.Array:
+    """Fake-quantized weight view for training; STE gradients."""
+    if policy.mode == ExecMode.W8A8:
+        return qz.fake_quant_int(w, 8, axis=axis)
+    if policy.mode == ExecMode.W4A8_POW2:
+        return qz.fake_quant_pow2(w, axis=axis)
+    return w
+
+
+def qat_act(x: jax.Array, policy: QuantPolicy) -> jax.Array:
+    """Fake-quantized activation (dynamic per-tensor int8)."""
+    if policy.quantized and policy.qat_acts:
+        return qz.fake_quant_int(x, 8, axis=None)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Integer serving contraction (pure-jnp reference; kernels/ops.py provides
+# the Pallas-accelerated variant with identical semantics)
+# ---------------------------------------------------------------------------
+
+def int8_dot(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+             w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """(m, k) int8 x (k, n) int8 -> int32 accumulate -> dequant."""
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def serve_dot(x: jax.Array, qw: QuantizedTensor,
+              out_dtype=None) -> jax.Array:
+    """Quantized serving matmul on the last dim of ``x``."""
+    out_dtype = out_dtype or x.dtype
+    d_in, d_out = qw.orig_shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d_in)
+    x_scale = qz.int_scale(x2.astype(jnp.float32), 8, axis=None)
+    x_q = qz.quantize_int(x2.astype(jnp.float32), x_scale, 8)
+    if qw.mode == ExecMode.W8A8.value:
+        from repro.kernels import ops
+        out = ops.w8a8_matmul(x_q, qw.data, x_scale, qw.scale,
+                              out_dtype=jnp.float32)
+    elif qw.mode == ExecMode.W4A8_POW2.value:
+        from repro.kernels import ops
+        out = ops.w4a8_matmul(x_q, qw.data, x_scale, qw.scale,
+                              out_dtype=jnp.float32)
+    else:
+        raise ValueError(qw.mode)
+    return out.reshape(*lead, d_out).astype(out_dtype)
+
+
+def qdot(x: jax.Array, w, policy: QuantPolicy, *, train: bool) -> jax.Array:
+    """Unified quantization-aware (…, d_in) x (d_in, d_out) contraction."""
+    if isinstance(w, QuantizedTensor):
+        return serve_dot(x, w)
+    if train and policy.quantized:
+        xq = qat_act(x, policy)
+        wq = qat_weight(w, policy, axis=0)
+        return jnp.matmul(xq.astype(policy.compute_dtype),
+                          wq.astype(policy.compute_dtype))
+    return jnp.matmul(x.astype(policy.compute_dtype),
+                      w.astype(policy.compute_dtype))

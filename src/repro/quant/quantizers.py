@@ -1,0 +1,146 @@
+"""Quantizers mirroring the paper's PE types, in JAX.
+
+* symmetric int8/int4 (per-tensor or per-channel) — the LightPE-2 / W8A8
+  storage format;
+* power-of-two ("one shift", LightNN) 4-bit weights — LightPE-1;
+* two-term power-of-two ("two shifts + add") 8-bit weights — the LightPE-2
+  datapath's exact arithmetic, used by the paper-faithful accuracy model;
+* fake-quantization with straight-through estimators for QAT;
+* int4 nibble packing for the Pallas W4A8 kernel.
+
+All functions are pure and jit/vmap/grad-safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _absmax(x: jax.Array, axis=None) -> jax.Array:
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(m, 1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric integer quantization
+# ---------------------------------------------------------------------------
+
+def int_scale(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Symmetric scale so that absmax maps to the max quantized level."""
+    qmax = 2 ** (bits - 1) - 1
+    return _absmax(x, axis) / qmax
+
+
+def quantize_int(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32)
+
+
+def dequantize_int(q: jax.Array, scale: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_dequantize_int(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    # stay in x.dtype (int8 levels are exact in bf16): a f32 scale would
+    # promote the whole fake-quant chain to f32 and double its HBM traffic
+    scale = int_scale(x, bits, axis).astype(x.dtype)
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two quantization (LightNN / LightPE)
+# ---------------------------------------------------------------------------
+# 4-bit code: [sign(1) | exp(3)]; value = sign * scale * 2**(exp - 7)
+# exp in [0, 7] -> magnitudes scale * {2^-7 .. 2^0}.  No exact zero (the
+# smallest level is scale/128), matching a shift-only datapath.
+
+POW2_EXP_BIAS = 7
+
+
+def pow2_encode(w: jax.Array, scale: jax.Array) -> jax.Array:
+    """Encode weights to 4-bit pow2 codes (stored in int8, low nibble)."""
+    mag = jnp.abs(w) / scale                       # (0, 1]-ish
+    e = jnp.round(jnp.log2(jnp.maximum(mag, 2.0 ** (-POW2_EXP_BIAS))))
+    e = jnp.clip(e + POW2_EXP_BIAS, 0, 7).astype(jnp.int8)
+    sign = (w < 0).astype(jnp.int8)
+    return (sign << 3) | e
+
+
+def pow2_decode(code: jax.Array, scale: jax.Array,
+                dtype=jnp.float32) -> jax.Array:
+    e = (code & 7).astype(jnp.int32) - POW2_EXP_BIAS
+    sign = 1.0 - 2.0 * ((code >> 3) & 1).astype(jnp.float32)
+    return (sign * jnp.exp2(e.astype(jnp.float32)) * scale).astype(dtype)
+
+
+def pow2_scale(w: jax.Array, axis=None) -> jax.Array:
+    """Scale chosen so absmax lands on the top pow2 level (2^0 * scale)."""
+    return _absmax(w, axis)
+
+
+def quantize_dequantize_pow2(w: jax.Array, axis=None) -> jax.Array:
+    scale = pow2_scale(w, axis)
+    return pow2_decode(pow2_encode(w, scale), scale, w.dtype)
+
+
+def quantize_dequantize_pow2_2term(w: jax.Array, axis=None) -> jax.Array:
+    """Two-term pow2 ("two shifts + add", LightPE-2 datapath).
+
+    Greedy residual: v1 = pow2(w); v2 = pow2(w - v1); result = v1 + v2.
+    """
+    scale = pow2_scale(w, axis)
+    v1 = pow2_decode(pow2_encode(w, scale), scale, w.dtype)
+    r = w - v1
+    v2 = pow2_decode(pow2_encode(r, scale), scale, w.dtype)
+    # only add the second term where it reduces error
+    better = jnp.abs(w - (v1 + v2)) < jnp.abs(w - v1)
+    return jnp.where(better, v1 + v2, v1)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators (QAT)
+# ---------------------------------------------------------------------------
+
+def ste(x: jax.Array, qdq: jax.Array) -> jax.Array:
+    """Straight-through: forward = qdq(x), gradient = identity."""
+    return x + jax.lax.stop_gradient(qdq - x)
+
+
+def fake_quant_int(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    return ste(x, quantize_dequantize_int(x, bits, axis))
+
+
+def fake_quant_pow2(x: jax.Array, axis=None) -> jax.Array:
+    return ste(x, quantize_dequantize_pow2(x, axis))
+
+
+def fake_quant_pow2_2term(x: jax.Array, axis=None) -> jax.Array:
+    return ste(x, quantize_dequantize_pow2_2term(x, axis))
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (for the W4A8 Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack 4-bit codes pairwise along the last dim: (..., K) -> (..., K//2).
+
+    Element 2i goes to the low nibble, 2i+1 to the high nibble.
+    """
+    assert codes.shape[-1] % 2 == 0, "last dim must be even to pack"
+    lo = codes[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = codes[..., 1::2].astype(jnp.uint8) & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: (..., K//2) -> (..., K) uint4 codes."""
+    p = packed.astype(jnp.uint8)
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)

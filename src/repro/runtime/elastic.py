@@ -1,0 +1,40 @@
+"""Elastic re-meshing: reshard a training state onto a different mesh.
+
+When the fleet shrinks/grows (node failure, preemption, scale-up), the
+checkpointed state must be laid out for the new device count.  Because
+parameter pspecs are *logical* (parallel/sharding.py), resharding is just
+device_put with shardings derived from the new mesh — divisibility
+fallbacks in param_pspec handle axes that stop dividing evenly.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.parallel.sharding import tree_pspecs
+
+
+def reshard(state, new_mesh: Mesh):
+    """Re-lay-out a pytree for ``new_mesh`` using the logical param rules."""
+    specs = tree_pspecs(state, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        state, specs)
+
+
+def survivable_mesh(devices, axis_names=("data", "model"),
+                    prefer_model: int = 16):
+    """Build the largest usable mesh from surviving devices.
+
+    Keeps the model axis at ``prefer_model`` if possible (TP degree is a
+    property of the compiled program) and shrinks the data axis.
+    """
+    import numpy as np
+    n = len(devices)
+    model = prefer_model
+    while model > 1 and n % model != 0:
+        model //= 2
+    data = n // model
+    arr = np.asarray(devices[:data * model]).reshape(data, model)
+    return Mesh(arr, axis_names)

@@ -1,0 +1,107 @@
+"""Fault-tolerant training runtime: restart loop, failure injection,
+straggler detection.
+
+On a real fleet these hooks bind to the cluster scheduler; the logic here
+is the part that must be correct regardless of fleet plumbing:
+
+* the restart loop resumes from the newest *valid* checkpoint and replays
+  the data cursor, giving bitwise-identical training to an uninterrupted
+  run (tested in tests/test_runtime.py);
+* failure injection kills the step loop at a chosen step to exercise that
+  path deterministically;
+* the straggler detector keeps an EWMA + variance of step wall-times and
+  flags outliers (on a fleet this feeds re-sharding / hot-sparing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.checkpoint import checkpoint as ckpt_lib
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    alpha: float = 0.1
+    threshold: float = 3.0        # flag if step > mean + threshold * std
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self.n += 1
+        if self.n == 1:
+            self.mean = dt
+            return False
+        # test against the PRE-update statistics: the outlier must not
+        # contaminate the baseline it is compared to
+        sigma = max(self.var, 1e-12) ** 0.5
+        is_straggler = self.n > 5 and \
+            dt > self.mean + self.threshold * max(sigma, 0.1 * self.mean)
+        delta = dt - self.mean
+        if not is_straggler:       # robust EWMA: outliers don't pollute
+            self.mean += self.alpha * delta
+            self.var = (1 - self.alpha) * (self.var
+                                           + self.alpha * delta ** 2)
+        self.flagged += int(is_straggler)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class TrainLoopResult:
+    final_step: int
+    restarts: int
+    losses: list
+    straggler_flags: int
+
+
+def run_with_restarts(
+    *,
+    init_state: Callable[[], dict],
+    train_step: Callable[[dict, dict], tuple],   # (state, batch) -> (state, loss)
+    data_batch: Callable[[int], dict],
+    total_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    fail_at: dict[int, int] | None = None,       # {step: n_times_to_fail}
+    max_restarts: int = 10,
+) -> TrainLoopResult:
+    """Checkpoint/restart driver.  ``state`` must contain a 'step' entry."""
+    fail_at = dict(fail_at or {})
+    restarts = 0
+    losses: list = []
+    detector = StragglerDetector()
+
+    while True:
+        state = init_state()
+        step, restored = ckpt_lib.restore_latest(ckpt_dir, state)
+        if restored is not None:
+            state = restored
+            start = int(step) + 1
+        else:
+            start = 0
+        try:
+            for s in range(start, total_steps):
+                if fail_at.get(s, 0) > 0:
+                    fail_at[s] -= 1
+                    raise InjectedFailure(f"injected failure at step {s}")
+                t0 = time.monotonic()
+                state, loss = train_step(state, data_batch(s))
+                detector.observe(time.monotonic() - t0)
+                losses.append((s, float(loss)))
+                if (s + 1) % ckpt_every == 0 or s == total_steps - 1:
+                    ckpt_lib.save(ckpt_dir, s, state)
+            return TrainLoopResult(final_step=total_steps - 1,
+                                   restarts=restarts, losses=losses,
+                                   straggler_flags=detector.flagged)
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

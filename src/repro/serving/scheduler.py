@@ -1,0 +1,112 @@
+"""Iteration-level continuous batching (Orca-style) on per-slot positions.
+
+The decode path accepts a per-slot position vector, so slots advance
+independently: new requests are admitted into free slots mid-flight and
+replay their prompt tokens one iteration at a time while other slots keep
+generating — no batch drain, no padding waste.  Slot reuse is safe
+because cache reads mask ``ki <= pos`` and a new request overwrites
+positions from 0 upward.
+
+This is the serving-layer substrate for the quantized decode path: the
+batcher works identically over bf16, int8-KV, and quantized-weight
+models (tests/test_scheduler.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    # filled by the batcher
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    FREE, PREFILL, GEN = 0, 1, 2
+
+    def __init__(self, model, params, *, n_slots: int, max_seq: int,
+                 kv_quant: bool = False):
+        self.model = model
+        self.params = params
+        self.n = n_slots
+        self.max_seq = max_seq
+        self.caches = model.init_cache(n_slots, max_seq, kv_quant=kv_quant)
+        self.queue: deque[Request] = deque()
+        self.state = np.full(n_slots, self.FREE)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.cursor = np.zeros(n_slots, np.int32)      # prompt replay index
+        self.slot_req: list = [None] * n_slots
+        self.next_tok = np.zeros(n_slots, np.int32)
+        self._step = jax.jit(model.decode_step)
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.n):
+            if self.state[s] == self.FREE and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[s] = req
+                self.state[s] = self.PREFILL
+                self.pos[s] = 0
+                self.cursor[s] = 0
+                self.next_tok[s] = req.prompt[0]
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or bool((self.state != self.FREE).any())
+
+    def step(self):
+        """One iteration: every non-free slot advances one token."""
+        self._admit()
+        if not (self.state != self.FREE).any():
+            return
+        tokens = jnp.asarray(self.next_tok)[:, None]
+        pos = jnp.asarray(self.pos)
+        logits, self.caches = self._step(self.params, self.caches,
+                                         tokens, pos)
+        sampled = np.asarray(jnp.argmax(logits[:, 0], axis=-1),
+                             np.int32)
+
+        for s in range(self.n):
+            if self.state[s] == self.FREE:
+                continue
+            req = self.slot_req[s]
+            self.pos[s] += 1
+            if self.state[s] == self.PREFILL:
+                self.cursor[s] += 1
+                if self.cursor[s] < len(req.prompt):
+                    self.next_tok[s] = req.prompt[self.cursor[s]]
+                else:                     # prompt done -> first gen token
+                    self.state[s] = self.GEN
+                    req.generated.append(int(sampled[s]))
+                    self.next_tok[s] = sampled[s]
+            else:                          # GEN
+                req.generated.append(int(sampled[s]))
+                self.next_tok[s] = sampled[s]
+            if self.state[s] == self.GEN and (
+                    len(req.generated) >= req.max_new
+                    or self.pos[s] >= self.max_seq - 1):
+                req.done = True
+                self.completed.append(req)
+                self.state[s] = self.FREE
+                self.slot_req[s] = None
+
+    def run(self, max_iters: int = 10000):
+        it = 0
+        while self.busy and it < max_iters:
+            self.step()
+            it += 1
+        return self.completed

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; the 512-device XLA flag is set
+# ONLY inside launch/dryrun.py (see system design).  Guard against leakage.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "dry-run XLA_FLAGS must not leak into the test environment"
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,54 @@
+"""Checkpointing: roundtrip, checksum validation, rotation, fallback."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+
+
+def _tree(key=0):
+    k = jax.random.key(key)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(5), "c": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    out = ck.restore(str(tmp_path), 3, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_rotation(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ck.save(str(tmp_path), s, t, keep=3)
+    kept = sorted(os.listdir(tmp_path))
+    assert len(kept) == 3
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_corruption_detected_and_skipped(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 2, t)
+    # corrupt the newest checkpoint
+    with open(os.path.join(tmp_path, "step_00000002", "arrays.npz"),
+              "r+b") as f:
+        f.seek(10)
+        f.write(b"\xde\xad\xbe\xef")
+    assert ck.latest_step(str(tmp_path)) == 1      # falls back
+    with pytest.raises(IOError):
+        ck.restore(str(tmp_path), 2, t)
+    step, out = ck.restore_latest(str(tmp_path), t)
+    assert step == 1 and out is not None
+
+
+def test_restore_latest_empty(tmp_path):
+    step, out = ck.restore_latest(str(tmp_path / "nope"), _tree())
+    assert step is None and out is None

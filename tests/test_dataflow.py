@@ -1,0 +1,99 @@
+"""Row-stationary dataflow model invariants (property tests)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.dataflow import map_layer, run_workload
+from repro.core.pe import PEType
+from repro.core.synthesis import synthesize
+from repro.core.workloads import ConvLayer, get_workload
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+layer_st = st.builds(
+    ConvLayer,
+    name=st.just("l"),
+    h=st.integers(8, 64), w=st.integers(8, 64),
+    c=st.integers(1, 64), k=st.integers(1, 64),
+    r=st.sampled_from([1, 3, 5, 7]), s=st.sampled_from([1, 3, 5, 7]),
+    stride=st.sampled_from([1, 2]),
+)
+
+cfg_st = st.builds(
+    AcceleratorConfig,
+    pe_type=st.sampled_from(list(PEType)),
+    pe_rows=st.sampled_from([8, 12, 16, 32]),
+    pe_cols=st.sampled_from([8, 14, 16, 32]),
+    glb_kb=st.sampled_from([64, 128, 512]),
+    dram_bw_gbps=st.sampled_from([6.4, 25.6]),
+)
+
+
+def _res(layer, cfg):
+    rep = synthesize(cfg)
+    from repro.core.pe import _P_PE_LEAK_UW
+    leak = cfg.num_pes * _P_PE_LEAK_UW[cfg.pe_type] * 1e-3
+    return map_layer(layer, cfg, rep.clock_ghz, rep.area_mm2, leak)
+
+
+@given(layer=layer_st, cfg=cfg_st)
+@settings(**SETTINGS)
+def test_utilization_bounded(layer, cfg):
+    if layer.h < layer.r or layer.w < layer.s:
+        return
+    r = _res(layer, cfg)
+    assert 0 < r.utilization <= 1.0 + 1e-9
+    assert r.compute_cycles >= math.ceil(layer.macs / cfg.num_pes)
+    assert r.total_cycles >= max(r.compute_cycles, r.mem_cycles)
+
+
+@given(layer=layer_st, cfg=cfg_st)
+@settings(**SETTINGS)
+def test_dram_traffic_floor(layer, cfg):
+    if layer.h < layer.r or layer.w < layer.s:
+        return
+    r = _res(layer, cfg)
+    s = cfg.spec
+    floor = (layer.c * layer.h * layer.w * s.act_bits
+             + layer.k * layer.c * layer.r * layer.s * s.weight_bits
+             + layer.k * layer.e * layer.f * s.act_bits) // 8
+    assert r.dram_bytes >= floor
+    assert r.energy_pj > 0
+
+
+def test_bigger_glb_never_more_dram():
+    layer = ConvLayer("c", 56, 56, 128, 256)
+    prev = None
+    for glb in (64, 128, 256, 512, 1024):
+        r = _res(layer, AcceleratorConfig(glb_kb=glb))
+        if prev is not None:
+            assert r.dram_bytes <= prev
+        prev = r.dram_bytes
+
+
+def test_quantization_reduces_traffic():
+    layer = ConvLayer("c", 28, 28, 256, 512)
+    r16 = _res(layer, AcceleratorConfig(pe_type=PEType.INT16))
+    r4 = _res(layer, AcceleratorConfig(pe_type=PEType.LIGHTPE1))
+    assert r4.dram_bytes < r16.dram_bytes
+    rf = _res(layer, AcceleratorConfig(pe_type=PEType.FP32))
+    assert r16.dram_bytes < rf.dram_bytes
+
+
+def test_workload_aggregation():
+    wl = get_workload("vgg16")
+    res = run_workload(wl, AcceleratorConfig())
+    assert res.total_macs == wl.total_macs
+    assert res.latency_s > 0 and res.energy_j > 0
+    assert len(res.layers) == len(wl.layers)
+    assert res.perf_per_area > 0
+
+
+def test_eyeriss_like_full_utilization_case():
+    """12x14 array, R=3, E=56: the canonical mapping should be ~100%."""
+    layer = ConvLayer("c", 58, 58, 64, 64)   # E=F=56
+    r = _res(layer, AcceleratorConfig(pe_rows=12, pe_cols=14))
+    assert r.utilization > 0.95

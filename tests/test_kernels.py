@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant import quantizers as qz
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32) \
+        .astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 96, 48),
+                                   (33, 70, 17), (128, 64, 96)])
+def test_w8a8_matches_ref(m, k, n):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    xs = qz.int_scale(x, 8)
+    xq = qz.quantize_int(x, xs, 8)
+    ws = qz.int_scale(w, 8, axis=0)
+    wq = qz.quantize_int(w, ws, 8)
+    o_ref = ref.w8a8_matmul_ref(xq, wq, xs, ws)
+    o_pal = ops.w8a8_matmul(xq, wq, xs, ws, impl="interpret",
+                            bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_w8a8_out_dtypes(out_dtype):
+    x, w = _rand(0, (32, 64)), _rand(1, (64, 32))
+    xs = qz.int_scale(x, 8)
+    xq = qz.quantize_int(x, xs, 8)
+    ws = qz.int_scale(w, 8, axis=0)
+    wq = qz.quantize_int(w, ws, 8)
+    o = ops.w8a8_matmul(xq, wq, xs, ws, impl="interpret", bm=32, bn=32,
+                        bk=32, out_dtype=out_dtype)
+    assert o.dtype == out_dtype
+    o_ref = ref.w8a8_matmul_ref(xq, wq, xs, ws, out_dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 128, 48), (16, 64, 96)])
+def test_w4a8_matches_ref(m, k, n):
+    x = _rand(2, (m, k))
+    w = _rand(3, (k, n))
+    xs = qz.int_scale(x, 8)
+    xq = qz.quantize_int(x, xs, 8)
+    ws = qz.pow2_scale(w, axis=0)
+    packed = qz.pack_int4(qz.pow2_encode(w, ws).T).T
+    o_ref = ref.w4a8_matmul_ref(xq, packed, xs, ws)
+    o_pal = ops.w4a8_matmul(xq, packed, xs, ws, impl="interpret",
+                            bm=16, bn=16, bk=32)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_w4a8_pow2_decode_consistency():
+    """Packed kernel semantics == explicit pow2 dequant matmul."""
+    x, w = _rand(4, (16, 32)), _rand(5, (32, 16))
+    xs = qz.int_scale(x, 8)
+    xq = qz.quantize_int(x, xs, 8)
+    ws = qz.pow2_scale(w, axis=0)
+    codes = qz.pow2_encode(w, ws)
+    packed = qz.pack_int4(codes.T).T
+    direct = (xq.astype(jnp.float32) * xs) @ qz.pow2_decode(codes, ws)
+    o = ref.w4a8_matmul_ref(xq, packed, xs, ws)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(direct),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 64, 16), (2, 3, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, h, s, d, dtype):
+    q, k, v = (_rand(i, (b, h, s, d), dtype) for i in range(3))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    o_pal = ops.flash_attention(q, k, v, causal=True, impl="interpret",
+                                bq=32, bk=32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_attention_window(window):
+    b, h, s, d = 2, 2, 128, 16
+    q, k, v = (_rand(i + 10, (b, h, s, d)) for i in range(3))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    o_pal = ops.flash_attention(q, k, v, causal=True, window=window,
+                                impl="interpret", bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_noncausal():
+    b, h, s, d = 1, 2, 64, 16
+    q, k, v = (_rand(i + 20, (b, h, s, d)) for i in range(3))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=False)
+    o_pal = ops.flash_attention(q, k, v, causal=False, impl="interpret",
+                                bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_combine_matches_full():
+    b, s, h, d = 2, 64, 4, 16
+    q = _rand(30, (b, h, d))
+    k = _rand(31, (b, s, h, d))
+    v = _rand(32, (b, s, h, d))
+    full = ref.decode_attention_ref(q, k, v)
+    n_shards = 4
+    parts = [ref.decode_attention_partial_ref(
+        q, k[:, i * 16:(i + 1) * 16], v[:, i * 16:(i + 1) * 16])
+        for i in range(n_shards)]
+    comb = ref.decode_attention_combine_ref(parts)
+    np.testing.assert_allclose(np.asarray(comb), np.asarray(full),
+                               rtol=1e-5, atol=1e-6)

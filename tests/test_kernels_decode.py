@@ -1,0 +1,64 @@
+"""W8A8 flash-decode Pallas kernel vs oracle and float attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import w8a8_decode_attention_ref
+from repro.kernels.w8a8_decode import w8a8_decode_attention
+
+
+def _setup(key, b, kvh, rep, hd, S):
+    rng = np.random.default_rng(key)
+    q = jnp.asarray(rng.standard_normal((b, kvh, rep, hd)), jnp.float32)
+    kf = rng.standard_normal((b, S, kvh, hd)).astype(np.float32)
+    vf = rng.standard_normal((b, S, kvh, hd)).astype(np.float32)
+    ks = np.abs(kf).max(-1) / 127.0
+    vs = np.abs(vf).max(-1) / 127.0
+    kq = jnp.asarray(np.round(kf / ks[..., None]), jnp.int8)
+    vq = jnp.asarray(np.round(vf / vs[..., None]), jnp.int8)
+    return q, kq, vq, jnp.asarray(ks), jnp.asarray(vs), kf, vf
+
+
+@pytest.mark.parametrize("b,kvh,rep,hd,S,bs", [
+    (2, 2, 4, 32, 128, 32),
+    (1, 4, 2, 16, 64, 16),
+    (2, 1, 8, 64, 96, 32),
+])
+def test_kernel_matches_oracle(b, kvh, rep, hd, S, bs):
+    q, kq, vq, ks, vs, _, _ = _setup(b * 7, b, kvh, rep, hd, S)
+    for pos in (0, S // 2, S - 1):
+        ref = w8a8_decode_attention_ref(q, kq, vq, ks, vs,
+                                        jnp.int32(pos), bs=bs)
+        pal = w8a8_decode_attention(q, kq, vq, ks, vs, jnp.int32(pos),
+                                    bs=bs, interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_close_to_float_attention():
+    b, kvh, rep, hd, S = 2, 2, 4, 32, 128
+    q, kq, vq, ks, vs, kf, vf = _setup(3, b, kvh, rep, hd, S)
+    pos = jnp.int32(100)
+    pal = w8a8_decode_attention(q, kq, vq, ks, vs, pos, bs=32,
+                                interpret=True)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", q, jnp.asarray(kf)) \
+        * (hd ** -0.5)
+    ki = jnp.arange(S)[None, None, None, :]
+    logits = jnp.where(ki <= pos, logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    outf = jnp.einsum("bgrs,bsgd->bgrd", p, jnp.asarray(vf))
+    rel = float(jnp.max(jnp.abs(pal - outf))
+                / (jnp.max(jnp.abs(outf)) + 1e-9))
+    assert rel < 0.03, rel     # int8 rounding only
+
+
+def test_ops_dispatch_ref_on_cpu():
+    b, kvh, rep, hd, S = 1, 2, 2, 16, 64
+    q, kq, vq, ks, vs, _, _ = _setup(5, b, kvh, rep, hd, S)
+    out = ops.w8a8_decode_attention(q, kq, vq, ks, vs, jnp.int32(10),
+                                    bs=16)
+    assert out.shape == (b, kvh, rep, hd)
+    assert not bool(jnp.any(jnp.isnan(out)))

@@ -1,0 +1,49 @@
+"""Gradient-accumulation microbatching == full-batch gradients.
+
+The dry-run's --microbatch path (HBM fit for 95/100-layer train cells,
+EXPERIMENTS.md §Perf cell E) relies on the loss being a per-token mean:
+mean of micro-gradients == full-batch gradient.  Verified here at smoke
+scale with the same accumulation structure the launcher lowers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models.model import Model
+
+
+def test_microbatch_grads_match_full_batch():
+    cfg = reduced(get_config("phi4-mini-3.8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    b, s, mb = 8, 16, 4
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    loss_full, g_full = jax.value_and_grad(model.loss)(params, batch)
+
+    def split(x):
+        return x.reshape(mb, b // mb, *x.shape[1:])
+    mbatch = jax.tree.map(split, batch)
+
+    def acc_step(carry, micro):
+        gsum, lsum = carry
+        l, g = jax.value_and_grad(model.loss)(params, micro)
+        return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gacc, lacc), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), mbatch)
+    gacc = jax.tree.map(lambda g: g / mb, gacc)
+    lacc = lacc / mb
+
+    assert abs(float(lacc) - float(loss_full)) < 2e-3
+    errs = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a - b_.astype(jnp.float32)))),
+        gacc, g_full)
+    gmax = max(float(jnp.max(jnp.abs(g.astype(jnp.float32))))
+               for g in jax.tree.leaves(g_full))
+    assert max(jax.tree.leaves(errs)) < 2e-2 * max(gmax, 1.0), \
+        sorted(jax.tree.leaves(errs))[-3:]

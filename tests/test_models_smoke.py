@@ -1,0 +1,109 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train
+step on CPU, asserting output shapes + no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.base import SHAPES, reduced
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def _batch(cfg, b=2, s=16, key=0):
+    toks = jax.random.randint(jax.random.key(key), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family in ("vlm", "audio"):
+        batch["ctx"] = jax.random.normal(
+            jax.random.key(key + 1), (b, cfg.n_ctx_tokens, cfg.d_model),
+            jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_no_nans(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits, aux = model.forward(params, batch["tokens"],
+                                ctx=batch.get("ctx"), train=False)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_one_train_step(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = adamw.init(params)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert not bool(jnp.isnan(loss)) and float(loss) > 0
+    gnorm = adamw.global_norm(grads)
+    assert float(gnorm) > 0 and not bool(jnp.isnan(gnorm))
+    new_params, opt, metrics = adamw.update(adamw.AdamWConfig(), grads,
+                                            opt, params)
+    # params actually changed
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, new_params)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_step_shapes(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.init_cache(2, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, caches2 = model.decode_step(params, caches, tok, jnp.int32(0))
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_configs_match_assignment(arch):
+    """The full (non-reduced) configs carry the exact assigned dims."""
+    cfg = get_config(arch)
+    expected = {
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_moe_param_counts_plausible():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    n = cfg.n_params()
+    na = cfg.n_active_params()
+    # total/active derived from the *assigned* config (64e x d_ff 1408):
+    # experts alone are 64*3*2048*1408*48 ~ 26.5B
+    assert 26e9 < n < 30e9, n
+    assert 2e9 < na < 4.5e9, na        # ~3B active (top-6)
+    d = get_config("deepseek-67b")
+    assert 60e9 < d.n_params() < 72e9
+
+
+def test_gemma3_window_pattern():
+    cfg = get_config("gemma3-4b")
+    m = Model(cfg)
+    w = m._windows(4096)
+    import numpy as np
+    w = np.asarray(w)
+    assert (w == cfg.window).sum() == cfg.n_layers - cfg.n_layers // 6
+    assert (w > 1e8).sum() == cfg.n_layers // 6   # global layers

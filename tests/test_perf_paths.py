@@ -1,0 +1,117 @@
+"""Correctness of the §Perf optimized paths: ring-buffer sliding-window
+caches, int8 (W8A8) KV attention, and shard_map expert-parallel MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.models.moe import moe_ffn, moe_ffn_ep
+from repro.parallel.sharding import (activation_sharding,
+                                     default_activation_rules)
+from repro.quant.policy import ExecMode, QuantPolicy
+
+
+def _decode_equals_forward(arch, kv_quant, s=20, tol=5e-2):
+    cfg = reduced(get_config(arch))
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, s), 0, cfg.vocab)
+    full, _ = m.forward(params, toks, train=False)
+    caches = m.init_cache(2, s, kv_quant=kv_quant)
+    outs = []
+    for i in range(s):
+        lg, caches = m.decode_step(params, caches, toks[:, i:i + 1],
+                                   jnp.int32(i))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    err = float(jnp.max(jnp.abs(dec.astype(jnp.float32)
+                                - full.astype(jnp.float32))))
+    rel = err / (float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < tol, (arch, kv_quant, rel)
+
+
+def test_ring_buffer_decode_past_wrap():
+    """gemma3 ring caches wrap (s=20 > window=8) and still match."""
+    _decode_equals_forward("gemma3-4b", kv_quant=False)
+
+
+def test_ring_buffer_decode_int8_kv():
+    _decode_equals_forward("gemma3-4b", kv_quant=True)
+
+
+def test_int8_kv_dense_decode():
+    _decode_equals_forward("starcoder2-7b", kv_quant=True)
+
+
+def test_int8_kv_moe_decode():
+    _decode_equals_forward("moonshot-v1-16b-a3b", kv_quant=True, tol=8e-2)
+
+
+def test_ring_cache_memory_is_window_sized():
+    cfg = reduced(get_config("gemma3-4b"))   # window=8, global_every=2
+    m = Model(cfg)
+    c = m.init_cache(2, 64)
+    assert c["k_local"].shape[2] == cfg.window
+    assert c["k"].shape[2] == 64
+    n_glob = cfg.n_layers // cfg.global_every
+    assert c["k"].shape[0] == n_glob
+    assert c["k_local"].shape[0] == cfg.n_layers - n_glob
+
+
+def test_moe_ep_matches_global_dispatch():
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"),
+                  d_model=16, n_experts=4, top_k=2, d_ff=32)
+    ks = jax.random.split(jax.random.key(0), 4)
+    p = {"router": jax.random.normal(ks[0], (16, 4)) * 0.5,
+         "w_experts_gate": jax.random.normal(ks[1], (4, 16, 32)) * 0.1,
+         "w_experts_in": jax.random.normal(ks[2], (4, 16, 32)) * 0.1,
+         "w_experts_out": jax.random.normal(ks[3], (4, 32, 16)) * 0.1}
+    x = jax.random.normal(jax.random.key(9), (2, 8, 16)) * 0.5
+    policy = QuantPolicy(mode=ExecMode.FP32)
+    ref, aux_ref = moe_ffn(x, p, cfg, policy=policy, train=False,
+                           capacity_factor=4.0)
+    mesh = make_host_mesh()
+    rules = default_activation_rules(mesh, seq_sharded=False)
+    with mesh, activation_sharding(mesh, rules):
+        out, aux = jax.jit(lambda x, p: moe_ffn_ep(
+            x, p, cfg, policy=policy, train=False,
+            capacity_factor=4.0))(x, p)
+        grads = jax.grad(lambda p: moe_ffn_ep(
+            x, p, cfg, policy=policy, train=True,
+            capacity_factor=4.0)[0].sum())(p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    assert abs(float(aux) - float(aux_ref)) < 1e-4
+    assert float(jnp.sum(jnp.abs(grads["w_experts_in"]))) > 0
+
+
+def test_moe_ep_falls_back_without_mesh():
+    """Outside a mesh context the EP path must degrade gracefully."""
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"),
+                  d_model=8, n_experts=2, top_k=1, d_ff=16)
+    ks = jax.random.split(jax.random.key(0), 4)
+    p = {"router": jax.random.normal(ks[0], (8, 2)),
+         "w_experts_gate": jax.random.normal(ks[1], (2, 8, 16)) * 0.1,
+         "w_experts_in": jax.random.normal(ks[2], (2, 8, 16)) * 0.1,
+         "w_experts_out": jax.random.normal(ks[3], (2, 16, 8)) * 0.1}
+    x = jax.random.normal(jax.random.key(1), (1, 4, 8))
+    policy = QuantPolicy(mode=ExecMode.FP32)
+    out, _ = moe_ffn_ep(x, p, cfg, policy=policy, train=False)
+    ref, _ = moe_ffn(x, p, cfg, policy=policy, train=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_weight_only_qat_policy():
+    import dataclasses
+    policy = dataclasses.replace(QuantPolicy(mode=ExecMode.W8A8),
+                                 qat_acts=False)
+    from repro.quant.qlinear import qat_act
+    x = jnp.linspace(-1, 1, 32)
+    np.testing.assert_array_equal(np.asarray(qat_act(x, policy)),
+                                  np.asarray(x))

@@ -1,0 +1,73 @@
+"""The paper's PPA models (Fig. 2): polynomial + k-fold CV fits."""
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import design_space
+from repro.core.pe import PEType
+from repro.core.ppa_model import (TARGETS, fit_poly_model, fit_ppa_suite,
+                                  kfold_indices, poly_expand)
+from repro.core.synthesis import synthesize
+
+
+@pytest.fixture(scope="module")
+def suite_stats():
+    cfgs_by = {t: [c for c in design_space() if c.pe_type == t]
+               for t in PEType}
+    return fit_ppa_suite(cfgs_by)
+
+
+def test_fig2_high_correlation(suite_stats):
+    """Fig. 2: 'the proposed polynomial model agrees closely with the
+    actual values extracted from the synthesis tools'."""
+    _, stats = suite_stats
+    for key, s in stats.items():
+        assert s["r2"] > 0.97, (key, s)
+        assert s["mape"] < 0.10, (key, s)
+
+
+def test_model_selection_picks_valid_degree(suite_stats):
+    suite, stats = suite_stats
+    for key, s in stats.items():
+        assert s["degree"] in (1, 2, 3)
+
+
+def test_predict_unseen_config(suite_stats):
+    suite, _ = suite_stats
+    from repro.core.accelerator import AcceleratorConfig
+    # interpolation (inside the sweep's hull); extrapolating num_pes far
+    # outside the grid degrades throughput accuracy (documented limit)
+    cfg = AcceleratorConfig(pe_type=PEType.LIGHTPE1, pe_rows=12, pe_cols=16,
+                            glb_kb=192, dram_bw_gbps=10.0)
+    pred = suite.predict(cfg)
+    true = synthesize(cfg).as_dict()
+    for t in TARGETS:
+        rel = abs(pred[t] - true[t]) / true[t]
+        assert rel < 0.25, (t, pred[t], true[t])
+
+
+def test_poly_expand_shapes():
+    x = np.random.default_rng(0).standard_normal((10, 3))
+    phi1 = poly_expand(x, 1)
+    assert phi1.shape == (10, 4)
+    phi2 = poly_expand(x, 2)
+    assert phi2.shape == (10, 1 + 3 + 6)
+
+
+def test_kfold_covers_everything():
+    seen = set()
+    for tr, va in kfold_indices(23, 5):
+        assert set(tr) & set(va) == set()
+        seen |= set(va)
+    assert seen == set(range(23))
+
+
+def test_fit_poly_model_recovers_polynomial():
+    rng = np.random.default_rng(1)
+    from repro.core.accelerator import AcceleratorConfig
+    cfgs = [AcceleratorConfig(pe_rows=r, pe_cols=c, glb_kb=g)
+            for r in (8, 12, 16, 24) for c in (8, 14, 16) for g in (64, 256)]
+    y = np.array([c.num_pes ** 2 * 1e-4 + c.glb_kb for c in cfgs])
+    m = fit_poly_model(cfgs, y, log_target=False)
+    pred = m.predict(cfgs)
+    assert np.corrcoef(pred, y)[0, 1] > 0.999

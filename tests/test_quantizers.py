@@ -1,0 +1,91 @@
+"""Property-based tests for the quantization library (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.quant import quantizers as qz
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def finite_arrays(shape):
+    return arrays(np.float32, shape,
+                  elements=st.floats(-100, 100, width=32,
+                                     allow_nan=False, allow_infinity=False))
+
+
+@given(x=finite_arrays((8, 16)))
+@settings(**SETTINGS)
+def test_int8_qdq_error_bound(x):
+    """|x - qdq(x)| <= scale/2 elementwise (plus clip at the edges)."""
+    out = qz.quantize_dequantize_int(jnp.asarray(x), 8)
+    scale = np.asarray(qz.int_scale(jnp.asarray(x), 8))
+    assert np.all(np.abs(np.asarray(out) - x) <= scale / 2 + 1e-6)
+
+
+@given(x=finite_arrays((4, 8)))
+@settings(**SETTINGS)
+def test_int8_qdq_idempotent(x):
+    once = qz.quantize_dequantize_int(jnp.asarray(x), 8)
+    twice = qz.quantize_dequantize_int(once, 8)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(x=finite_arrays((8, 8)))
+@settings(**SETTINGS)
+def test_pow2_relative_error(x):
+    """pow2 rounding: within range, relative error <= 2^0.5-1 ~ 41%."""
+    xj = jnp.asarray(x)
+    out = np.asarray(qz.quantize_dequantize_pow2(xj))
+    scale = np.asarray(qz.pow2_scale(xj))
+    lo = scale * 2.0 ** (-qz.POW2_EXP_BIAS)
+    in_range = np.abs(x) >= lo
+    rel = np.abs(out - x) / np.maximum(np.abs(x), 1e-12)
+    assert np.all(rel[in_range] <= 0.5 + 1e-6)
+
+
+@given(x=finite_arrays((8, 8)))
+@settings(**SETTINGS)
+def test_pow2_2term_never_worse(x):
+    xj = jnp.asarray(x)
+    one = np.asarray(qz.quantize_dequantize_pow2(xj))
+    two = np.asarray(qz.quantize_dequantize_pow2_2term(xj))
+    assert np.all(np.abs(two - x) <= np.abs(one - x) + 1e-6)
+
+
+@given(codes=arrays(np.int8, (6, 8), elements=st.integers(0, 15)))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(codes):
+    packed = qz.pack_int4(jnp.asarray(codes))
+    assert packed.shape == (6, 4)
+    out = np.asarray(qz.unpack_int4(packed))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_pow2_encode_decode_exact_powers():
+    scale = jnp.float32(1.0)
+    vals = jnp.array([1.0, 0.5, 0.25, -1.0, -0.125], jnp.float32)
+    codes = qz.pow2_encode(vals, scale)
+    out = qz.pow2_decode(codes, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals))
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(qz.fake_quant_int(x, 8)))(
+        jnp.linspace(-1, 1, 16))
+    np.testing.assert_allclose(np.asarray(g), np.ones(16), atol=1e-6)
+
+
+def test_per_channel_scales_shape():
+    w = jax.random.normal(jax.random.key(0), (32, 16))
+    s = qz.int_scale(w, 8, axis=0)
+    assert s.shape == (1, 16)
+    q = qz.quantize_int(w, s, 8)
+    assert q.dtype == jnp.int8
+    back = qz.dequantize_int(q, s)
+    assert float(jnp.max(jnp.abs(back - w))) <= float(jnp.max(s)) / 2 + 1e-6

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the full system."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def test_training_improves_loss():
+    losses = train("gemma3-4b", steps=12, smoke=True, seq_len=32, batch=4)
+    first = np.mean([l for _, l in losses[:3]])
+    last = np.mean([l for _, l in losses[-3:]])
+    assert last < first, (first, last)
+
+
+def test_training_with_restart_resumes(tmp_path):
+    losses = train("starcoder2-7b", steps=10, smoke=True, seq_len=16,
+                   batch=2, ckpt_dir=str(tmp_path), ckpt_every=3,
+                   fail_at={5: 1})
+    steps = [s for s, _ in losses]
+    assert steps[-1] == 9
+    # step 5 ran twice (once failed before executing, once after restart)
+    assert len([s for s in steps if s == 4]) >= 1
+
+
+def test_training_with_grad_compression():
+    losses = train("phi4-mini-3.8b", steps=8, smoke=True, seq_len=16,
+                   batch=2, grad_compression=True)
+    assert losses[-1][1] < losses[0][1] * 1.5   # stable, no blowup
+    assert not np.isnan(losses[-1][1])
+
+
+def test_serving_generates_batched_tokens():
+    res = serve("gemma3-4b", batch=3, prompt_len=8, gen=6, smoke=True)
+    assert res["tokens"].shape == (3, 6)
+    assert res["tok_per_s"] > 0
+
+
+def test_quantized_serving_matches_float_mostly():
+    """LightPE-2 deployment: int8 weights generate the same continuation
+    as float weights for a strong-signal prompt (greedy decode)."""
+    a = serve("starcoder2-7b", batch=2, prompt_len=6, gen=5, smoke=True,
+              quantize=False, seed=3)
+    b = serve("starcoder2-7b", batch=2, prompt_len=6, gen=5, smoke=True,
+              quantize=True, seed=3)
+    agree = float(np.mean(np.asarray(a["tokens"]) == np.asarray(b["tokens"])))
+    assert agree >= 0.5, agree   # random-init logits are nearly flat
+
+
+def test_moe_serving():
+    res = serve("moonshot-v1-16b-a3b", batch=2, prompt_len=4, gen=4,
+                smoke=True)
+    assert res["tokens"].shape == (2, 4)
+
+
+def test_vlm_serving_with_ctx():
+    res = serve("llama-3.2-vision-90b", batch=2, prompt_len=4, gen=3,
+                smoke=True)
+    assert res["tokens"].shape == (2, 3)
+
+
+def test_data_pipeline_determinism():
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    d1 = SyntheticLM(DataConfig(vocab=128, seq_len=16, global_batch=4))
+    d2 = SyntheticLM(DataConfig(vocab=128, seq_len=16, global_batch=4))
+    b1, b2 = d1.batch(7), d2.batch(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
