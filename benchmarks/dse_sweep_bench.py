@@ -1,0 +1,138 @@
+"""DSE sweep engine benchmark: scalar loop vs vectorized batched engine.
+
+Times `explore()` over the full paper design space on a paper workload with
+both engines, checks the headline ratios are identical, and emits
+``BENCH_dse_sweep.json`` (configs/sec + speedups) so the perf trajectory is
+tracked across PRs.
+
+  PYTHONPATH=src python benchmarks/dse_sweep_bench.py [--quick]
+      [--workload vgg16] [--out BENCH_dse_sweep.json]
+
+``--quick`` shrinks the design space and repetitions — the CI smoke mode
+that exercises the engine without holding the queue.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import pathlib
+import time
+
+from repro.core.accelerator import design_space
+from repro.core.dse import explore, explore_many, explore_scalar
+from repro.core.synthesis import clear_synthesis_cache, synthesis_cache_stats
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_dse_sweep.json"
+
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench(workload: str = "vgg16", quick: bool = False) -> dict:
+    configs = list(design_space())
+    if quick:
+        configs = list(itertools.islice(configs, 0, None, 4))  # every 4th
+    n = len(configs)
+    reps_scalar = 1 if quick else 3
+    reps_batched = 3 if quick else 10
+
+    scalar_s = _best_of(lambda: explore_scalar(workload, configs),
+                        reps_scalar)
+
+    def cold():
+        clear_synthesis_cache()
+        explore(workload, configs)
+
+    cold_s = _best_of(cold, reps_batched)
+    warm_s = _best_of(lambda: explore(workload, configs), reps_batched)
+
+    # identical results is part of the contract, not just speed
+    r_scalar = explore_scalar(workload, configs).headline_ratios()
+    r_batched = explore(workload, configs).headline_ratios()
+    identical = r_scalar == r_batched
+
+    # multi-workload amortization: one synthesis pass, three mapping passes
+    wls = ("vgg16", "resnet34", "resnet50")
+    clear_synthesis_cache()
+    t0 = time.perf_counter()
+    explore_many(wls, configs)
+    many_s = time.perf_counter() - t0
+
+    return {
+        "workload": workload,
+        "quick": quick,
+        "n_configs": n,
+        "scalar_s": scalar_s,
+        "scalar_configs_per_s": n / scalar_s,
+        "batched_cold_s": cold_s,
+        "batched_cold_configs_per_s": n / cold_s,
+        "batched_warm_s": warm_s,
+        "batched_warm_configs_per_s": n / warm_s,
+        "speedup_cold": scalar_s / cold_s,
+        "speedup_warm": scalar_s / warm_s,
+        "explore_many_3wl_s": many_s,
+        "explore_many_configs_per_s": 3 * n / many_s,
+        "headline_ratios_identical": identical,
+        "synthesis_cache": synthesis_cache_stats(),
+    }
+
+
+def run():
+    """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
+    r = bench(quick=True)
+    n = r["n_configs"]
+    return [
+        ("dse_sweep/scalar", r["scalar_s"] / n * 1e6,
+         f"configs_per_s={r['scalar_configs_per_s']:.0f}"),
+        ("dse_sweep/batched_cold", r["batched_cold_s"] / n * 1e6,
+         f"speedup={r['speedup_cold']:.1f}x"),
+        ("dse_sweep/batched_warm", r["batched_warm_s"] / n * 1e6,
+         f"speedup={r['speedup_warm']:.1f}x"),
+        ("dse_sweep/identical", 0.0,
+         str(r["headline_ratios_identical"])),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced space + reps (CI smoke mode)")
+    ap.add_argument("--workload", default="vgg16")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    r = bench(workload=args.workload, quick=args.quick)
+    args.out.write_text(json.dumps(r, indent=2, sort_keys=True) + "\n")
+
+    print(f"design points: {r['n_configs']}  workload: {r['workload']}"
+          f"{'  (quick)' if r['quick'] else ''}")
+    print(f"scalar        {r['scalar_s'] * 1e3:8.1f} ms  "
+          f"{r['scalar_configs_per_s']:9.0f} configs/s")
+    print(f"batched cold  {r['batched_cold_s'] * 1e3:8.1f} ms  "
+          f"{r['batched_cold_configs_per_s']:9.0f} configs/s  "
+          f"({r['speedup_cold']:.1f}x)")
+    print(f"batched warm  {r['batched_warm_s'] * 1e3:8.1f} ms  "
+          f"{r['batched_warm_configs_per_s']:9.0f} configs/s  "
+          f"({r['speedup_warm']:.1f}x)")
+    print(f"explore_many  {r['explore_many_3wl_s'] * 1e3:8.1f} ms  "
+          f"3 workloads, {r['explore_many_configs_per_s']:.0f} configs/s")
+    print(f"headline ratios identical: {r['headline_ratios_identical']}")
+    print(f"wrote {args.out}")
+    if not r["headline_ratios_identical"]:
+        raise SystemExit("batched engine diverged from scalar reference")
+    if not r["quick"] and r["speedup_cold"] < 10.0:
+        raise SystemExit(
+            f"speedup gate failed: {r['speedup_cold']:.1f}x < 10x")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,22 +3,28 @@
 Reports, for VGG-16 / ResNet-34 / ResNet-50: the normalized ratios of the
 best LightPE-1/LightPE-2 configs vs the best INT16 config and INT16 vs
 FP32 (paper: 4.9x/4.9x, 4.1x/4.2x, 1.7x/1.4x), plus sweep timing.
+
+Sweeps all three workloads with the batched engine's ``explore_many`` (one
+synthesis pass shared across workloads); the scalar path is covered by
+``benchmarks/dse_sweep_bench.py``.
 """
 
 import time
 
 import numpy as np
 
-from repro.core.dse import explore, pareto_front
+from repro.core.dse import explore_many, pareto_front
 
 
 def run():
     rows = []
     agg = {}
-    for wl in ("vgg16", "resnet34", "resnet50"):
-        t0 = time.perf_counter()
-        res = explore(wl)
-        dt = time.perf_counter() - t0
+    wls = ("vgg16", "resnet34", "resnet50")
+    t0 = time.perf_counter()
+    results = explore_many(wls)
+    dt_all = time.perf_counter() - t0
+    for wl in wls:
+        res = results[wl]
         n = len(res.points)
         r = res.headline_ratios()
         for k, v in r.items():
@@ -26,8 +32,8 @@ def run():
             agg.setdefault(k, []).append(v)
         front = pareto_front(res.points)
         rows.append((f"dse/{wl}/pareto_size", 0.0, str(len(front))))
-        rows.append((f"dse/{wl}/sweep", dt / n * 1e6,
-                     f"us_per_design_point(n={n})"))
+    rows.append(("dse/sweep_3wl_batched", dt_all / (3 * n) * 1e6,
+                 f"us_per_design_point(n={3 * n})"))
     paper = {"lightpe1_perf_per_area_vs_int16": 4.9,
              "lightpe1_energy_vs_int16": 4.9,
              "lightpe2_perf_per_area_vs_int16": 4.1,

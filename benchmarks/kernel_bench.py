@@ -62,4 +62,21 @@ def run():
                     impl="interpret", bm=32, bn=32, bk=32).block_until_ready()
     rows.append(("kernel/w8a8_pallas_interpret_64",
                  (time.perf_counter() - t0) * 1e6, "validation_path"))
+
+    # the batched DSE array kernel (configs x layers in fused numpy ops)
+    from repro.core.accelerator import design_space
+    from repro.core.dse_batch import sweep_workload
+    from repro.core.synthesis import synthesize_many
+    from repro.core.workloads import get_workload
+    cfgs = tuple(design_space())
+    wl = get_workload("vgg16")
+    reports = synthesize_many(cfgs)        # exclude synthesis: mapping only
+    sweep_workload(wl, cfgs, reports)      # warm
+    t0 = time.perf_counter()
+    iters = 10
+    for _ in range(iters):
+        sweep_workload(wl, cfgs, reports)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append(("kernel/dse_batched_map_720cfg", us,
+                 f"configs_per_s={len(cfgs) / us * 1e6:.0f}"))
     return rows

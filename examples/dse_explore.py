@@ -1,18 +1,28 @@
 """The paper's headline experiment (Figs. 3-5): design-space exploration
 over PE types on VGG-16, normalized against the best INT16 config.
 
+Runs on the vectorized batched sweep engine (all configs x all layers as
+fused array ops), then demonstrates the incremental-sweep API by widening
+the design space without re-evaluating known points.
+
   PYTHONPATH=src python examples/dse_explore.py [workload]
 """
 import sys
+import time
 
-from repro.core.dse import explore, pareto_front
+from repro.core.accelerator import design_space
+from repro.core.dse import IncrementalSweep, explore, pareto_front
 from repro.core.pe import PEType
+from repro.core.synthesis import synthesis_cache_stats
 
 
 def main():
     wl = sys.argv[1] if len(sys.argv) > 1 else "vgg16"
-    res = explore(wl)
-    print(f"workload={wl}  design points={len(res.points)}")
+    t0 = time.perf_counter()
+    res = explore(wl)                      # batched engine (default)
+    dt = time.perf_counter() - t0
+    print(f"workload={wl}  design points={len(res.points)}  "
+          f"sweep={dt * 1e3:.1f} ms (batched engine)")
     print("\nbest config per PE type (perf/area anchor = best INT16):")
     anchor = res.best_perf_per_area(PEType.INT16)
     for t in PEType:
@@ -30,6 +40,19 @@ def main():
     for p in front[:10]:
         print(f"  {p.config.pe_type.value:9s} perf/area="
               f"{p.perf_per_area:8.1f} energy={p.energy_j * 1e3:7.3f} mJ")
+
+    # --- incremental sweep: widen the space, pay only for the new points ---
+    sweep = IncrementalSweep(wl, design_space())
+    t0 = time.perf_counter()
+    added = sweep.extend(design_space(glb_kbs=(1024,)))   # new GLB column
+    dt = time.perf_counter() - t0
+    stats = synthesis_cache_stats()
+    print(f"\nincremental extend: +{added} new points in {dt * 1e3:.1f} ms "
+          f"(sweep now {len(sweep)}; synthesis cache: "
+          f"{stats['hits']} hits / {stats['misses']} misses)")
+    r2 = sweep.result().headline_ratios()
+    print(f"  lightpe1 perf/area vs int16 on widened space: "
+          f"{r2['lightpe1_perf_per_area_vs_int16']:.2f}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator
+from typing import Iterator, Sequence
+
+import numpy as np
 
 from repro.core.pe import PEType, PESpec, pe_spec
 
@@ -75,6 +77,51 @@ class AcceleratorConfig:
             "act_bits": float(s.act_bits),
             "weight_bits": float(s.weight_bits),
         }
+
+
+def configs_to_soa(
+        configs: Sequence[AcceleratorConfig]) -> dict[str, np.ndarray]:
+    """Struct-of-arrays view of a config batch for the vectorized sweep.
+
+    One array per structural/PE-derived field across all N design points —
+    the input format of :mod:`repro.core.dse_batch`.
+    """
+    from repro.core.pe import _P_PE_LEAK_UW, _SPECS
+    i8, f8 = np.int64, np.float64
+    type_idx = {t: i for i, t in enumerate(PEType)}
+    # one pass over the batch; per-PE-type constants come from small lookup
+    # tables gathered by type index (no per-config spec resolution)
+    rows = np.array(
+        [(c.pe_rows, c.pe_cols, c.ifmap_spad, c.filter_spad, c.psum_spad,
+          c.glb_kb, type_idx[c.pe_type]) for c in configs], dtype=i8)
+    rows = rows.reshape(-1, 7)       # keep 2-D for the empty batch
+    ti = rows[:, 6]
+    specs = [_SPECS[t] for t in PEType]
+    soa = {
+        "pe_rows": rows[:, 0], "pe_cols": rows[:, 1],
+        "ifmap_spad": rows[:, 2], "filter_spad": rows[:, 3],
+        "psum_spad": rows[:, 4], "glb_kb": rows[:, 5],
+        "glb_bits": rows[:, 5] * (1024 * 8),
+        "num_pes": rows[:, 0] * rows[:, 1],
+        "dram_bw_gbps": np.array([c.dram_bw_gbps for c in configs], dtype=f8),
+        "clock_cap": np.array([np.inf if c.clock_ghz is None else c.clock_ghz
+                               for c in configs], dtype=f8),
+        "act_bits": np.array([s.act_bits for s in specs], dtype=i8)[ti],
+        "weight_bits": np.array([s.weight_bits for s in specs],
+                                dtype=i8)[ti],
+        "psum_bits": np.array([s.psum_bits for s in specs], dtype=i8)[ti],
+        "mac_energy_pj": np.array([s.mac_energy_pj for s in specs],
+                                  dtype=f8)[ti],
+        "mac_area_um2": np.array([s.mac_area_um2 for s in specs],
+                                 dtype=f8)[ti],
+        "max_clock_ghz": np.array([s.max_clock_ghz for s in specs],
+                                  dtype=f8)[ti],
+        "leak_uw": np.array([_P_PE_LEAK_UW[t] for t in PEType], dtype=f8)[ti],
+    }
+    soa["spad_bits"] = (soa["ifmap_spad"] * soa["act_bits"]
+                        + soa["filter_spad"] * soa["weight_bits"]
+                        + soa["psum_spad"] * soa["psum_bits"])
+    return soa
 
 
 def design_space(

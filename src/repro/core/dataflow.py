@@ -170,17 +170,23 @@ def map_layer(layer: ConvLayer, cfg: AcceleratorConfig,
     )
 
 
+def leakage_mw(cfg: AcceleratorConfig) -> float:
+    """Static power of one design point (PE leakage + GLB leakage), shared
+    by the scalar path here and the batched engine in dse_batch."""
+    from repro.core.pe import _P_PE_LEAK_UW
+    return cfg.num_pes * _P_PE_LEAK_UW[cfg.pe_type] * 1e-3 \
+        + 0.002 * cfg.glb_kb
+
+
 def run_workload(workload: Workload, cfg: AcceleratorConfig,
                  report=None) -> WorkloadResult:
     """Evaluate a workload on a design point (synthesis report optional)."""
     if report is None:
         from repro.core.synthesis import synthesize
         report = synthesize(cfg)
-    from repro.core.pe import _P_PE_LEAK_UW
-    leakage_mw = cfg.num_pes * _P_PE_LEAK_UW[cfg.pe_type] * 1e-3 \
-        + 0.002 * cfg.glb_kb
+    leak = leakage_mw(cfg)
     layers = tuple(
-        map_layer(l, cfg, report.clock_ghz, report.area_mm2, leakage_mw)
+        map_layer(l, cfg, report.clock_ghz, report.area_mm2, leak)
         for l in workload.layers)
     return WorkloadResult(
         workload=workload.name, config_name=cfg.name(), layers=layers,

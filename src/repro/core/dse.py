@@ -4,6 +4,19 @@ Sweeps the QAPPA design space, evaluates each design point on a workload via
 the row-stationary dataflow model, and reports normalized
 performance-per-area vs normalized energy with respect to the *best INT16
 configuration* (the paper's anchor).  Also extracts Pareto frontiers.
+
+Two engines produce identical results:
+
+* ``engine="batched"`` (default) — the vectorized struct-of-arrays sweep in
+  :mod:`repro.core.dse_batch`: all configs x all layers in a handful of
+  fused array ops, with a synthesis-report cache so re-sweeps (new
+  workloads, extended spaces) skip the synthesis flow entirely.
+* ``engine="scalar"`` — the original O(configs x layers) Python loop, kept
+  as the bit-exact reference the batched engine is tested against.
+
+``explore_many`` amortizes synthesis + SoA conversion across workloads, and
+:class:`IncrementalSweep` lets a sweep be resumed/extended without
+re-evaluating known design points.
 """
 
 from __future__ import annotations
@@ -11,17 +24,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Sequence
 
-from repro.core.accelerator import AcceleratorConfig, design_space
+import numpy as np
+
+from repro.core.accelerator import (AcceleratorConfig, configs_to_soa,
+                                    design_space)
 from repro.core.dataflow import WorkloadResult, run_workload
+from repro.core.dse_batch import pareto_mask, sweep_workload
 from repro.core.pe import PEType
-from repro.core.synthesis import synthesize
+from repro.core.synthesis import config_hash, synthesize_cached, synthesize_many
 from repro.core.workloads import Workload, get_workload
 
 
 @dataclasses.dataclass(frozen=True)
 class DSEPoint:
     config: AcceleratorConfig
-    result: WorkloadResult
+    result: WorkloadResult  # or a BatchedWorkloadResult view (duck-typed)
 
     @property
     def perf_per_area(self) -> float:
@@ -86,8 +103,8 @@ class DSEResult:
         }
 
 
-def pareto_front(points: Sequence[DSEPoint]) -> list[DSEPoint]:
-    """Non-dominated set for (maximize perf/area, minimize energy)."""
+def pareto_front_scalar(points: Sequence[DSEPoint]) -> list[DSEPoint]:
+    """O(n^2) reference: non-dominated set for (max perf/area, min energy)."""
     front: list[DSEPoint] = []
     for p in points:
         dominated = any(
@@ -100,15 +117,131 @@ def pareto_front(points: Sequence[DSEPoint]) -> list[DSEPoint]:
     return sorted(front, key=lambda p: p.energy_j)
 
 
-def explore(workload: Workload | str,
-            configs: Iterable[AcceleratorConfig] | None = None) -> DSEResult:
-    if isinstance(workload, str):
-        workload = get_workload(workload)
+def pareto_front(points: Sequence[DSEPoint]) -> list[DSEPoint]:
+    """Non-dominated set for (maximize perf/area, minimize energy).
+
+    Vectorized dominance test (:func:`repro.core.dse_batch.pareto_mask`);
+    identical output to :func:`pareto_front_scalar`.
+    """
+    if not points:
+        return []
+    perf = np.array([p.perf_per_area for p in points], dtype=np.float64)
+    energy = np.array([p.energy_j for p in points], dtype=np.float64)
+    keep = pareto_mask(perf, energy)
+    front = [p for p, k in zip(points, keep) if k]
+    return sorted(front, key=lambda p: p.energy_j)
+
+
+def _resolve(workload: Workload | str) -> Workload:
+    return get_workload(workload) if isinstance(workload, str) else workload
+
+
+def explore_scalar(workload: Workload | str,
+                   configs: Iterable[AcceleratorConfig] | None = None,
+                   use_cache: bool = False) -> DSEResult:
+    """The original serial sweep — reference path for the batched engine."""
+    workload = _resolve(workload)
     if configs is None:
         configs = design_space()
     points = []
     for cfg in configs:
-        rep = synthesize(cfg)
+        rep = synthesize_cached(cfg) if use_cache else None
         points.append(DSEPoint(config=cfg,
                                result=run_workload(workload, cfg, rep)))
     return DSEResult(workload=workload.name, points=points)
+
+
+def explore(workload: Workload | str,
+            configs: Iterable[AcceleratorConfig] | None = None,
+            *,
+            engine: str = "batched",
+            use_cache: bool = True,
+            backend: str = "numpy") -> DSEResult:
+    """Sweep ``configs`` (default: the full paper design space) on a workload.
+
+    ``engine="batched"`` evaluates everything as fused array ops;
+    ``engine="scalar"`` runs the legacy per-config Python loop.  Both return
+    bit-identical :class:`DSEResult`.
+    """
+    if engine == "scalar":
+        return explore_scalar(workload, configs, use_cache=use_cache)
+    if engine != "batched":
+        raise ValueError(f"unknown DSE engine: {engine!r}")
+    workload = _resolve(workload)
+    cfgs = tuple(design_space() if configs is None else configs)
+    sweep = sweep_workload(workload, cfgs, use_cache=use_cache,
+                           backend=backend)
+    points = [DSEPoint(config=c, result=sweep.result_view(i))
+              for i, c in enumerate(cfgs)]
+    return DSEResult(workload=workload.name, points=points)
+
+
+def explore_many(workloads: Sequence[Workload | str],
+                 configs: Iterable[AcceleratorConfig] | None = None,
+                 *,
+                 use_cache: bool = True,
+                 backend: str = "numpy") -> dict[str, DSEResult]:
+    """Batched multi-workload sweep.
+
+    Synthesis and the struct-of-arrays conversion run *once* for the config
+    batch and are shared across all workloads — sweeping the paper's three
+    models costs one synthesis pass plus three array-kernel evaluations.
+    """
+    cfgs = tuple(design_space() if configs is None else configs)
+    soa = configs_to_soa(cfgs)
+    reports = synthesize_many(cfgs, use_cache=use_cache, soa=soa)
+    out: dict[str, DSEResult] = {}
+    for wl in workloads:
+        wl = _resolve(wl)
+        sweep = sweep_workload(wl, cfgs, reports, soa=soa, backend=backend)
+        out[wl.name] = DSEResult(
+            workload=wl.name,
+            points=[DSEPoint(config=c, result=sweep.result_view(i))
+                    for i, c in enumerate(cfgs)])
+    return out
+
+
+class IncrementalSweep:
+    """Resumable/extensible DSE sweep over one workload.
+
+    Each :meth:`extend` call evaluates only configs not seen before (keyed
+    by config hash) in one batched pass; :meth:`result` returns the
+    accumulated :class:`DSEResult`.  Combined with the synthesis cache this
+    makes "widen the design space and re-plot" interactive.
+    """
+
+    def __init__(self, workload: Workload | str,
+                 configs: Iterable[AcceleratorConfig] | None = None,
+                 *, backend: str = "numpy"):
+        self.workload = _resolve(workload)
+        self.backend = backend
+        self._points: dict[str, DSEPoint] = {}
+        if configs is not None:
+            self.extend(configs)
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def extend(self, configs: Iterable[AcceleratorConfig]) -> int:
+        """Evaluate any new configs; returns how many were actually new."""
+        fresh: list[AcceleratorConfig] = []
+        keys: list[str] = []
+        seen_now = set()
+        for cfg in configs:
+            key = config_hash(cfg)
+            if key in self._points or key in seen_now:
+                continue
+            seen_now.add(key)
+            fresh.append(cfg)
+            keys.append(key)
+        if fresh:
+            sweep = sweep_workload(self.workload, fresh,
+                                   backend=self.backend)
+            for i, (cfg, key) in enumerate(zip(fresh, keys)):
+                self._points[key] = DSEPoint(config=cfg,
+                                             result=sweep.result_view(i))
+        return len(fresh)
+
+    def result(self) -> DSEResult:
+        return DSEResult(workload=self.workload.name,
+                         points=list(self._points.values()))

@@ -1,0 +1,346 @@
+"""Vectorized batched DSE sweep engine.
+
+The scalar path in :mod:`repro.core.dse` evaluates ``O(configs x layers)``
+Python calls per sweep.  This module evaluates the *whole* design space at
+once: the config batch becomes struct-of-arrays form (one array per field
+across all N design points, :func:`repro.core.accelerator.configs_to_soa`),
+the workload becomes one array per layer field, and the row-stationary
+mapping from :mod:`repro.core.dataflow` is re-expressed as broadcasted
+``(N, L)`` array expressions.
+
+The kernel is written against an ``xp`` array namespace so it runs on NumPy
+(default — all shapes here are static, so NumPy is both fastest to dispatch
+and bit-exact against the scalar reference) or on ``jax.numpy`` under
+``jax.jit`` when 64-bit mode is enabled (``backend="jax"``).
+
+Every arithmetic expression mirrors :func:`repro.core.dataflow.map_layer`
+op-for-op, in the same order, so per-layer and aggregate results bit-match
+the scalar path (asserted by ``tests/test_dse_batch.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.dataflow import LayerResult
+from repro.core.pe import rf_access_energy_pj, sram_access_energy_pj
+from repro.core.synthesis import SynthesisReport, synthesize_many
+from repro.core.workloads import Workload
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadBatch:
+    """Struct-of-arrays view of a workload: one int64 array per layer field,
+    shape ``(L,)``."""
+
+    name: str
+    layer_names: tuple[str, ...]
+    arrays: dict[str, np.ndarray]
+
+    @classmethod
+    def from_workload(cls, wl: Workload) -> "WorkloadBatch":
+        i8 = np.int64
+        ls = wl.layers
+        arrays = {
+            "r": np.array([l.r for l in ls], dtype=i8),
+            "s": np.array([l.s for l in ls], dtype=i8),
+            "e": np.array([l.e for l in ls], dtype=i8),
+            "f": np.array([l.f for l in ls], dtype=i8),
+            "c": np.array([l.c for l in ls], dtype=i8),
+            "k": np.array([l.k for l in ls], dtype=i8),
+            "h": np.array([l.h for l in ls], dtype=i8),
+            "w": np.array([l.w for l in ls], dtype=i8),
+            "batch": np.array([l.batch for l in ls], dtype=i8),
+            "macs": np.array([l.macs for l in ls], dtype=i8),
+        }
+        return cls(name=wl.name, layer_names=tuple(l.name for l in ls),
+                   arrays=arrays)
+
+    def __len__(self) -> int:
+        return len(self.layer_names)
+
+
+def _sweep_kernel(xp, cfg: dict, lay: dict) -> dict:
+    """All-configs x all-layers row-stationary mapping + energy model.
+
+    ``cfg`` holds ``(N, 1)`` arrays, ``lay`` holds ``(1, L)`` arrays; every
+    expression broadcasts to ``(N, L)``.  Mirrors ``map_layer`` exactly.
+    """
+    r, e, f_, ss = lay["r"], lay["e"], lay["f"], lay["s"]
+    c, k, n = lay["c"], lay["k"], lay["batch"]
+
+    # ---- spatial mapping ---------------------------------------------------
+    sets_fit = xp.maximum(1, cfg["pe_rows"] // r)
+    c_simult = xp.minimum(c, sets_fit)
+    k_simult = xp.maximum(1, sets_fit // c_simult)
+    fit_horz = xp.minimum(e, cfg["pe_cols"])
+    n_e_groups = _ceil_div(e, fit_horz)
+    n_c_groups = _ceil_div(c, c_simult)
+    n_k_groups = _ceil_div(k, k_simult)
+
+    passes = n * n_e_groups * n_c_groups * n_k_groups
+    compute_cycles = passes * ss * f_
+    macs = lay["macs"]
+    utilization = macs / xp.maximum(1, compute_cycles * cfg["num_pes"])
+
+    # ---- element / byte counts (quantization-aware) -------------------------
+    ab, wb = cfg["act_bits"], cfg["weight_bits"]
+    ifmap_elems = n * c * lay["h"] * lay["w"]
+    weight_elems = k * c * r * ss
+    ofmap_elems = n * k * e * f_
+    ifmap_bytes = ifmap_elems * ab // 8
+    weight_bytes = weight_elems * wb // 8
+    ofmap_bytes = ofmap_elems * ab // 8
+
+    glb_half = cfg["glb_kb"] * 1024 // 2
+    filt_bytes_one = xp.maximum(1, c * r * ss * wb // 8)
+    k_fit_glb = xp.maximum(1, glb_half // filt_bytes_one)
+    n_k_glb = _ceil_div(k, k_fit_glb)
+    ifmap_restream = xp.where(ifmap_bytes <= glb_half, 1, n_k_glb)
+    ifmap_dram = ifmap_bytes * ifmap_restream
+    dram_bytes = ifmap_dram + weight_bytes + ofmap_bytes
+
+    dram_elems = ifmap_elems * ifmap_restream + weight_elems + ofmap_elems
+    k_res = xp.maximum(1, cfg["filter_spad"] // xp.maximum(1, ss))
+    glb_ifmap = ifmap_elems * _ceil_div(n_k_groups, k_res)
+    w_res = xp.minimum(n_e_groups,
+                       xp.maximum(1, cfg["filter_spad"] // xp.maximum(1, ss)))
+    glb_weight = weight_elems * xp.maximum(1, n_e_groups // w_res)
+    psum_strip = f_
+    spill = xp.where(cfg["psum_spad"] >= psum_strip, 0, n_c_groups - 1)
+    glb_psum = 2 * ofmap_elems * xp.maximum(0, spill)
+    glb_elems = 2 * dram_elems + glb_ifmap + glb_weight + glb_psum
+    glb_bytes = glb_elems * ab // 8
+
+    # ---- stalls -------------------------------------------------------------
+    clock_ghz = cfg["clock_ghz"]
+    bw_bytes_per_cycle = cfg["dram_bw_gbps"] / clock_ghz
+    mem_cycles = (dram_bytes
+                  / xp.maximum(1e-9, bw_bytes_per_cycle)).astype(np.int64)
+    total_cycles = xp.maximum(compute_cycles, mem_cycles)
+
+    # ---- energy -------------------------------------------------------------
+    # the pe.py cost helpers are numpy-ufunc based, so they broadcast over
+    # the batch (and trace under jax.jit) — single source for the constants
+    e_spad_pj = rf_access_energy_pj(cfg["spad_bits"], xp=xp)
+    spad_accesses = 3 * macs
+    e_spad = spad_accesses * e_spad_pj
+    e_mac = macs * cfg["mac_energy_pj"]
+    e_glb_pj = sram_access_energy_pj(cfg["glb_bits"], xp=xp)
+    e_glb = glb_elems * e_glb_pj
+    e_leak = cfg["leak_mw"] * 1e-3 \
+        * (total_cycles / (clock_ghz * 1e9)) * 1e12
+    energy_pj = e_mac + e_spad + e_glb + e_leak
+
+    # ---- per-config aggregates (sequential over L to bit-match sum()) ------
+    n_layers = energy_pj.shape[1]
+    energy_sum = xp.zeros(energy_pj.shape[0], dtype=np.float64)
+    for j in range(n_layers):
+        energy_sum = energy_sum + energy_pj[:, j]
+    total_cycles_sum = xp.sum(total_cycles, axis=1)
+    total_macs = xp.sum(macs)
+
+    clk = clock_ghz[:, 0]
+    latency_s = total_cycles_sum / (clk * 1e9)
+    energy_j = energy_sum / 1e12
+    throughput_gmacs = total_macs / latency_s / 1e9
+    perf_per_area = throughput_gmacs / cfg["area_mm2"][:, 0]
+
+    return {
+        "compute_cycles": compute_cycles, "mem_cycles": mem_cycles,
+        "total_cycles": total_cycles, "utilization": utilization,
+        "spad_accesses": spad_accesses, "glb_bytes": glb_bytes,
+        "dram_bytes": dram_bytes, "energy_pj": energy_pj,
+        "total_cycles_sum": total_cycles_sum, "energy_pj_sum": energy_sum,
+        "latency_s": latency_s, "energy_j": energy_j,
+        "throughput_gmacs": throughput_gmacs, "perf_per_area": perf_per_area,
+    }
+
+
+_JAX_KERNEL = None
+
+
+def _get_jax_kernel():
+    """jit-compiled variant of the sweep kernel (requires jax x64 mode)."""
+    global _JAX_KERNEL
+    if _JAX_KERNEL is None:
+        import jax
+        import jax.numpy as jnp
+        if not jax.config.read("jax_enable_x64"):
+            return None
+        _JAX_KERNEL = jax.jit(lambda cfg, lay: _sweep_kernel(jnp, cfg, lay))
+    return _JAX_KERNEL
+
+
+@dataclasses.dataclass
+class BatchedSweep:
+    """One evaluated sweep: N configs x L layers, all results as arrays.
+
+    ``DSEPoint``/``DSEResult`` in :mod:`repro.core.dse` are thin views over
+    this; nothing here is materialized per-point unless asked for.
+    """
+
+    workload: str
+    configs: tuple[AcceleratorConfig, ...]
+    layer_names: tuple[str, ...]
+    macs: np.ndarray               # (L,)
+    clock_ghz: np.ndarray          # (N,)
+    area_mm2: np.ndarray           # (N,)
+    arrays: dict[str, np.ndarray]  # kernel outputs
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def result_view(self, i: int) -> "BatchedWorkloadResult":
+        return BatchedWorkloadResult(self, i)
+
+
+class BatchedWorkloadResult:
+    """Duck-typed :class:`repro.core.dataflow.WorkloadResult` view over one
+    row of a :class:`BatchedSweep` — O(1) until ``.layers`` is asked for."""
+
+    __slots__ = ("_sweep", "_i", "_layers")
+
+    def __init__(self, sweep: BatchedSweep, i: int):
+        self._sweep = sweep
+        self._i = i
+        self._layers: tuple[LayerResult, ...] | None = None
+
+    # ---- identity fields ---------------------------------------------------
+    @property
+    def workload(self) -> str:
+        return self._sweep.workload
+
+    @property
+    def config_name(self) -> str:
+        return self._sweep.configs[self._i].name()
+
+    @property
+    def area_mm2(self) -> float:
+        return float(self._sweep.area_mm2[self._i])
+
+    @property
+    def clock_ghz(self) -> float:
+        return float(self._sweep.clock_ghz[self._i])
+
+    # ---- per-layer materialization (lazy) ----------------------------------
+    @property
+    def layers(self) -> tuple[LayerResult, ...]:
+        if self._layers is None:
+            a, i = self._sweep.arrays, self._i
+            self._layers = tuple(
+                LayerResult(
+                    name=nm, macs=int(self._sweep.macs[j]),
+                    compute_cycles=int(a["compute_cycles"][i, j]),
+                    mem_cycles=int(a["mem_cycles"][i, j]),
+                    total_cycles=int(a["total_cycles"][i, j]),
+                    utilization=float(a["utilization"][i, j]),
+                    spad_accesses=int(a["spad_accesses"][0, j]),
+                    glb_bytes=int(a["glb_bytes"][i, j]),
+                    dram_bytes=int(a["dram_bytes"][i, j]),
+                    energy_pj=float(a["energy_pj"][i, j]),
+                )
+                for j, nm in enumerate(self._sweep.layer_names))
+        return self._layers
+
+    # ---- aggregates (precomputed in the kernel) ----------------------------
+    @property
+    def total_macs(self) -> int:
+        return int(self._sweep.macs.sum())
+
+    @property
+    def total_cycles(self) -> int:
+        return int(self._sweep.arrays["total_cycles_sum"][self._i])
+
+    @property
+    def latency_s(self) -> float:
+        return float(self._sweep.arrays["latency_s"][self._i])
+
+    @property
+    def energy_j(self) -> float:
+        return float(self._sweep.arrays["energy_j"][self._i])
+
+    @property
+    def throughput_gmacs(self) -> float:
+        return float(self._sweep.arrays["throughput_gmacs"][self._i])
+
+    @property
+    def perf_per_area(self) -> float:
+        return float(self._sweep.arrays["perf_per_area"][self._i])
+
+    @property
+    def edp(self) -> float:
+        return self.energy_j * self.latency_s
+
+
+def sweep_workload(workload: Workload,
+                   configs: Sequence[AcceleratorConfig],
+                   reports: Sequence[SynthesisReport] | None = None,
+                   *,
+                   use_cache: bool = True,
+                   backend: str = "numpy",
+                   soa: dict[str, np.ndarray] | None = None) -> BatchedSweep:
+    """Evaluate ``workload`` on every config in one batched pass.
+
+    ``reports``/``soa`` let :func:`repro.core.dse.explore_many` synthesize
+    and SoA-convert once and reuse across workloads.
+    """
+    configs = tuple(configs)
+    if soa is None:
+        soa = configs_to_soa(configs)
+    if reports is None:
+        reports = synthesize_many(configs, use_cache=use_cache, soa=soa)
+    wb = WorkloadBatch.from_workload(workload)
+
+    clock_ghz = np.array([r.clock_ghz for r in reports], dtype=np.float64)
+    area_mm2 = np.array([r.area_mm2 for r in reports], dtype=np.float64)
+    leak_mw = soa["num_pes"] * soa["leak_uw"] * 1e-3 \
+        + 0.002 * soa["glb_kb"]
+
+    cfg = {k: v[:, None] for k, v in soa.items()}
+    cfg["clock_ghz"] = clock_ghz[:, None]
+    cfg["area_mm2"] = area_mm2[:, None]
+    cfg["leak_mw"] = leak_mw[:, None]
+    lay = {k: v[None, :] for k, v in wb.arrays.items()}
+
+    kernel = None
+    if backend == "jax":
+        kernel = _get_jax_kernel()
+        if kernel is None:
+            warnings.warn("dse_batch: jax backend requires jax_enable_x64; "
+                          "falling back to numpy", stacklevel=2)
+    if kernel is not None:
+        out = {k: np.asarray(v) for k, v in kernel(cfg, lay).items()}
+    else:
+        out = _sweep_kernel(np, cfg, lay)
+
+    return BatchedSweep(workload=workload.name, configs=configs,
+                        layer_names=wb.layer_names, macs=wb.arrays["macs"],
+                        clock_ghz=clock_ghz, area_mm2=area_mm2, arrays=out)
+
+
+def pareto_mask(perf: np.ndarray, energy: np.ndarray,
+                chunk: int = 1024) -> np.ndarray:
+    """Boolean mask of non-dominated points for (maximize perf, minimize
+    energy) — the vectorized replacement for the O(n^2) Python dominance
+    loop (chunked broadcasting keeps memory at ``chunk * n`` bools)."""
+    perf = np.asarray(perf, dtype=np.float64)
+    energy = np.asarray(energy, dtype=np.float64)
+    n = perf.shape[0]
+    keep = np.ones(n, dtype=bool)
+    for s in range(0, n, chunk):
+        p = perf[s:s + chunk, None]
+        e = energy[s:s + chunk, None]
+        dominated = ((perf[None, :] >= p) & (energy[None, :] <= e)
+                     & ((perf[None, :] > p) | (energy[None, :] < e))).any(1)
+        keep[s:s + chunk] = ~dominated
+    return keep

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
+
+import numpy as np
 
 
 class PEType(str, enum.Enum):
@@ -132,36 +133,40 @@ def pe_spec(pe_type: PEType | str) -> PESpec:
 
 # ---------------------------------------------------------------------------
 # SRAM macro models (CACTI-style scaling, 45 nm).
+#
+# These accept scalars or arrays: the batched DSE engine
+# (core/dse_batch.py) and vectorized synthesis (core/synthesis.py) call
+# them on whole config batches, so the constants and the zero-size guard
+# live in exactly one place.  ``xp`` selects the array namespace — pass
+# ``jax.numpy`` when calling under a jit trace.
 # ---------------------------------------------------------------------------
 
-def rf_access_energy_pj(size_bits: int) -> float:
+def rf_access_energy_pj(size_bits, xp=np):
     """Per-access energy of a small PE-local register-file scratchpad.
 
     Port energy dominates for these small RFs, so the per-access cost is
     (to first order) independent of the word width and scales weakly with
     capacity.  ~0.03 pJ for an Eyeriss-sized 0.5 kB spad.
     """
-    size_kb = max(size_bits / 8192.0, 0.03125)
-    return 0.035 * math.sqrt(size_kb) + 0.015
+    size_kb = xp.maximum(size_bits / 8192.0, 0.03125)
+    return 0.035 * xp.sqrt(size_kb) + 0.015
 
 
-def sram_access_energy_pj(size_bits: int, word_bits: int = 32) -> float:
+def sram_access_energy_pj(size_bits, word_bits: int = 32, xp=np):
     """Per-access energy of a banked SRAM (the global buffer).
 
     The GLB has fixed-width ports (one element per access regardless of the
     PE type's payload width -- the RTL keeps a common interface across
     precisions), so this is per *element*, not per byte.
     """
-    size_kb = max(size_bits / 8192.0, 0.03125)
+    size_kb = xp.maximum(size_bits / 8192.0, 0.03125)
     del word_bits  # fixed-width port
-    return 0.09 * math.sqrt(size_kb) + 0.04
+    return 0.09 * xp.sqrt(size_kb) + 0.04
 
 
-def sram_area_um2(size_bits: int) -> float:
+def sram_area_um2(size_bits):
     """Area of an SRAM macro.  ~0.55 um^2/bit @45nm + fixed periphery."""
-    if size_bits <= 0:
-        return 0.0
-    return 0.55 * size_bits + 300.0
+    return np.where(np.asarray(size_bits) > 0, 0.55 * size_bits + 300.0, 0.0)
 
 
 def dram_energy_pj_per_byte() -> float:

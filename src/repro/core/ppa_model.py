@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.accelerator import AcceleratorConfig
 from repro.core.pe import PEType
-from repro.core.synthesis import SynthesisReport, synthesize
+from repro.core.synthesis import SynthesisReport, synthesize, synthesize_many
 
 FEATURE_ORDER = (
     "num_pes", "ifmap_spad", "filter_spad", "psum_spad", "glb_kb",
@@ -132,6 +132,22 @@ class PPAModelSuite:
         ms = self.models[cfg.pe_type]
         return {t: float(ms[t].predict([cfg])[0]) for t in TARGETS}
 
+    def predict_batch(
+            self, configs: Sequence[AcceleratorConfig]
+    ) -> dict[str, np.ndarray]:
+        """Vectorized prediction for a mixed-PE-type batch: one model
+        evaluation per (PE type x target), scattered back in input order."""
+        n = len(configs)
+        out = {t: np.empty(n, dtype=np.float64) for t in TARGETS}
+        for pe_type, ms in self.models.items():
+            idx = [i for i, c in enumerate(configs) if c.pe_type == pe_type]
+            if not idx:
+                continue
+            sub = [configs[i] for i in idx]
+            for t in TARGETS:
+                out[t][idx] = ms[t].predict(sub)
+        return out
+
 
 def fit_ppa_suite(
     configs_by_type: dict[PEType, Sequence[AcceleratorConfig]],
@@ -142,7 +158,10 @@ def fit_ppa_suite(
     suite: dict[PEType, dict[str, PolyModel]] = {}
     stats: dict[str, dict[str, float]] = {}
     for pe_type, configs in configs_by_type.items():
-        reports = [oracle(c) for c in configs]
+        if oracle is synthesize:   # default flow: vectorized + report cache
+            reports = synthesize_many(configs)
+        else:
+            reports = [oracle(c) for c in configs]
         actual = {t: np.array([getattr(r, t) for r in reports])
                   for t in TARGETS}
         suite[pe_type] = {}

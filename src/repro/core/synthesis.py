@@ -14,6 +14,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+from typing import Sequence
+
+import numpy as np
 
 from repro.core.accelerator import AcceleratorConfig
 from repro.core.pe import (rf_access_energy_pj, sram_access_energy_pj,
@@ -33,15 +36,140 @@ class SynthesisReport:
         return dataclasses.asdict(self)
 
 
+def _jitter_named(name: str, salt: str, scale: float) -> float:
+    h = hashlib.sha256((name + salt).encode()).digest()
+    u = int.from_bytes(h[:8], "little") / float(1 << 64)   # [0,1)
+    return 1.0 + scale * (2.0 * u - 1.0)
+
+
 def _jitter(cfg: AcceleratorConfig, salt: str, scale: float) -> float:
     """Deterministic multiplicative perturbation in [1-scale, 1+scale].
 
     Emulates synthesis noise (placement, wire load, timing closure slack)
     in a reproducible way: hash of the config name + salt.
     """
-    h = hashlib.sha256((cfg.name() + salt).encode()).digest()
-    u = int.from_bytes(h[:8], "little") / float(1 << 64)   # [0,1)
-    return 1.0 + scale * (2.0 * u - 1.0)
+    return _jitter_named(cfg.name(), salt, scale)
+
+
+def config_hash(cfg: AcceleratorConfig) -> str:
+    """Stable key for the synthesis cache.
+
+    ``cfg.name()`` omits ``clock_ghz``, which changes timing closure, so the
+    key folds every field in.  A plain formatted string (not a digest): it
+    is exact, stable across processes, and ~50x cheaper than hashing a
+    deep-copied ``dataclasses.astuple``.
+    """
+    return (f"{cfg.pe_type.value}:{cfg.pe_rows}:{cfg.pe_cols}"
+            f":{cfg.ifmap_spad}:{cfg.filter_spad}:{cfg.psum_spad}"
+            f":{cfg.glb_kb}:{cfg.dram_bw_gbps!r}:{cfg.clock_ghz!r}")
+
+
+_SYNTH_CACHE: dict[str, SynthesisReport] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def synthesis_cache_stats() -> dict[str, int]:
+    return dict(_CACHE_STATS, size=len(_SYNTH_CACHE))
+
+
+def clear_synthesis_cache() -> None:
+    _SYNTH_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def synthesize_cached(cfg: AcceleratorConfig) -> SynthesisReport:
+    """`synthesize` with memoization — re-sweeping a design space (new
+    workload, extended sweep) never re-runs the flow for a known config."""
+    key = config_hash(cfg)
+    hit = _SYNTH_CACHE.get(key)
+    if hit is not None:
+        _CACHE_STATS["hits"] += 1
+        return hit
+    _CACHE_STATS["misses"] += 1
+    rep = synthesize(cfg)
+    _SYNTH_CACHE[key] = rep
+    return rep
+
+
+def synthesize_many(configs: Sequence[AcceleratorConfig],
+                    use_cache: bool = True,
+                    soa: dict[str, np.ndarray] | None = None
+                    ) -> list[SynthesisReport]:
+    """Vectorized synthesis for a batch of design points.
+
+    The per-op math is evaluated as NumPy array expressions across the whole
+    batch (identical op order to :func:`synthesize`, so results bit-match);
+    only the SHA-based process jitter stays a per-config Python step.  Cached
+    configs are skipped entirely.  ``soa`` (from
+    :func:`repro.core.accelerator.configs_to_soa`) can be passed to reuse an
+    existing struct-of-arrays conversion.
+    """
+    configs = list(configs)
+    if not configs:
+        return []
+    out: list[SynthesisReport | None] = [None] * len(configs)
+    todo: list[int] = []
+    keys: list[str | None] = [None] * len(configs)
+    for i, cfg in enumerate(configs):
+        if use_cache:
+            keys[i] = key = config_hash(cfg)
+            hit = _SYNTH_CACHE.get(key)
+            if hit is not None:
+                _CACHE_STATS["hits"] += 1
+                out[i] = hit
+                continue
+            _CACHE_STATS["misses"] += 1
+        todo.append(i)
+    if todo:
+        if soa is None:
+            from repro.core.accelerator import configs_to_soa
+            soa = configs_to_soa(configs)
+        f = np.float64
+        idx = np.array(todo, dtype=np.intp)
+        n = soa["num_pes"][idx].astype(f)
+        glb_bits = soa["glb_bits"][idx].astype(f)
+        glb_kb = soa["glb_kb"][idx].astype(f)
+        spad_bits = soa["spad_bits"][idx].astype(f)
+        mac_area = soa["mac_area_um2"][idx]
+        mac_e = soa["mac_energy_pj"][idx]
+        max_clk = soa["max_clock_ghz"][idx]
+        leak_uw = soa["leak_uw"][idx]
+        clk_cap = soa["clock_cap"][idx]
+        names = [configs[i].name() for i in todo]
+        jit_area = np.array([_jitter_named(nm, "area", 0.03)
+                             for nm in names], dtype=f)
+        jit_clk = np.array([_jitter_named(nm, "clk", 0.02)
+                            for nm in names], dtype=f)
+        jit_pw = np.array([_jitter_named(nm, "power", 0.04)
+                           for nm in names], dtype=f)
+
+        pe_area = mac_area + sram_area_um2(spad_bits)
+        glb_area = sram_area_um2(glb_bits)
+        noc_area = 120.0 * n * (1.0 + 0.004 * np.sqrt(n))
+        area_mm2 = (n * pe_area + glb_area + noc_area) * jit_area / 1e6
+
+        wire_penalty = 1.0 + 0.002 * np.sqrt(n)
+        clock_ghz = np.minimum((max_clk / wire_penalty) * jit_clk, clk_cap)
+
+        util = 0.70
+        mac_pw = n * util * mac_e * clock_ghz * 1e9 * 1e-12
+        e_spad = rf_access_energy_pj(spad_bits)
+        spad_pw = n * util * 3.0 * e_spad * clock_ghz * 1e9 * 1e-12
+        e_glb = sram_access_energy_pj(glb_bits)
+        glb_pw = n * util * (1.0 / 8.0) * e_glb * clock_ghz * 1e9 * 1e-12
+        leak_mw = n * leak_uw * 1e-3 + 0.002 * glb_kb
+        power_mw = (mac_pw + spad_pw + glb_pw + leak_mw) * jit_pw
+
+        for j, i in enumerate(todo):
+            rep = SynthesisReport(
+                area_mm2=float(area_mm2[j]), power_mw=float(power_mw[j]),
+                clock_ghz=float(clock_ghz[j]),
+                throughput_gmacs=float(n[j] * clock_ghz[j]))
+            out[i] = rep
+            if use_cache:
+                _SYNTH_CACHE[keys[i]] = rep
+    return out  # type: ignore[return-value]
 
 
 def synthesize(cfg: AcceleratorConfig) -> SynthesisReport:

@@ -8,14 +8,26 @@ import; everything else sees the real device count.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on mesh axes
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly "auto" on every axis
+    AxisType = None
+
+
+def compat_make_mesh(shape, axes):
+    """Version-compat ``jax.make_mesh``: pass explicit Auto ``axis_types``
+    where the installed jax supports them, plain mesh otherwise."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
@@ -24,5 +36,4 @@ def make_host_mesh(model: int = 1):
     model = max(1, min(model, n))
     while n % model != 0:
         model -= 1
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat_make_mesh((n // model, model), ("data", "model"))

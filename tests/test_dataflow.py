@@ -3,6 +3,9 @@
 import math
 
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (dev dependency)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.accelerator import AcceleratorConfig

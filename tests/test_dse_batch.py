@@ -1,0 +1,163 @@
+"""Batched DSE sweep engine vs the scalar reference path.
+
+The contract (ISSUE: tentpole) is that the vectorized engine is a drop-in
+replacement: per-layer results, per-config aggregates, headline ratios, and
+Pareto fronts all *bit-match* the original Python loop.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import AcceleratorConfig, design_space
+from repro.core.dse import (IncrementalSweep, explore, explore_many,
+                            explore_scalar, pareto_front, pareto_front_scalar)
+from repro.core.dse_batch import pareto_mask, sweep_workload
+from repro.core.pe import PEType
+from repro.core.synthesis import (clear_synthesis_cache, config_hash,
+                                  synthesis_cache_stats, synthesize,
+                                  synthesize_cached, synthesize_many)
+from repro.core.workloads import ConvLayer, Workload, get_workload
+
+# a small but heterogeneous design space: every PE type, varied array /
+# GLB / bandwidth, including non-default spads and a clock-capped point
+SMALL_SPACE = [
+    AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=c, glb_kb=g,
+                      dram_bw_gbps=bw)
+    for t in PEType
+    for (r, c, g, bw) in [(8, 8, 64, 6.4), (12, 14, 128, 12.8),
+                          (32, 32, 512, 25.6)]
+] + [
+    AcceleratorConfig(pe_type=PEType.INT16, ifmap_spad=6, filter_spad=112,
+                      psum_spad=12, glb_kb=256),
+    AcceleratorConfig(pe_type=PEType.FP32, clock_ghz=0.5),
+    # zero-size scratchpads: exercises the sram_area_um2 zero guard, which
+    # the batched synthesis path must honor too
+    AcceleratorConfig(pe_type=PEType.LIGHTPE1, ifmap_spad=0, filter_spad=0,
+                      psum_spad=0),
+]
+
+TINY_WL = Workload("tiny", (
+    ConvLayer("c1", 58, 58, 64, 64),
+    ConvLayer("c2", 30, 30, 64, 128, 3, 3, 2),
+    ConvLayer("fc", 1, 1, 512, 1000, 1, 1),
+    ConvLayer("big", 226, 226, 3, 64),
+))
+
+
+def test_batched_explore_bitmatches_scalar():
+    scalar = explore_scalar(TINY_WL, SMALL_SPACE)
+    batched = explore(TINY_WL, SMALL_SPACE, use_cache=False)
+    assert len(scalar.points) == len(batched.points)
+    for ps, pb in zip(scalar.points, batched.points):
+        assert ps.config == pb.config
+        rs, rb = ps.result, pb.result
+        assert rs.area_mm2 == rb.area_mm2
+        assert rs.clock_ghz == rb.clock_ghz
+        assert rs.total_cycles == rb.total_cycles
+        assert rs.energy_j == rb.energy_j
+        assert rs.perf_per_area == rb.perf_per_area
+        assert rs.latency_s == rb.latency_s
+        for ls, lb in zip(rs.layers, rb.layers):
+            assert ls == lb  # LayerResult is a frozen dataclass: exact
+
+
+def test_batched_headline_ratios_identical_on_full_space():
+    cfgs = list(design_space())
+    wl = get_workload("vgg16")
+    scalar = explore_scalar(wl, cfgs)
+    batched = explore(wl, cfgs)
+    assert scalar.headline_ratios() == batched.headline_ratios()
+    assert scalar.normalized() == batched.normalized()
+
+
+def test_pareto_mask_matches_dominance_loop():
+    rng = np.random.default_rng(7)
+    perf = rng.uniform(1.0, 100.0, size=300)
+    energy = rng.uniform(0.1, 10.0, size=300)
+    # inject ties/duplicates to exercise the strict-dominance edge cases
+    perf[10] = perf[20]
+    energy[10] = energy[20]
+    perf[30] = perf[40]
+    mask = pareto_mask(perf, energy, chunk=64)
+    for i in range(len(perf)):
+        dominated = any(
+            perf[q] >= perf[i] and energy[q] <= energy[i]
+            and (perf[q] > perf[i] or energy[q] < energy[i])
+            for q in range(len(perf)))
+        assert mask[i] == (not dominated), i
+
+
+def test_pareto_front_matches_scalar_reference():
+    res = explore(TINY_WL, SMALL_SPACE)
+    fv = pareto_front(res.points)
+    fs = pareto_front_scalar(res.points)
+    assert [p.config for p in fv] == [p.config for p in fs]
+
+
+def test_synthesis_cache_hit_returns_identical_report():
+    clear_synthesis_cache()
+    cfg = AcceleratorConfig(pe_type=PEType.LIGHTPE1, glb_kb=256)
+    first = synthesize_cached(cfg)
+    again = synthesize_cached(cfg)
+    assert again is first
+    assert first == synthesize(cfg)
+    stats = synthesis_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    # the batched path hits the same cache
+    reps = synthesize_many([cfg, AcceleratorConfig()])
+    assert reps[0] is first
+    assert synthesis_cache_stats()["hits"] == 2
+
+
+def test_synthesize_many_bitmatches_scalar():
+    reps = synthesize_many(SMALL_SPACE, use_cache=False)
+    for cfg, rep in zip(SMALL_SPACE, reps):
+        assert rep == synthesize(cfg), cfg.name()
+
+
+def test_config_hash_distinguishes_clock_cap():
+    a = AcceleratorConfig()
+    b = AcceleratorConfig(clock_ghz=0.5)
+    assert a.name() == b.name()          # name ignores the clock cap...
+    assert config_hash(a) != config_hash(b)  # ...the cache key must not
+
+
+def test_explore_many_matches_individual_explores():
+    wls = ("vgg16", "resnet34")
+    many = explore_many(wls, SMALL_SPACE)
+    assert set(many) == set(wls)
+    for wl in wls:
+        single = explore(wl, SMALL_SPACE)
+        assert many[wl].headline_ratios() == single.headline_ratios()
+
+
+def test_incremental_sweep_matches_oneshot():
+    half = len(SMALL_SPACE) // 2
+    inc = IncrementalSweep(TINY_WL, SMALL_SPACE[:half])
+    assert len(inc) == half
+    added = inc.extend(SMALL_SPACE)       # overlap: only the rest is new
+    assert added == len(SMALL_SPACE) - half
+    assert inc.extend(SMALL_SPACE) == 0   # fully deduped re-extend
+    got = inc.result()
+    ref = explore(TINY_WL, SMALL_SPACE)
+    assert len(got.points) == len(ref.points)
+    by_cfg = {p.config: p for p in ref.points}
+    for p in got.points:
+        q = by_cfg[p.config]
+        assert p.perf_per_area == q.perf_per_area
+        assert p.energy_j == q.energy_j
+
+
+def test_batched_view_aggregates_consistent_with_layers():
+    res = explore(TINY_WL, SMALL_SPACE[:3], use_cache=False)
+    for p in res.points:
+        r = p.result
+        assert r.total_macs == sum(l.macs for l in r.layers)
+        assert r.total_cycles == sum(l.total_cycles for l in r.layers)
+        assert r.energy_j == sum(l.energy_pj for l in r.layers) / 1e12
+        assert len(r.layers) == len(TINY_WL.layers)
+
+
+def test_explore_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        explore(TINY_WL, SMALL_SPACE, engine="quantum")

@@ -46,6 +46,18 @@ def test_predict_unseen_config(suite_stats):
         assert rel < 0.25, (t, pred[t], true[t])
 
 
+def test_predict_batch_matches_per_config(suite_stats):
+    suite, _ = suite_stats
+    from repro.core.accelerator import AcceleratorConfig
+    mixed = [AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=r)
+             for r in (8, 16) for t in PEType]
+    batch = suite.predict_batch(mixed)
+    for i, cfg in enumerate(mixed):
+        single = suite.predict(cfg)
+        for t in TARGETS:
+            assert batch[t][i] == pytest.approx(single[t], rel=1e-12), (i, t)
+
+
 def test_poly_expand_shapes():
     x = np.random.default_rng(0).standard_normal((10, 3))
     phi1 = poly_expand(x, 1)
