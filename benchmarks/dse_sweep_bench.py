@@ -1,15 +1,20 @@
-"""DSE sweep engine benchmark: scalar loop vs vectorized batched engine.
+"""DSE sweep engine benchmark: scalar loop vs vectorized batched engine
+vs the streamed chunked driver.
 
-Times `explore()` over the full paper design space on a paper workload with
-both engines, checks the headline ratios are identical, and emits
-``BENCH_dse_sweep.json`` (configs/sec + speedups) so the perf trajectory is
-tracked across PRs.
+Times `explore()` over the full paper design space on a paper workload
+with both engines, exercises the x64-free jax jit path and the 100k-config
+chunked stream, checks the headline ratios are identical, and emits
+``BENCH_dse_sweep.json`` (configs/sec + speedups + provenance) so the perf
+trajectory is tracked across PRs and machines.
 
   PYTHONPATH=src python benchmarks/dse_sweep_bench.py [--quick]
       [--workload vgg16] [--out BENCH_dse_sweep.json]
+      [--check-against BENCH_dse_sweep.json]
 
 ``--quick`` shrinks the design space and repetitions — the CI smoke mode
-that exercises the engine without holding the queue.
+that exercises the engine without holding the queue.  ``--check-against``
+compares the measured cold throughput to a committed baseline and fails
+on a >3x regression.
 """
 
 from __future__ import annotations
@@ -18,23 +23,127 @@ import argparse
 import itertools
 import json
 import pathlib
+import platform
+import subprocess
+import sys
 import time
 
-from repro.core.accelerator import design_space
+import numpy as np
+
+from repro.core.accelerator import design_space, design_space_soa
 from repro.core.dse import explore, explore_many, explore_scalar
+from repro.core.dse_batch import resolve_backend, sweep_chunked
 from repro.core.synthesis import clear_synthesis_cache, synthesis_cache_stats
+from repro.core.workloads import get_workload
 
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_dse_sweep.json"
 
+# widened factor grid for the chunked-scaling entry (~103k configs full,
+# ~15k quick); everything else stays the paper's 720-point space
+_CHUNKED_FULL = dict(glb_kbs=tuple(2 ** i for i in range(2, 13)),
+                     bws=tuple(np.linspace(2.0, 64.0, 156)))
+_CHUNKED_QUICK = dict(glb_kbs=(64, 128, 256, 512),
+                      bws=tuple(np.linspace(2.0, 64.0, 64)))
+
 
 def _best_of(fn, reps: int) -> float:
+    import gc
     best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+    was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()                 # keep collector pauses out of the timings
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        if was_enabled:
+            gc.enable()
     return best
+
+
+def provenance() -> dict:
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=pathlib.Path(__file__).parent
+                             ).stdout.strip() or None
+    except Exception:
+        sha = None
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    import os
+    return {
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "jax": jax_version,
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "git_sha": sha,
+    }
+
+
+def bench_chunked(workload: str, quick: bool) -> dict:
+    """Streamed sweep throughput over the widened grid (no per-config
+    Python objects anywhere: SoA chunks in, Pareto front out)."""
+    wl = get_workload(workload)
+    grid = _CHUNKED_QUICK if quick else _CHUNKED_FULL
+    chunk_size = 16384 if quick else 32768
+
+    def space():
+        return design_space_soa(chunk_size=chunk_size, **grid)
+
+    n = sum(len(s["pe_rows"]) for s in space())
+    out: dict = {"chunked_n_configs": n, "chunked_chunk_size": chunk_size}
+    backends = ["numpy"]
+    try:
+        resolve_backend("jax")
+        backends.append("jax")
+    except RuntimeError:
+        pass
+    for backend in backends:
+        reps = 1 if quick else 3
+        best = float("inf")
+        front = None
+        for _ in range(reps + 1):       # +1 warmup (page/jit caches)
+            t0 = time.perf_counter()
+            res = sweep_chunked(wl, space(), backend=backend,
+                                chunk_size=chunk_size)
+            best = min(best, time.perf_counter() - t0)
+            front = res.front_size
+        out[f"chunked_{backend}_s"] = best
+        out[f"chunked_{backend}_configs_per_s"] = n / best
+        out[f"chunked_{backend}_front_size"] = front
+    out["chunked_configs_per_s"] = max(
+        out[f"chunked_{b}_configs_per_s"] for b in backends)
+    return out
+
+
+def bench_jax(workload: str, configs, quick: bool) -> dict:
+    """The x64-free jit path on the paper space: parity vs numpy + warm
+    throughput (post-compile)."""
+    try:
+        resolve_backend("jax")
+    except RuntimeError as exc:
+        return {"jax_available": False, "jax_error": str(exc)}
+    rn = explore(workload, configs, backend="numpy")
+    rj = explore(workload, configs, backend="jax")      # compiles
+    hn, hj = rn.headline_ratios(), rj.headline_ratios()
+    rel = max(abs(hj[k] - hn[k]) / abs(hn[k]) for k in hn)
+    reps = 3 if quick else 10
+    warm_s = _best_of(lambda: explore(workload, configs, backend="jax"),
+                      reps)
+    return {
+        "jax_available": True,
+        "jax_warm_s": warm_s,
+        "jax_warm_configs_per_s": len(configs) / warm_s,
+        "jax_vs_numpy_headline_rel": rel,
+    }
 
 
 def bench(workload: str = "vgg16", quick: bool = False) -> dict:
@@ -50,14 +159,18 @@ def bench(workload: str = "vgg16", quick: bool = False) -> dict:
 
     def cold():
         clear_synthesis_cache()
-        explore(workload, configs)
+        explore(workload, configs, backend="numpy")
 
     cold_s = _best_of(cold, reps_batched)
-    warm_s = _best_of(lambda: explore(workload, configs), reps_batched)
+    warm_s = _best_of(lambda: explore(workload, configs, backend="numpy"),
+                      reps_batched)
 
-    # identical results is part of the contract, not just speed
+    # identical results is part of the contract, not just speed — pinned
+    # to the numpy engine (the bit-exact one on every host; jax parity is
+    # gated separately at 1e-6)
     r_scalar = explore_scalar(workload, configs).headline_ratios()
-    r_batched = explore(workload, configs).headline_ratios()
+    r_batched = explore(workload, configs,
+                        backend="numpy").headline_ratios()
     identical = r_scalar == r_batched
 
     # multi-workload amortization: one synthesis pass, three mapping passes
@@ -67,7 +180,7 @@ def bench(workload: str = "vgg16", quick: bool = False) -> dict:
     explore_many(wls, configs)
     many_s = time.perf_counter() - t0
 
-    return {
+    out = {
         "workload": workload,
         "quick": quick,
         "n_configs": n,
@@ -83,14 +196,54 @@ def bench(workload: str = "vgg16", quick: bool = False) -> dict:
         "explore_many_configs_per_s": 3 * n / many_s,
         "headline_ratios_identical": identical,
         "synthesis_cache": synthesis_cache_stats(),
+        "provenance": provenance(),
     }
+    out.update(bench_jax(workload, configs, quick))
+    out.update(bench_chunked(workload, quick))
+    if not quick:
+        # also record the quick-mode cold number so the CI smoke gate can
+        # compare like-for-like (quick's smaller space has proportionally
+        # more fixed overhead per config)
+        q_configs = list(itertools.islice(design_space(), 0, None, 4))
+
+        def q_cold():
+            clear_synthesis_cache()
+            explore(workload, q_configs, backend="numpy")
+
+        q_s = _best_of(q_cold, reps_batched)
+        out["quick_cold_configs_per_s"] = len(q_configs) / q_s
+    return out
+
+
+def check_against(r: dict, baseline_path: pathlib.Path) -> None:
+    """CI regression gate: fail if cold throughput fell >3x below the
+    committed baseline (machine differences absorbed by the 3x margin).
+
+    A quick-mode run compares against the baseline's quick-mode number
+    (recorded by every full run) so the gate is like-for-like; a
+    full-mode baseline value is the fallback for older baselines.
+    """
+    base = json.loads(baseline_path.read_text())
+    if r["quick"] and "quick_cold_configs_per_s" in base:
+        base_cps = base["quick_cold_configs_per_s"]
+        label = "quick baseline"
+    else:
+        base_cps = base["batched_cold_configs_per_s"]
+        label = "baseline"
+    got_cps = r["batched_cold_configs_per_s"]
+    print(f"regression check: cold {got_cps:.0f} configs/s "
+          f"vs {label} {base_cps:.0f} (floor {base_cps / 3:.0f})")
+    if got_cps * 3.0 < base_cps:
+        raise SystemExit(
+            f"cold sweep regressed >3x: {got_cps:.0f} configs/s vs "
+            f"{label} {base_cps:.0f}")
 
 
 def run():
     """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
     r = bench(quick=True)
     n = r["n_configs"]
-    return [
+    rows = [
         ("dse_sweep/scalar", r["scalar_s"] / n * 1e6,
          f"configs_per_s={r['scalar_configs_per_s']:.0f}"),
         ("dse_sweep/batched_cold", r["batched_cold_s"] / n * 1e6,
@@ -100,6 +253,12 @@ def run():
         ("dse_sweep/identical", 0.0,
          str(r["headline_ratios_identical"])),
     ]
+    if r.get("jax_available"):
+        rows.append(("dse_sweep/jax_warm", r["jax_warm_s"] / n * 1e6,
+                     f"headline_rel={r['jax_vs_numpy_headline_rel']:.1e}"))
+    rows.append(("dse_sweep/chunked", 1e6 / r["chunked_configs_per_s"],
+                 f"configs_per_s={r['chunked_configs_per_s']:.0f}"))
+    return rows
 
 
 def main() -> None:
@@ -108,6 +267,8 @@ def main() -> None:
                     help="reduced space + reps (CI smoke mode)")
     ap.add_argument("--workload", default="vgg16")
     ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    ap.add_argument("--check-against", type=pathlib.Path, default=None,
+                    help="baseline BENCH json; fail on >3x cold regression")
     args = ap.parse_args()
 
     r = bench(workload=args.workload, quick=args.quick)
@@ -123,15 +284,34 @@ def main() -> None:
     print(f"batched warm  {r['batched_warm_s'] * 1e3:8.1f} ms  "
           f"{r['batched_warm_configs_per_s']:9.0f} configs/s  "
           f"({r['speedup_warm']:.1f}x)")
+    if r.get("jax_available"):
+        print(f"jax warm      {r['jax_warm_s'] * 1e3:8.1f} ms  "
+              f"{r['jax_warm_configs_per_s']:9.0f} configs/s  "
+              f"(headline rel {r['jax_vs_numpy_headline_rel']:.1e})")
     print(f"explore_many  {r['explore_many_3wl_s'] * 1e3:8.1f} ms  "
           f"3 workloads, {r['explore_many_configs_per_s']:.0f} configs/s")
+    for b in ("numpy", "jax"):
+        key = f"chunked_{b}_configs_per_s"
+        if key in r:
+            print(f"chunked {b:5s} {r[f'chunked_{b}_s'] * 1e3:8.1f} ms  "
+                  f"{r[key]:9.0f} configs/s  "
+                  f"({r['chunked_n_configs']} configs)")
     print(f"headline ratios identical: {r['headline_ratios_identical']}")
     print(f"wrote {args.out}")
+
+    if args.check_against is not None:
+        check_against(r, args.check_against)
     if not r["headline_ratios_identical"]:
         raise SystemExit("batched engine diverged from scalar reference")
-    if not r["quick"] and r["speedup_cold"] < 10.0:
-        raise SystemExit(
-            f"speedup gate failed: {r['speedup_cold']:.1f}x < 10x")
+    if not r["quick"]:
+        if r["speedup_cold"] < 10.0:
+            raise SystemExit(
+                f"speedup gate failed: {r['speedup_cold']:.1f}x < 10x")
+        if r.get("jax_available") \
+                and r["jax_vs_numpy_headline_rel"] > 1e-6:
+            raise SystemExit(
+                "jax backend diverged from numpy beyond 1e-6: "
+                f"{r['jax_vs_numpy_headline_rel']:.2e}")
 
 
 if __name__ == "__main__":

@@ -48,8 +48,8 @@ def main():
     dt = time.perf_counter() - t0
     stats = synthesis_cache_stats()
     print(f"\nincremental extend: +{added} new points in {dt * 1e3:.1f} ms "
-          f"(sweep now {len(sweep)}; synthesis cache: "
-          f"{stats['hits']} hits / {stats['misses']} misses)")
+          f"(sweep now {len(sweep)}; synthesis array cache: "
+          f"{stats['array_hits']} hits / {stats['array_misses']} misses)")
     r2 = sweep.result().headline_ratios()
     print(f"  lightpe1 perf/area vs int16 on widened space: "
           f"{r2['lightpe1_perf_per_area_vs_int16']:.2f}")

@@ -79,33 +79,33 @@ class AcceleratorConfig:
         }
 
 
-def configs_to_soa(
-        configs: Sequence[AcceleratorConfig]) -> dict[str, np.ndarray]:
-    """Struct-of-arrays view of a config batch for the vectorized sweep.
+def soa_from_fields(pe_type_idx: np.ndarray,
+                    pe_rows: np.ndarray, pe_cols: np.ndarray,
+                    ifmap_spad: np.ndarray, filter_spad: np.ndarray,
+                    psum_spad: np.ndarray, glb_kb: np.ndarray,
+                    dram_bw_gbps: np.ndarray,
+                    clock_cap: np.ndarray) -> dict[str, np.ndarray]:
+    """Assemble the full struct-of-arrays form from raw field arrays.
 
-    One array per structural/PE-derived field across all N design points —
-    the input format of :mod:`repro.core.dse_batch`.
+    Per-PE-type constants come from small lookup tables gathered by type
+    index (no per-config spec resolution).  This is the common tail of
+    :func:`configs_to_soa` (object batch) and :func:`design_space_soa`
+    (grid expansion with no objects at all).
     """
     from repro.core.pe import _P_PE_LEAK_UW, _SPECS
     i8, f8 = np.int64, np.float64
-    type_idx = {t: i for i, t in enumerate(PEType)}
-    # one pass over the batch; per-PE-type constants come from small lookup
-    # tables gathered by type index (no per-config spec resolution)
-    rows = np.array(
-        [(c.pe_rows, c.pe_cols, c.ifmap_spad, c.filter_spad, c.psum_spad,
-          c.glb_kb, type_idx[c.pe_type]) for c in configs], dtype=i8)
-    rows = rows.reshape(-1, 7)       # keep 2-D for the empty batch
-    ti = rows[:, 6]
+    ti = np.asarray(pe_type_idx, dtype=i8)
     specs = [_SPECS[t] for t in PEType]
     soa = {
-        "pe_rows": rows[:, 0], "pe_cols": rows[:, 1],
-        "ifmap_spad": rows[:, 2], "filter_spad": rows[:, 3],
-        "psum_spad": rows[:, 4], "glb_kb": rows[:, 5],
-        "glb_bits": rows[:, 5] * (1024 * 8),
-        "num_pes": rows[:, 0] * rows[:, 1],
-        "dram_bw_gbps": np.array([c.dram_bw_gbps for c in configs], dtype=f8),
-        "clock_cap": np.array([np.inf if c.clock_ghz is None else c.clock_ghz
-                               for c in configs], dtype=f8),
+        "pe_type_idx": ti,
+        "pe_rows": np.asarray(pe_rows, dtype=i8),
+        "pe_cols": np.asarray(pe_cols, dtype=i8),
+        "ifmap_spad": np.asarray(ifmap_spad, dtype=i8),
+        "filter_spad": np.asarray(filter_spad, dtype=i8),
+        "psum_spad": np.asarray(psum_spad, dtype=i8),
+        "glb_kb": np.asarray(glb_kb, dtype=i8),
+        "dram_bw_gbps": np.asarray(dram_bw_gbps, dtype=f8),
+        "clock_cap": np.asarray(clock_cap, dtype=f8),
         "act_bits": np.array([s.act_bits for s in specs], dtype=i8)[ti],
         "weight_bits": np.array([s.weight_bits for s in specs],
                                 dtype=i8)[ti],
@@ -118,10 +118,56 @@ def configs_to_soa(
                                   dtype=f8)[ti],
         "leak_uw": np.array([_P_PE_LEAK_UW[t] for t in PEType], dtype=f8)[ti],
     }
+    soa["glb_bits"] = soa["glb_kb"] * (1024 * 8)
+    soa["num_pes"] = soa["pe_rows"] * soa["pe_cols"]
     soa["spad_bits"] = (soa["ifmap_spad"] * soa["act_bits"]
                         + soa["filter_spad"] * soa["weight_bits"]
                         + soa["psum_spad"] * soa["psum_bits"])
     return soa
+
+
+def configs_to_soa(
+        configs: Sequence[AcceleratorConfig]) -> dict[str, np.ndarray]:
+    """Struct-of-arrays view of a config batch for the vectorized sweep.
+
+    One array per structural/PE-derived field across all N design points —
+    the input format of :mod:`repro.core.dse_batch`.
+    """
+    i8 = np.int64
+    type_idx = {t: i for i, t in enumerate(PEType)}
+    rows = np.array(
+        [(c.pe_rows, c.pe_cols, c.ifmap_spad, c.filter_spad, c.psum_spad,
+          c.glb_kb, type_idx[c.pe_type]) for c in configs], dtype=i8)
+    rows = rows.reshape(-1, 7)       # keep 2-D for the empty batch
+    return soa_from_fields(
+        pe_type_idx=rows[:, 6], pe_rows=rows[:, 0], pe_cols=rows[:, 1],
+        ifmap_spad=rows[:, 2], filter_spad=rows[:, 3], psum_spad=rows[:, 4],
+        glb_kb=rows[:, 5],
+        dram_bw_gbps=np.array([c.dram_bw_gbps for c in configs],
+                              dtype=np.float64),
+        clock_cap=np.array([np.inf if c.clock_ghz is None else c.clock_ghz
+                            for c in configs], dtype=np.float64))
+
+
+def soa_to_configs(soa: dict[str, np.ndarray],
+                   indices: Sequence[int] | np.ndarray | None = None
+                   ) -> list[AcceleratorConfig]:
+    """Materialize :class:`AcceleratorConfig` objects back out of SoA form
+    (optionally only ``indices``) — used to name streamed Pareto survivors."""
+    types = tuple(PEType)
+    idx = range(len(soa["pe_rows"])) if indices is None else indices
+    return [
+        AcceleratorConfig(
+            pe_type=types[int(soa["pe_type_idx"][i])],
+            pe_rows=int(soa["pe_rows"][i]), pe_cols=int(soa["pe_cols"][i]),
+            ifmap_spad=int(soa["ifmap_spad"][i]),
+            filter_spad=int(soa["filter_spad"][i]),
+            psum_spad=int(soa["psum_spad"][i]),
+            glb_kb=int(soa["glb_kb"][i]),
+            dram_bw_gbps=float(soa["dram_bw_gbps"][i]),
+            clock_ghz=(None if np.isinf(soa["clock_cap"][i])
+                       else float(soa["clock_cap"][i])))
+        for i in idx]
 
 
 def design_space(
@@ -142,3 +188,65 @@ def design_space(
             psum_spad=max(8, int(24 * ss)),
             glb_kb=glb, dram_bw_gbps=bw,
         )
+
+
+def design_space_size(
+    pe_types: tuple[PEType, ...] = tuple(PEType),
+    array_dims: tuple[tuple[int, int], ...] = ((8, 8), (12, 14), (16, 16),
+                                               (24, 24), (32, 32)),
+    spad_scales: tuple[float, ...] = (0.5, 1.0, 2.0),
+    glb_kbs: tuple[int, ...] = (64, 128, 256, 512),
+    bws: tuple[float, ...] = (6.4, 12.8, 25.6),
+) -> int:
+    return (len(pe_types) * len(array_dims) * len(spad_scales)
+            * len(glb_kbs) * len(bws))
+
+
+def design_space_soa(
+    pe_types: tuple[PEType, ...] = tuple(PEType),
+    array_dims: tuple[tuple[int, int], ...] = ((8, 8), (12, 14), (16, 16),
+                                               (24, 24), (32, 32)),
+    spad_scales: tuple[float, ...] = (0.5, 1.0, 2.0),
+    glb_kbs: tuple[int, ...] = (64, 128, 256, 512),
+    bws: tuple[float, ...] = (6.4, 12.8, 25.6),
+    chunk_size: int | None = None,
+) -> Iterator[dict[str, np.ndarray]]:
+    """Full-factorial design space expanded directly to struct-of-arrays
+    chunks — **no per-config Python objects**, so million-point spaces
+    generate at array speed.  Yields SoA dicts of at most ``chunk_size``
+    points (one dict for the whole space when ``None``), enumerated in the
+    same order as :func:`design_space`.
+
+    This is the input feed for :func:`repro.core.dse_batch.sweep_chunked`.
+    """
+    type_idx = {t: i for i, t in enumerate(PEType)}
+    f_types = np.array([type_idx[PEType(t)] for t in pe_types],
+                       dtype=np.int64)
+    f_rows = np.array([d[0] for d in array_dims], dtype=np.int64)
+    f_cols = np.array([d[1] for d in array_dims], dtype=np.int64)
+    f_if = np.array([max(4, int(12 * s)) for s in spad_scales],
+                    dtype=np.int64)
+    f_fl = np.array([max(16, int(224 * s)) for s in spad_scales],
+                    dtype=np.int64)
+    f_ps = np.array([max(8, int(24 * s)) for s in spad_scales],
+                    dtype=np.int64)
+    f_glb = np.array(glb_kbs, dtype=np.int64)
+    f_bw = np.array(bws, dtype=np.float64)
+
+    sizes = (len(f_types), len(f_rows), len(f_if), len(f_glb), len(f_bw))
+    total = int(np.prod(sizes))
+    if total == 0:
+        return
+    chunk = total if chunk_size is None else max(1, int(chunk_size))
+    # mixed-radix decomposition of the flat enumeration index — itertools
+    # .product order without materializing tuples
+    strides = np.cumprod((1,) + sizes[:0:-1])[::-1]  # row-major strides
+    for start in range(0, total, chunk):
+        flat = np.arange(start, min(start + chunk, total), dtype=np.int64)
+        it, id_, is_, ig, ib = (flat // strides[j] % sizes[j]
+                                for j in range(5))
+        yield soa_from_fields(
+            pe_type_idx=f_types[it], pe_rows=f_rows[id_], pe_cols=f_cols[id_],
+            ifmap_spad=f_if[is_], filter_spad=f_fl[is_], psum_spad=f_ps[is_],
+            glb_kb=f_glb[ig], dram_bw_gbps=f_bw[ib],
+            clock_cap=np.full(flat.shape, np.inf))

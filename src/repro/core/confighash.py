@@ -1,0 +1,150 @@
+"""Vectorized counter-based config hashing (threefry-style, 2x32 lanes).
+
+Replaces the per-config ``hashlib.sha256(name + salt)`` synthesis jitter
+with a counter-based hash over packed integer field words:
+
+* configs hash from **packed ``uint32`` field arrays** (no Python name
+  strings, no per-config Python at all) — the whole batch digests in a
+  handful of fused array ops;
+* the hash has a CityHash-like shape tuned for tiny fixed-length inputs:
+  a 4-lane polynomial (multiply-add) compression absorbs the field words,
+  then two cross-keyed **threefry-2x32** blocks (the primitive behind
+  ``jax.random``, at R=13 — Random123's minimal Crush-resistant round
+  count) finalize the 128-bit digest;
+* everything is written against an ``xp`` array namespace using only
+  wrapping ``uint32`` mul/add/xor/roll, so the *identical* code runs on
+  NumPy and on ``jax.numpy`` under ``jax.jit`` with jax's default
+  (x64-disabled) config;
+* the scalar path calls the same functions on a length-1 batch, so
+  scalar / batched-numpy / batched-jax digests are **bit-identical**
+  (property-tested in ``tests/test_confighash.py``).
+
+Digests are 128-bit, wide enough that accidental collisions are not a
+practical concern even for 1e9-point design spaces; they key both the
+in-process synthesis LRU cache and the on-disk npz cache
+(:mod:`repro.core.synthesis`).
+
+Uniform variates for the jitter are built as ``(lane >> 8) * 2**-24``:
+24-bit integers scale exactly in float32 *and* float64, so the value is
+the same number in either precision — another bit-identity guarantee that
+holds under jax's default config.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# threefry-2x32 rotation schedule and key-schedule parity constant
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+_PARITY = 0x1BD11BDA
+_ROUNDS = 13                    # threefry2x32-13: minimal Crush-resistant
+
+# polynomial-compression multipliers (distinct odd constants) and lane IVs
+# (first 32-bit words of sqrt(2), sqrt(3), sqrt(5), sqrt(7))
+_MULTIPLIERS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+_IV = (0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A)
+
+
+def _rotl32(x, d: int, xp):
+    return (x << np.uint32(d)) | (x >> np.uint32(32 - d))
+
+
+def threefry2x32(k0, k1, x0, x1, xp=np, rounds: int = _ROUNDS):
+    """Threefry-2x32 block: key ``(k0, k1)``, counter ``(x0, x1)``, all
+    wrapping ``uint32`` lanes.  Broadcasts over arrays on any backend."""
+    u32 = np.uint32
+    k0 = xp.asarray(k0, dtype=u32)
+    k1 = xp.asarray(k1, dtype=u32)
+    x0 = xp.asarray(x0, dtype=u32) + k0
+    x1 = xp.asarray(x1, dtype=u32) + k1
+    ks = (k0, k1, k0 ^ k1 ^ u32(_PARITY))
+    for r in range((rounds + 3) // 4):
+        rots = _ROTATIONS[:4] if r % 2 == 0 else _ROTATIONS[4:]
+        for rot in rots[:min(4, rounds - 4 * r)]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, rot, xp) ^ x0
+        x0 = x0 + ks[(r + 1) % 3]
+        x1 = x1 + ks[(r + 2) % 3] + u32(r + 1)
+    return x0, x1
+
+
+def digest_words(words, xp=np):
+    """128-bit digest of a sequence of ``uint32`` word arrays.
+
+    4-lane polynomial compression (``h = h * C + w`` per word, wrapping)
+    absorbs the words, then two cross-keyed threefry blocks finalize —
+    every output lane depends on every input word through both the
+    per-lane polynomial and the block cipher.  Returns ``(d0, d1, d2,
+    d3)`` uint32 arrays broadcast to the common shape of ``words``.
+    """
+    u32 = np.uint32
+    words = [xp.asarray(w, dtype=u32) for w in words]
+    # length word guards against trailing-zero ambiguity between schemas
+    words.append(xp.asarray(u32(len(words))))
+    h = [xp.asarray(u32(iv)) for iv in _IV]
+    cs = [u32(c) for c in _MULTIPLIERS]
+    for w in words:
+        h = [hi * ci + w for hi, ci in zip(h, cs)]
+    a0, a1 = threefry2x32(h[2], h[3], h[0], h[1], xp=xp)
+    b0, b1 = threefry2x32(h[0] ^ u32(_PARITY), h[1], h[2], h[3], xp=xp)
+    return a0, a1, b0, b1
+
+
+def uniform01(lane, xp=np, dtype=np.float64):
+    """Uniform variate in [0, 1) from one digest lane: the high 24 bits
+    scale by 2**-24 — exact in float32 and float64, hence bit-identical
+    across numpy / jax-without-x64."""
+    return (xp.asarray(lane, dtype=np.uint32) >> np.uint32(8)) \
+        .astype(dtype) * dtype(2.0 ** -24)
+
+
+def f64_words(x) -> tuple[np.ndarray, np.ndarray]:
+    """Split a float64 array into (lo, hi) uint32 bit-pattern words.
+
+    NaN payloads are canonicalized so any NaN encoding hashes alike.
+    Packing runs in NumPy (it is cache-key preparation, never inside a jax
+    trace); the resulting words feed :func:`digest_words` on any backend.
+    """
+    x = np.ascontiguousarray(x, dtype=np.float64)
+    x = np.where(np.isnan(x), np.float64(np.nan), x)  # canonical quiet NaN
+    bits = x.view(np.uint64)
+    return (bits & np.uint64(0xFFFFFFFF)).astype(np.uint32), \
+        (bits >> np.uint64(32)).astype(np.uint32)
+
+
+def pack_config_words(soa: dict) -> list[np.ndarray]:
+    """The packed ``uint32`` field words of a config batch, from its
+    struct-of-arrays form (:func:`repro.core.accelerator.configs_to_soa`).
+
+    Every field that defines a design point is folded in — including
+    ``clock_cap`` (``+inf`` when unset), which ``AcceleratorConfig.name()``
+    omits — so the digest is a complete identity key.
+    """
+    ints = ["pe_type_idx", "pe_rows", "pe_cols", "ifmap_spad",
+            "filter_spad", "psum_spad", "glb_kb"]
+    words: list[np.ndarray] = [
+        np.asarray(soa[k]).astype(np.uint32) for k in ints]
+    for k in ("dram_bw_gbps", "clock_cap"):
+        lo, hi = f64_words(soa[k])
+        words.extend((lo, hi))
+    return words
+
+
+def config_digests(soa: dict, xp=np):
+    """128-bit digests for a config batch: ``(d0, d1, d2, d3)`` uint32."""
+    return digest_words(pack_config_words(soa), xp=xp)
+
+
+def digests_to_u64(d) -> np.ndarray:
+    """Stack a 4-lane digest into an ``(N, 2)`` uint64 array (npz format)."""
+    d0, d1, d2, d3 = (np.asarray(x, dtype=np.uint64) for x in d)
+    return np.stack([(d1 << np.uint64(32)) | d0,
+                     (d3 << np.uint64(32)) | d2], axis=-1)
+
+
+def digest_keys(d) -> list[bytes]:
+    """Per-config 16-byte cache keys from a 4-lane digest (one ``bytes``
+    per design point — the only per-config Python step, and a cheap one)."""
+    flat = np.ascontiguousarray(digests_to_u64(d))
+    buf = flat.tobytes()
+    return [buf[i:i + 16] for i in range(0, len(buf), 16)]

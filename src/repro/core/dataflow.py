@@ -178,6 +178,14 @@ def leakage_mw(cfg: AcceleratorConfig) -> float:
         + 0.002 * cfg.glb_kb
 
 
+def leakage_mw_soa(soa: dict) -> "np.ndarray":
+    """Vectorized :func:`leakage_mw` over a struct-of-arrays config batch
+    — the single source of the leakage model for the batched synthesis
+    (:func:`repro.core.synthesis.synthesize_soa`) and the sweep kernel
+    inputs (:func:`repro.core.dse_batch.sweep_workload`)."""
+    return soa["num_pes"] * soa["leak_uw"] * 1e-3 + 0.002 * soa["glb_kb"]
+
+
 def run_workload(workload: Workload, cfg: AcceleratorConfig,
                  report=None) -> WorkloadResult:
     """Evaluate a workload on a design point (synthesis report optional)."""

@@ -29,9 +29,11 @@ import numpy as np
 from repro.core.accelerator import (AcceleratorConfig, configs_to_soa,
                                     design_space)
 from repro.core.dataflow import WorkloadResult, run_workload
-from repro.core.dse_batch import pareto_mask, sweep_workload
+from repro.core.dse_batch import (ChunkedSweep, pareto_mask, sweep_chunked,
+                                  sweep_workload)
 from repro.core.pe import PEType
-from repro.core.synthesis import config_hash, synthesize_cached, synthesize_many
+from repro.core.synthesis import (config_keys, sweep_synthesis_cache,
+                                  synthesize_cached)
 from repro.core.workloads import Workload, get_workload
 
 
@@ -156,12 +158,19 @@ def explore(workload: Workload | str,
             *,
             engine: str = "batched",
             use_cache: bool = True,
-            backend: str = "numpy") -> DSEResult:
+            backend: str = "auto",
+            mesh=None) -> DSEResult:
     """Sweep ``configs`` (default: the full paper design space) on a workload.
 
     ``engine="batched"`` evaluates everything as fused array ops;
-    ``engine="scalar"`` runs the legacy per-config Python loop.  Both return
-    bit-identical :class:`DSEResult`.
+    ``engine="scalar"`` runs the legacy per-config Python loop.
+    ``backend`` picks the array engine (``"auto" | "numpy" | "jax"``, see
+    :func:`repro.core.dse_batch.resolve_backend`): the numpy engine is
+    **bit-identical** to the scalar loop, the jax engine (what ``auto``
+    picks when an accelerator is attached) matches headline ratios to
+    <= 1e-6 under jax's default x64-off config — pin ``backend="numpy"``
+    when exact reproducibility across hosts matters.  With
+    ``backend="jax"`` a ``mesh`` shards the config axis across devices.
     """
     if engine == "scalar":
         return explore_scalar(workload, configs, use_cache=use_cache)
@@ -170,7 +179,7 @@ def explore(workload: Workload | str,
     workload = _resolve(workload)
     cfgs = tuple(design_space() if configs is None else configs)
     sweep = sweep_workload(workload, cfgs, use_cache=use_cache,
-                           backend=backend)
+                           backend=backend, mesh=mesh)
     points = [DSEPoint(config=c, result=sweep.result_view(i))
               for i, c in enumerate(cfgs)]
     return DSEResult(workload=workload.name, points=points)
@@ -180,25 +189,38 @@ def explore_many(workloads: Sequence[Workload | str],
                  configs: Iterable[AcceleratorConfig] | None = None,
                  *,
                  use_cache: bool = True,
-                 backend: str = "numpy") -> dict[str, DSEResult]:
+                 backend: str = "auto",
+                 mesh=None) -> dict[str, DSEResult]:
     """Batched multi-workload sweep.
 
     Synthesis and the struct-of-arrays conversion run *once* for the config
     batch and are shared across all workloads — sweeping the paper's three
     models costs one synthesis pass plus three array-kernel evaluations.
     """
+    from repro.core.synthesis import synthesize_soa
     cfgs = tuple(design_space() if configs is None else configs)
     soa = configs_to_soa(cfgs)
-    reports = synthesize_many(cfgs, use_cache=use_cache, soa=soa)
+    cols = (sweep_synthesis_cache().synthesize(soa) if use_cache
+            else synthesize_soa(soa))
     out: dict[str, DSEResult] = {}
     for wl in workloads:
         wl = _resolve(wl)
-        sweep = sweep_workload(wl, cfgs, reports, soa=soa, backend=backend)
+        sweep = sweep_workload(wl, cfgs, cols, soa=soa, backend=backend,
+                               mesh=mesh)
         out[wl.name] = DSEResult(
             workload=wl.name,
             points=[DSEPoint(config=c, result=sweep.result_view(i))
                     for i, c in enumerate(cfgs)])
     return out
+
+
+def explore_chunked(workload: Workload | str,
+                    configs,
+                    **kwargs) -> ChunkedSweep:
+    """Streamed bounded-memory sweep over an arbitrary-size config feed —
+    see :func:`repro.core.dse_batch.sweep_chunked` for the knobs
+    (chunk size, backend, persisted synthesis cache)."""
+    return sweep_chunked(_resolve(workload), configs, **kwargs)
 
 
 class IncrementalSweep:
@@ -212,10 +234,10 @@ class IncrementalSweep:
 
     def __init__(self, workload: Workload | str,
                  configs: Iterable[AcceleratorConfig] | None = None,
-                 *, backend: str = "numpy"):
+                 *, backend: str = "auto"):
         self.workload = _resolve(workload)
         self.backend = backend
-        self._points: dict[str, DSEPoint] = {}
+        self._points: dict[bytes, DSEPoint] = {}
         if configs is not None:
             self.extend(configs)
 
@@ -224,11 +246,11 @@ class IncrementalSweep:
 
     def extend(self, configs: Iterable[AcceleratorConfig]) -> int:
         """Evaluate any new configs; returns how many were actually new."""
+        batch = list(configs)
         fresh: list[AcceleratorConfig] = []
-        keys: list[str] = []
+        keys: list[bytes] = []
         seen_now = set()
-        for cfg in configs:
-            key = config_hash(cfg)
+        for cfg, key in zip(batch, config_keys(batch)):  # one digest pass
             if key in self._points or key in seen_now:
                 continue
             seen_now.add(key)

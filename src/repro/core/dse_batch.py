@@ -8,28 +8,46 @@ the workload becomes one array per layer field, and the row-stationary
 mapping from :mod:`repro.core.dataflow` is re-expressed as broadcasted
 ``(N, L)`` array expressions.
 
-The kernel is written against an ``xp`` array namespace so it runs on NumPy
-(default — all shapes here are static, so NumPy is both fastest to dispatch
-and bit-exact against the scalar reference) or on ``jax.numpy`` under
-``jax.jit`` when 64-bit mode is enabled (``backend="jax"``).
+The kernel is written against an ``xp`` array namespace and a dtype policy:
 
-Every arithmetic expression mirrors :func:`repro.core.dataflow.map_layer`
-op-for-op, in the same order, so per-layer and aggregate results bit-match
-the scalar path (asserted by ``tests/test_dse_batch.py``).
+* ``exact=True`` (NumPy default) — int64/float64, op-for-op identical to
+  :func:`repro.core.dataflow.map_layer`, so per-layer and aggregate
+  results bit-match the scalar path (``tests/test_dse_batch.py``);
+* ``exact=False`` — the **x64-free** policy used under ``jax.jit`` with
+  jax's default config: spatial-mapping integers stay int32 (provably
+  small), while anything that can overflow 31 bits — MAC counts, byte /
+  element tallies, cycle counts, energies — is promoted to float32 with
+  explicit ``floor`` where the exact path truncates, and the per-config
+  reductions are Kahan-compensated.  Headline ratios agree with the exact
+  path to ~1e-7 relative (asserted at 1e-6 in tests).
+
+Backends resolve explicitly (``"auto" | "numpy" | "jax"``): ``"jax"``
+raises if jax is unusable instead of silently falling back, and ``"auto"``
+picks jax exactly when an accelerator platform is attached.  Under jax the
+config axis can be sharded across devices via
+:func:`repro.launch.mesh.make_sweep_mesh` (``mesh=...``).
+
+For spaces too large to hold in memory, :func:`sweep_chunked` streams an
+arbitrary-size config generator through the same kernel in bounded-memory
+chunks with a running Pareto-front reduction, optionally backed by the
+on-disk synthesis cache (:class:`repro.core.synthesis
+.PersistentSynthesisCache`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Sequence
+import functools
+from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
-from repro.core.accelerator import AcceleratorConfig, configs_to_soa
-from repro.core.dataflow import LayerResult
+from repro.core.accelerator import (AcceleratorConfig, configs_to_soa,
+                                    soa_to_configs)
+from repro.core.dataflow import LayerResult, leakage_mw_soa
 from repro.core.pe import rf_access_energy_pj, sram_access_energy_pj
-from repro.core.synthesis import SynthesisReport, synthesize_many
+from repro.core.synthesis import (PersistentSynthesisCache, SynthesisReport,
+                                  sweep_synthesis_cache, synthesize_soa)
 from repro.core.workloads import Workload
 
 
@@ -69,64 +87,185 @@ class WorkloadBatch:
         return len(self.layer_names)
 
 
-def _sweep_kernel(xp, cfg: dict, lay: dict) -> dict:
+@functools.lru_cache(maxsize=64)
+def _workload_batch(wl: Workload) -> WorkloadBatch:
+    """SoA conversion cache — workloads are small frozen dataclasses, so
+    repeat sweeps of the same model skip the per-layer array build."""
+    return WorkloadBatch.from_workload(wl)
+
+
+def _pack_block_key(cfg: dict) -> np.ndarray | None:
+    """Pack the clock/bandwidth-independent config fields into one int64
+    key per design point (for unique-row factorization of the kernel's
+    mapping/byte block).  Returns None when the fields don't fit 63 bits
+    — the caller then falls back to the direct per-config path, so an
+    overflow can never alias two distinct configs."""
+    fields = (cfg["pe_rows"], cfg["pe_cols"], cfg["act_bits"],
+              cfg["weight_bits"], cfg["glb_kb"], cfg["filter_spad"],
+              cfg["psum_spad"])
+    cols = [np.asarray(a[:, 0]) for a in fields]
+    bits = []
+    for col in cols:
+        lo, hi = int(col.min()), int(col.max())
+        if lo < 0:
+            return None
+        bits.append(max(1, hi.bit_length()))
+    if sum(bits) > 63:
+        return None
+    key = np.zeros_like(cols[0])
+    for col, b in zip(cols, bits):
+        key = (key << b) | col
+    return key
+
+
+def _kahan_sum_rows(xp, x, dtype):
+    """Sequential compensated row-sum over the layer axis.
+
+    The exact path needs plain sequential adds (bit-matching ``sum()``);
+    the float32 path compensates so L-layer accumulation error stays at
+    one-ulp instead of L ulps."""
+    total = xp.zeros(x.shape[0], dtype=dtype)
+    comp = xp.zeros(x.shape[0], dtype=dtype)
+    for j in range(x.shape[1]):
+        y = x[:, j] - comp
+        t = total + y
+        comp = (t - total) - y
+        total = t
+    return total
+
+
+def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True) -> dict:
     """All-configs x all-layers row-stationary mapping + energy model.
 
     ``cfg`` holds ``(N, 1)`` arrays, ``lay`` holds ``(1, L)`` arrays; every
-    expression broadcasts to ``(N, L)``.  Mirrors ``map_layer`` exactly.
+    expression broadcasts to ``(N, L)``.  ``exact=True`` mirrors
+    ``map_layer`` bit-for-bit; ``exact=False`` is the x64-free dtype-safe
+    policy (see module docstring).
     """
+    f = np.float64 if exact else np.float32
     r, e, f_, ss = lay["r"], lay["e"], lay["f"], lay["s"]
     c, k, n = lay["c"], lay["k"], lay["batch"]
+    macs = lay["macs"]          # int64 when exact, float32 otherwise
 
-    # ---- spatial mapping ---------------------------------------------------
-    sets_fit = xp.maximum(1, cfg["pe_rows"] // r)
+    def fl(x):                  # promote a (possibly int) array to f
+        return x.astype(f)
+
+    # The mapping / byte-count / GLB-traffic block depends on the config
+    # only through (pe_rows, pe_cols, act_bits, weight_bits, glb_kb,
+    # filter_spad, psum_spad) — NOT through bandwidth or the synthesized
+    # clock.  Factorial design spaces repeat those key fields across
+    # thousands of configs (e.g. 240 unique vs 720 points in the paper
+    # space), so on the eager numpy path we evaluate the block once per
+    # *unique* key row and gather — a bit-identical copy of the same
+    # values at a fraction of the (N, L) op count.  The jax path keeps the
+    # direct form (np.unique doesn't trace; jit fuses instead).
+    _BLOCK_FIELDS = ("pe_rows", "pe_cols", "num_pes", "act_bits",
+                     "weight_bits", "glb_kb", "filter_spad", "psum_spad")
+    inv = None
+    if exact and xp is np and cfg["pe_rows"].shape[0] > 16:
+        key = _pack_block_key(cfg)
+        if key is not None:
+            _, uidx, inv = np.unique(key, return_index=True,
+                                     return_inverse=True)
+            inv = inv.reshape(-1)
+            if len(uidx) == len(key):
+                inv = None                  # all distinct: nothing to save
+    cb = cfg if inv is None else {k2: cfg[k2][uidx] for k2 in _BLOCK_FIELDS}
+
+    # ---- spatial mapping (small integers: int64 exact / int32 safe) --------
+    sets_fit = xp.maximum(1, cb["pe_rows"] // r)
     c_simult = xp.minimum(c, sets_fit)
     k_simult = xp.maximum(1, sets_fit // c_simult)
-    fit_horz = xp.minimum(e, cfg["pe_cols"])
+    fit_horz = xp.minimum(e, cb["pe_cols"])
     n_e_groups = _ceil_div(e, fit_horz)
     n_c_groups = _ceil_div(c, c_simult)
     n_k_groups = _ceil_div(k, k_simult)
 
-    passes = n * n_e_groups * n_c_groups * n_k_groups
-    compute_cycles = passes * ss * f_
-    macs = lay["macs"]
-    utilization = macs / xp.maximum(1, compute_cycles * cfg["num_pes"])
+    if exact:
+        passes = n * n_e_groups * n_c_groups * n_k_groups
+        # int multiply is associative: fold the (1, L) factors first so
+        # only one product runs per row — value identical to map_layer
+        compute_cycles = passes * (ss * f_)
+        utilization = macs / xp.maximum(1, compute_cycles * cb["num_pes"])
+    else:
+        # group products can pass 2**31 — promote the accumulator only
+        compute_cycles = (fl(n) * fl(n_e_groups) * fl(n_c_groups)
+                          * fl(n_k_groups) * fl(ss) * fl(f_))
+        utilization = macs / xp.maximum(
+            f(1.0), compute_cycles * fl(cb["num_pes"]))
 
     # ---- element / byte counts (quantization-aware) -------------------------
-    ab, wb = cfg["act_bits"], cfg["weight_bits"]
+    ab, wb = cb["act_bits"], cb["weight_bits"]
     ifmap_elems = n * c * lay["h"] * lay["w"]
     weight_elems = k * c * r * ss
     ofmap_elems = n * k * e * f_
-    ifmap_bytes = ifmap_elems * ab // 8
-    weight_bytes = weight_elems * wb // 8
-    ofmap_bytes = ofmap_elems * ab // 8
+    if exact:
+        ifmap_bytes = ifmap_elems * ab // 8
+        weight_bytes = weight_elems * wb // 8
+        ofmap_bytes = ofmap_elems * ab // 8
+    else:
+        # elems * bits exceeds int32; float32 with explicit truncation
+        ifmap_bytes = xp.floor(fl(ifmap_elems) * fl(ab) / 8.0)
+        weight_bytes = xp.floor(fl(weight_elems) * fl(wb) / 8.0)
+        ofmap_bytes = xp.floor(fl(ofmap_elems) * fl(ab) / 8.0)
 
-    glb_half = cfg["glb_kb"] * 1024 // 2
+    glb_half = cb["glb_kb"] * 1024 // 2
     filt_bytes_one = xp.maximum(1, c * r * ss * wb // 8)
     k_fit_glb = xp.maximum(1, glb_half // filt_bytes_one)
     n_k_glb = _ceil_div(k, k_fit_glb)
-    ifmap_restream = xp.where(ifmap_bytes <= glb_half, 1, n_k_glb)
-    ifmap_dram = ifmap_bytes * ifmap_restream
-    dram_bytes = ifmap_dram + weight_bytes + ofmap_bytes
+    if exact:
+        ifmap_restream = xp.where(ifmap_bytes <= glb_half, 1, n_k_glb)
+        ifmap_dram = ifmap_bytes * ifmap_restream
+        dram_bytes = ifmap_dram + weight_bytes + ofmap_bytes
+        dram_elems = ifmap_elems * ifmap_restream + weight_elems \
+            + ofmap_elems
+    else:
+        ifmap_restream = xp.where(ifmap_bytes <= fl(glb_half),
+                                  f(1.0), fl(n_k_glb))
+        dram_bytes = ifmap_bytes * ifmap_restream + weight_bytes \
+            + ofmap_bytes
+        dram_elems = fl(ifmap_elems) * ifmap_restream + fl(weight_elems) \
+            + fl(ofmap_elems)
 
-    dram_elems = ifmap_elems * ifmap_restream + weight_elems + ofmap_elems
-    k_res = xp.maximum(1, cfg["filter_spad"] // xp.maximum(1, ss))
-    glb_ifmap = ifmap_elems * _ceil_div(n_k_groups, k_res)
-    w_res = xp.minimum(n_e_groups,
-                       xp.maximum(1, cfg["filter_spad"] // xp.maximum(1, ss)))
-    glb_weight = weight_elems * xp.maximum(1, n_e_groups // w_res)
+    # map_layer computes this subexpression twice with identical value;
+    # evaluate once and share
+    filt_res = xp.maximum(1, cb["filter_spad"] // xp.maximum(1, ss))
+    k_res = filt_res
+    w_res = xp.minimum(n_e_groups, filt_res)
     psum_strip = f_
-    spill = xp.where(cfg["psum_spad"] >= psum_strip, 0, n_c_groups - 1)
-    glb_psum = 2 * ofmap_elems * xp.maximum(0, spill)
-    glb_elems = 2 * dram_elems + glb_ifmap + glb_weight + glb_psum
-    glb_bytes = glb_elems * ab // 8
+    spill = xp.where(cb["psum_spad"] >= psum_strip, 0, n_c_groups - 1)
+    if exact:
+        glb_ifmap = ifmap_elems * _ceil_div(n_k_groups, k_res)
+        glb_weight = weight_elems * xp.maximum(1, n_e_groups // w_res)
+        glb_psum = 2 * ofmap_elems * xp.maximum(0, spill)
+        glb_elems = 2 * dram_elems + glb_ifmap + glb_weight + glb_psum
+        glb_bytes = glb_elems * ab // 8
+    else:
+        glb_ifmap = fl(ifmap_elems) * fl(_ceil_div(n_k_groups, k_res))
+        glb_weight = fl(weight_elems) * fl(xp.maximum(1, n_e_groups // w_res))
+        glb_psum = 2.0 * fl(ofmap_elems) * fl(xp.maximum(0, spill))
+        glb_elems = 2.0 * dram_elems + glb_ifmap + glb_weight + glb_psum
+        glb_bytes = xp.floor(glb_elems * fl(ab) / 8.0)
+
+    if inv is not None:                     # scatter back to all N configs
+        compute_cycles = compute_cycles[inv]
+        utilization = utilization[inv]
+        dram_bytes = dram_bytes[inv]
+        glb_elems = glb_elems[inv]
+        glb_bytes = glb_bytes[inv]
 
     # ---- stalls -------------------------------------------------------------
     clock_ghz = cfg["clock_ghz"]
     bw_bytes_per_cycle = cfg["dram_bw_gbps"] / clock_ghz
-    mem_cycles = (dram_bytes
-                  / xp.maximum(1e-9, bw_bytes_per_cycle)).astype(np.int64)
-    total_cycles = xp.maximum(compute_cycles, mem_cycles)
+    if exact:
+        mem_cycles = (dram_bytes
+                      / xp.maximum(1e-9, bw_bytes_per_cycle)
+                      ).astype(np.int64)
+        total_cycles = xp.maximum(compute_cycles, mem_cycles)
+    else:
+        mem_cycles = xp.floor(dram_bytes
+                              / xp.maximum(f(1e-9), bw_bytes_per_cycle))
+        total_cycles = xp.maximum(compute_cycles, mem_cycles)
 
     # ---- energy -------------------------------------------------------------
     # the pe.py cost helpers are numpy-ufunc based, so they broadcast over
@@ -141,12 +280,17 @@ def _sweep_kernel(xp, cfg: dict, lay: dict) -> dict:
         * (total_cycles / (clock_ghz * 1e9)) * 1e12
     energy_pj = e_mac + e_spad + e_glb + e_leak
 
-    # ---- per-config aggregates (sequential over L to bit-match sum()) ------
-    n_layers = energy_pj.shape[1]
-    energy_sum = xp.zeros(energy_pj.shape[0], dtype=np.float64)
-    for j in range(n_layers):
-        energy_sum = energy_sum + energy_pj[:, j]
-    total_cycles_sum = xp.sum(total_cycles, axis=1)
+    # ---- per-config aggregates ---------------------------------------------
+    if exact:
+        # sequential over L to bit-match the scalar sum()
+        n_layers = energy_pj.shape[1]
+        energy_sum = xp.zeros(energy_pj.shape[0], dtype=np.float64)
+        for j in range(n_layers):
+            energy_sum = energy_sum + energy_pj[:, j]
+        total_cycles_sum = xp.sum(total_cycles, axis=1)
+    else:
+        energy_sum = _kahan_sum_rows(xp, energy_pj, f)
+        total_cycles_sum = _kahan_sum_rows(xp, total_cycles, f)
     total_macs = xp.sum(macs)
 
     clk = clock_ghz[:, 0]
@@ -166,19 +310,154 @@ def _sweep_kernel(xp, cfg: dict, lay: dict) -> dict:
     }
 
 
-_JAX_KERNEL = None
+# ---------------------------------------------------------------------------
+# Backend resolution
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("auto", "numpy", "jax")
 
 
-def _get_jax_kernel():
-    """jit-compiled variant of the sweep kernel (requires jax x64 mode)."""
-    global _JAX_KERNEL
-    if _JAX_KERNEL is None:
+def _probe_jax() -> tuple[bool, str]:
+    try:
         import jax
-        import jax.numpy as jnp
-        if not jax.config.read("jax_enable_x64"):
-            return None
-        _JAX_KERNEL = jax.jit(lambda cfg, lay: _sweep_kernel(jnp, cfg, lay))
-    return _JAX_KERNEL
+        jax.devices()
+    except Exception as exc:  # import error, no platform, bad install...
+        return False, f"{type(exc).__name__}: {exc}"
+    return True, ""
+
+
+_JAX_PROBE: tuple[bool, str] | None = None
+
+
+def _jax_usable() -> tuple[bool, str]:
+    global _JAX_PROBE
+    if _JAX_PROBE is None:
+        _JAX_PROBE = _probe_jax()
+    return _JAX_PROBE
+
+
+def _jax_has_accelerator() -> bool:
+    import jax
+    return any(d.platform != "cpu" for d in jax.devices())
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve ``"auto" | "numpy" | "jax"`` to a concrete engine.
+
+    Explicit ``"jax"`` **raises** when jax is unusable — no silent numpy
+    fallback.  ``"auto"`` picks jax exactly when an accelerator platform
+    (GPU/TPU) is attached; on CPU NumPy is both faster to dispatch and
+    bit-exact against the scalar reference, so it wins the tie.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown sweep backend: {backend!r} (choose from {BACKENDS})")
+    if backend == "numpy":
+        return "numpy"
+    usable, why = _jax_usable()
+    if backend == "jax":
+        if not usable:
+            raise RuntimeError(
+                f"sweep backend 'jax' requested but jax is unusable ({why})")
+        return "jax"
+    return "jax" if usable and _jax_has_accelerator() else "numpy"
+
+
+# ---------------------------------------------------------------------------
+# jax path: jit cache + x64-free input conversion + optional shard_map
+# ---------------------------------------------------------------------------
+
+_JAX_KERNELS: dict = {}
+
+# int32-safe cfg/lay fields under the x64-free policy; everything else
+# (counts that can pass 2**31, float quantities) converts to float32
+_CFG_INT32 = ("pe_rows", "pe_cols", "ifmap_spad", "filter_spad",
+              "psum_spad", "glb_kb", "glb_bits", "num_pes", "act_bits",
+              "weight_bits", "spad_bits")
+_LAY_INT32 = ("r", "s", "e", "f", "c", "k", "h", "w", "batch")
+
+
+def _to_jax_inputs(cfg: dict, lay: dict, exact: bool) -> tuple[dict, dict]:
+    if exact:
+        return cfg, lay
+    jcfg = {k: (v.astype(np.int32) if k in _CFG_INT32
+                else v.astype(np.float32)) for k, v in cfg.items()}
+    jlay = {k: (v.astype(np.int32) if k in _LAY_INT32
+                else v.astype(np.float32)) for k, v in lay.items()}
+    return jcfg, jlay
+
+
+def get_jax_kernel(mesh=None):
+    """The jit-compiled sweep kernel for the current jax config.
+
+    Compiled once per (x64-mode, mesh) and cached — repeat sweeps over
+    same-shape batches hit the jit cache with zero retraces (asserted in
+    tests via ``_cache_size``).  With ``mesh``, the config axis is sharded
+    across the mesh's devices via ``shard_map``; layer arrays are
+    replicated.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    exact = bool(jax.config.read("jax_enable_x64"))
+    # key meshes by value (axes + device ids), not identity: fresh but
+    # equivalent meshes reuse one compiled kernel instead of growing the
+    # cache (and pinning executables) without bound
+    mesh_key = None if mesh is None else (
+        tuple(mesh.axis_names), mesh.devices.shape,
+        tuple(d.id for d in mesh.devices.flat))
+    key = (exact, mesh_key)
+    fn = _JAX_KERNELS.get(key)
+    if fn is not None:
+        return fn, exact
+
+    def kernel(cfg, lay):
+        return _sweep_kernel(jnp, cfg, lay, exact=exact)
+
+    if mesh is None:
+        fn = jax.jit(kernel)
+    else:
+        from repro.launch.mesh import compat_shard_map
+        P = jax.sharding.PartitionSpec
+
+        def sharded(cfg, lay):
+            n = cfg["pe_rows"].shape[0]
+            cfg_specs = {k: P("configs", None) for k in cfg}
+            lay_specs = {k: P(None, None) for k in lay}
+            shapes = jax.eval_shape(kernel, cfg, lay)
+            # config-major outputs shard; (1, L) layer stats and 0-d
+            # scalars replicate
+            out_specs = {
+                k: (P("configs", *([None] * (s.ndim - 1)))
+                    if s.ndim >= 1 and s.shape[0] == n
+                    else P(*([None] * s.ndim)))
+                for k, s in shapes.items()}
+            return compat_shard_map(
+                kernel, mesh=mesh, in_specs=(cfg_specs, lay_specs),
+                out_specs=out_specs)(cfg, lay)
+
+        fn = jax.jit(sharded)
+    _JAX_KERNELS[key] = fn
+    return fn, exact
+
+
+def _run_kernel(cfg: dict, lay: dict, backend: str,
+                mesh=None) -> dict[str, np.ndarray]:
+    if backend == "jax":
+        fn, exact = get_jax_kernel(mesh)
+        # under the x64-free policy "macs" lands in float32 via
+        # _to_jax_inputs (it feeds only float math in the kernel)
+        jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
+        n = cfg["pe_rows"].shape[0]
+        if mesh is not None:
+            pad = -n % mesh.devices.size
+            if pad:
+                jcfg = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
+                        for k, v in jcfg.items()}
+        out = {k: np.asarray(v)[:n] if np.ndim(v) else np.asarray(v)
+               for k, v in fn(jcfg, jlay).items()}
+        return out
+    return _sweep_kernel(np, cfg, lay)
 
 
 @dataclasses.dataclass
@@ -282,59 +561,227 @@ class BatchedWorkloadResult:
         return self.energy_j * self.latency_s
 
 
+def _reports_to_cols(reports) -> dict[str, np.ndarray]:
+    """Accept synthesis results as a report list *or* column dict."""
+    if isinstance(reports, dict):
+        return reports
+    return {
+        "clock_ghz": np.array([r.clock_ghz for r in reports],
+                              dtype=np.float64),
+        "area_mm2": np.array([r.area_mm2 for r in reports],
+                             dtype=np.float64),
+    }
+
+
+def _make_cfg_lay(soa: dict, cols: dict, wb: WorkloadBatch
+                  ) -> tuple[dict, dict]:
+    leak_mw = leakage_mw_soa(soa)
+    cfg = {k: soa[k][:, None] for k in
+           ("pe_rows", "pe_cols", "ifmap_spad", "filter_spad", "psum_spad",
+            "glb_kb", "glb_bits", "num_pes", "act_bits", "weight_bits",
+            "spad_bits", "dram_bw_gbps", "mac_energy_pj")}
+    cfg["clock_ghz"] = np.asarray(cols["clock_ghz"],
+                                  dtype=np.float64)[:, None]
+    cfg["area_mm2"] = np.asarray(cols["area_mm2"], dtype=np.float64)[:, None]
+    cfg["leak_mw"] = leak_mw[:, None]
+    lay = {k: v[None, :] for k, v in wb.arrays.items()}
+    return cfg, lay
+
+
 def sweep_workload(workload: Workload,
                    configs: Sequence[AcceleratorConfig],
-                   reports: Sequence[SynthesisReport] | None = None,
+                   reports: Sequence[SynthesisReport] | dict | None = None,
                    *,
                    use_cache: bool = True,
-                   backend: str = "numpy",
-                   soa: dict[str, np.ndarray] | None = None) -> BatchedSweep:
+                   backend: str = "auto",
+                   soa: dict[str, np.ndarray] | None = None,
+                   mesh=None) -> BatchedSweep:
     """Evaluate ``workload`` on every config in one batched pass.
 
     ``reports``/``soa`` let :func:`repro.core.dse.explore_many` synthesize
-    and SoA-convert once and reuse across workloads.
+    and SoA-convert once and reuse across workloads; ``reports`` may be a
+    list of :class:`SynthesisReport` or a column dict from
+    :func:`repro.core.synthesis.synthesize_soa`.
     """
+    backend = resolve_backend(backend)
     configs = tuple(configs)
     if soa is None:
         soa = configs_to_soa(configs)
     if reports is None:
-        reports = synthesize_many(configs, use_cache=use_cache, soa=soa)
-    wb = WorkloadBatch.from_workload(workload)
-
-    clock_ghz = np.array([r.clock_ghz for r in reports], dtype=np.float64)
-    area_mm2 = np.array([r.area_mm2 for r in reports], dtype=np.float64)
-    leak_mw = soa["num_pes"] * soa["leak_uw"] * 1e-3 \
-        + 0.002 * soa["glb_kb"]
-
-    cfg = {k: v[:, None] for k, v in soa.items()}
-    cfg["clock_ghz"] = clock_ghz[:, None]
-    cfg["area_mm2"] = area_mm2[:, None]
-    cfg["leak_mw"] = leak_mw[:, None]
-    lay = {k: v[None, :] for k, v in wb.arrays.items()}
-
-    kernel = None
-    if backend == "jax":
-        kernel = _get_jax_kernel()
-        if kernel is None:
-            warnings.warn("dse_batch: jax backend requires jax_enable_x64; "
-                          "falling back to numpy", stacklevel=2)
-    if kernel is not None:
-        out = {k: np.asarray(v) for k, v in kernel(cfg, lay).items()}
+        cols = (sweep_synthesis_cache().synthesize(soa) if use_cache
+                else synthesize_soa(soa))
     else:
-        out = _sweep_kernel(np, cfg, lay)
-
+        cols = _reports_to_cols(reports)
+    wb = _workload_batch(workload)
+    cfg, lay = _make_cfg_lay(soa, cols, wb)
+    out = _run_kernel(cfg, lay, backend, mesh=mesh)
     return BatchedSweep(workload=workload.name, configs=configs,
                         layer_names=wb.layer_names, macs=wb.arrays["macs"],
-                        clock_ghz=clock_ghz, area_mm2=area_mm2, arrays=out)
+                        clock_ghz=cfg["clock_ghz"][:, 0],
+                        area_mm2=cfg["area_mm2"][:, 0], arrays=out)
 
 
-def pareto_mask(perf: np.ndarray, energy: np.ndarray,
-                chunk: int = 1024) -> np.ndarray:
-    """Boolean mask of non-dominated points for (maximize perf, minimize
-    energy) — the vectorized replacement for the O(n^2) Python dominance
-    loop (chunked broadcasting keeps memory at ``chunk * n`` bools)."""
-    perf = np.asarray(perf, dtype=np.float64)
-    energy = np.asarray(energy, dtype=np.float64)
+# ---------------------------------------------------------------------------
+# Streamed chunked sweep with running Pareto-front reduction
+# ---------------------------------------------------------------------------
+
+# per-point metric columns retained for Pareto survivors
+_FRONT_METRICS = ("perf_per_area", "energy_j", "latency_s",
+                  "throughput_gmacs")
+_SOA_ID_FIELDS = ("pe_type_idx", "pe_rows", "pe_cols", "ifmap_spad",
+                  "filter_spad", "psum_spad", "glb_kb", "dram_bw_gbps",
+                  "clock_cap")
+
+
+@dataclasses.dataclass
+class ChunkedSweep:
+    """Result of a streamed sweep: running totals + the Pareto frontier
+    (maximize perf/area, minimize energy), *not* the full point set."""
+
+    workload: str
+    backend: str
+    n_configs: int
+    n_chunks: int
+    front_soa: dict[str, np.ndarray]      # identity fields of survivors
+    front_metrics: dict[str, np.ndarray]  # _FRONT_METRICS columns
+    synthesis_cache: PersistentSynthesisCache | None = None
+
+    @property
+    def front_size(self) -> int:
+        return len(self.front_metrics["energy_j"])
+
+    def front_configs(self) -> list[AcceleratorConfig]:
+        """Materialize the frontier as configs, sorted by energy."""
+        order = np.argsort(self.front_metrics["energy_j"], kind="stable")
+        return soa_to_configs(self.front_soa, order)
+
+    def front_points(self) -> list[dict]:
+        order = np.argsort(self.front_metrics["energy_j"], kind="stable")
+        cfgs = soa_to_configs(self.front_soa, order)
+        return [
+            dict({m: float(self.front_metrics[m][i])
+                  for m in _FRONT_METRICS}, config=cfg)
+            for i, cfg in zip(order, cfgs)]
+
+
+def _as_soa_chunks(chunks, chunk_size: int) -> Iterator[dict]:
+    """Normalize a config feed — SoA dicts, config sequences, or a flat
+    config generator — into bounded-size SoA chunks."""
+    pending: list[AcceleratorConfig] = []
+    if isinstance(chunks, dict):        # single SoA
+        chunks = (chunks,)
+    for item in chunks:
+        if isinstance(item, dict):
+            if pending:
+                yield configs_to_soa(tuple(pending))
+                pending.clear()
+            n = len(item["pe_rows"])
+            for s in range(0, n, chunk_size):
+                yield {k: v[s:s + chunk_size] for k, v in item.items()}
+        elif isinstance(item, AcceleratorConfig):
+            pending.append(item)
+            if len(pending) >= chunk_size:
+                yield configs_to_soa(tuple(pending))
+                pending.clear()
+        else:                           # a sequence of configs
+            for cfg in item:
+                pending.append(cfg)
+                if len(pending) >= chunk_size:
+                    yield configs_to_soa(tuple(pending))
+                    pending.clear()
+    if pending:
+        yield configs_to_soa(tuple(pending))
+
+
+def sweep_chunked(workload: Workload,
+                  configs: Iterable,
+                  *,
+                  backend: str = "auto",
+                  chunk_size: int = 32768,
+                  use_cache: bool = False,
+                  cache: PersistentSynthesisCache | str | None = None,
+                  save_cache: bool = True,
+                  mesh=None) -> ChunkedSweep:
+    """Stream an arbitrary-size config feed through the sweep engine in
+    bounded memory, keeping only running aggregates + the Pareto front.
+
+    ``configs`` may be SoA dicts (e.g. from
+    :func:`repro.core.accelerator.design_space_soa` — the fast path, no
+    per-config objects), sequences of :class:`AcceleratorConfig`, or a
+    flat config generator.  ``cache`` (a
+    :class:`~repro.core.synthesis.PersistentSynthesisCache` or an npz
+    path) persists synthesis results across runs, so a cold re-sweep of a
+    seen space skips synthesis; ``use_cache`` instead routes through the
+    in-process array cache.
+    """
+    backend = resolve_backend(backend)
+    if isinstance(cache, (str, bytes)) or hasattr(cache, "__fspath__"):
+        cache = PersistentSynthesisCache(cache)
+    wb = _workload_batch(workload)
+
+    front_soa: dict[str, np.ndarray] | None = None
+    front_metrics: dict[str, np.ndarray] | None = None
+    n_total = 0
+    n_chunks = 0
+    for soa in _as_soa_chunks(configs, chunk_size):
+        n = len(soa["pe_rows"])
+        if n == 0:
+            continue
+        n_total += n
+        n_chunks += 1
+        if cache is not None:
+            cols = cache.synthesize(soa)
+        elif use_cache:
+            cols = sweep_synthesis_cache().synthesize(soa)
+        else:
+            cols = synthesize_soa(soa)
+        cfg, lay = _make_cfg_lay(soa, cols, wb)
+        if backend == "jax" and 0 < n % chunk_size:
+            # pad the tail chunk to the steady-state shape: one jit trace
+            # serves the whole stream (padded rows are sliced off below)
+            pad = chunk_size - n % chunk_size
+            cfg = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
+                   for k, v in cfg.items()}
+        out = _run_kernel(cfg, lay, backend, mesh=mesh)
+
+        perf = np.asarray(out["perf_per_area"], dtype=np.float64)[:n]
+        energy = np.asarray(out["energy_j"], dtype=np.float64)[:n]
+        # prefilter: only the chunk's own frontier can join the global one
+        local = pareto_mask(perf, energy)
+        idx = np.nonzero(local)[0]
+        cand_soa = {k: soa[k][idx] for k in _SOA_ID_FIELDS}
+        cand_metrics = {m: np.asarray(out[m], dtype=np.float64)[:n][idx]
+                        for m in _FRONT_METRICS}
+        if front_soa is None:
+            front_soa, front_metrics = cand_soa, cand_metrics
+        else:
+            front_soa = {k: np.concatenate([front_soa[k], cand_soa[k]])
+                         for k in _SOA_ID_FIELDS}
+            front_metrics = {
+                m: np.concatenate([front_metrics[m], cand_metrics[m]])
+                for m in _FRONT_METRICS}
+        keep = pareto_mask(front_metrics["perf_per_area"],
+                           front_metrics["energy_j"])
+        front_soa = {k: v[keep] for k, v in front_soa.items()}
+        front_metrics = {m: v[keep] for m, v in front_metrics.items()}
+
+    if front_soa is None:
+        front_soa = {k: np.empty(0, dtype=np.int64)
+                     for k in _SOA_ID_FIELDS}
+        front_metrics = {m: np.empty(0, dtype=np.float64)
+                         for m in _FRONT_METRICS}
+    if cache is not None and save_cache and cache.path is not None:
+        cache.save()
+    return ChunkedSweep(workload=workload.name, backend=backend,
+                        n_configs=n_total, n_chunks=n_chunks,
+                        front_soa=front_soa, front_metrics=front_metrics,
+                        synthesis_cache=cache)
+
+
+def _pareto_mask_bcast(perf: np.ndarray, energy: np.ndarray,
+                       chunk: int) -> np.ndarray:
+    """O(n^2) chunked-broadcast dominance test (reference for the sorted
+    algorithm; memory stays at ``chunk * n`` bools)."""
     n = perf.shape[0]
     keep = np.ones(n, dtype=bool)
     for s in range(0, n, chunk):
@@ -344,3 +791,47 @@ def pareto_mask(perf: np.ndarray, energy: np.ndarray,
                      & ((perf[None, :] > p) | (energy[None, :] < e))).any(1)
         keep[s:s + chunk] = ~dominated
     return keep
+
+
+def _pareto_mask_sorted(perf: np.ndarray,
+                        energy: np.ndarray) -> np.ndarray:
+    """O(n log n) dominance test: sort by (energy asc, perf desc), then a
+    point survives iff it has its energy-group's max perf and strictly
+    beats the running perf max of all lower-energy groups.  Tie semantics
+    identical to the broadcast test (duplicates both survive)."""
+    n = perf.shape[0]
+    order = np.lexsort((-perf, energy))
+    ps, es = perf[order], energy[order]
+    new_group = np.empty(n, dtype=bool)
+    new_group[0] = True
+    new_group[1:] = es[1:] != es[:-1]
+    # group max perf = first row of the group (perf sorted desc in-group)
+    group_id = np.cumsum(new_group) - 1
+    group_max = ps[new_group]                       # (G,)
+    cummax = np.maximum.accumulate(group_max)
+    prev_best = np.full(len(group_max), -np.inf)
+    prev_best[1:] = cummax[:-1]                     # strictly lower energy
+    survive_sorted = (ps == group_max[group_id]) \
+        & (ps > prev_best[group_id])
+    keep = np.empty(n, dtype=bool)
+    keep[order] = survive_sorted
+    return keep
+
+
+def pareto_mask(perf: np.ndarray, energy: np.ndarray,
+                chunk: int = 1024) -> np.ndarray:
+    """Boolean mask of non-dominated points for (maximize perf, minimize
+    energy).
+
+    Small batches use the chunked-broadcast dominance test; large ones
+    switch to the sort-based O(n log n) algorithm (bit-identical output,
+    asserted against each other in tests) so the streamed sweep's running
+    reduction stays cheap at 1M-config scale.
+    """
+    perf = np.asarray(perf, dtype=np.float64)
+    energy = np.asarray(energy, dtype=np.float64)
+    if perf.shape[0] == 0:
+        return np.zeros(0, dtype=bool)
+    if perf.shape[0] <= 2048:
+        return _pareto_mask_bcast(perf, energy, chunk)
+    return _pareto_mask_sorted(perf, energy)

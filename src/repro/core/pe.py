@@ -164,9 +164,9 @@ def sram_access_energy_pj(size_bits, word_bits: int = 32, xp=np):
     return 0.09 * xp.sqrt(size_kb) + 0.04
 
 
-def sram_area_um2(size_bits):
+def sram_area_um2(size_bits, xp=np):
     """Area of an SRAM macro.  ~0.55 um^2/bit @45nm + fixed periphery."""
-    return np.where(np.asarray(size_bits) > 0, 0.55 * size_bits + 300.0, 0.0)
+    return xp.where(xp.asarray(size_bits) > 0, 0.55 * size_bits + 300.0, 0.0)
 
 
 def dram_energy_pj_per_byte() -> float:

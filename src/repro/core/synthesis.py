@@ -7,21 +7,31 @@ models (constants in :mod:`repro.core.pe`), with a small deterministic,
 config-dependent "process" perturbation so the regression fit in
 :mod:`repro.core.ppa_model` is a genuine estimation problem rather than an
 identity.  DESIGN.md §2 records this substitution.
+
+The perturbation is a **counter-based hash** over the config's packed
+integer field words (:mod:`repro.core.confighash`) — fully vectorized, no
+per-config Python, and bit-identical between the scalar, batched-numpy,
+and jax paths (the scalar path simply evaluates a length-1 batch).  The
+same 128-bit digest keys the in-process LRU report cache and the on-disk
+npz cache, so a cold run over a previously seen space skips synthesis
+entirely.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import hashlib
-import math
+import pathlib
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.accelerator import AcceleratorConfig
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.confighash import (config_digests, digest_keys,
+                                   digests_to_u64, uniform01)
+from repro.core.dataflow import leakage_mw_soa
 from repro.core.pe import (rf_access_energy_pj, sram_access_energy_pj,
                            sram_area_um2)
-
 
 @dataclasses.dataclass(frozen=True)
 class SynthesisReport:
@@ -36,59 +46,149 @@ class SynthesisReport:
         return dataclasses.asdict(self)
 
 
-def _jitter_named(name: str, salt: str, scale: float) -> float:
-    h = hashlib.sha256((name + salt).encode()).digest()
-    u = int.from_bytes(h[:8], "little") / float(1 << 64)   # [0,1)
-    return 1.0 + scale * (2.0 * u - 1.0)
+# columns of the array-form synthesis result, in stable (npz) order
+REPORT_COLUMNS = ("area_mm2", "power_mw", "clock_ghz", "throughput_gmacs")
 
 
-def _jitter(cfg: AcceleratorConfig, salt: str, scale: float) -> float:
-    """Deterministic multiplicative perturbation in [1-scale, 1+scale].
+def synthesize_soa(soa: dict[str, np.ndarray],
+                   digests=None, xp=np) -> dict[str, np.ndarray]:
+    """Run the analytical synthesis flow for a whole config batch.
 
-    Emulates synthesis noise (placement, wire load, timing closure slack)
-    in a reproducible way: hash of the config name + salt.
+    Pure fused array math over the struct-of-arrays form
+    (:func:`repro.core.accelerator.configs_to_soa`): every op is
+    elementwise, so any row of a batch is bit-identical to a length-1
+    evaluation of that config — the scalar :func:`synthesize` is literally
+    this function on one row.  Returns ``{column: (N,) float64}`` for
+    :data:`REPORT_COLUMNS`.
     """
-    return _jitter_named(cfg.name(), salt, scale)
+    if digests is None:
+        digests = config_digests(soa, xp=xp)
+    f = np.float64
+    # one independent digest lane per perturbed quantity
+    jit_area = 1.0 + 0.03 * (2.0 * uniform01(digests[0], xp=xp) - 1.0)
+    jit_clk = 1.0 + 0.02 * (2.0 * uniform01(digests[1], xp=xp) - 1.0)
+    jit_pw = 1.0 + 0.04 * (2.0 * uniform01(digests[2], xp=xp) - 1.0)
+
+    n = soa["num_pes"].astype(f)
+    glb_bits = soa["glb_bits"].astype(f)
+    spad_bits = soa["spad_bits"].astype(f)
+
+    # ---- area ------------------------------------------------------------
+    pe_area = soa["mac_area_um2"] + sram_area_um2(spad_bits, xp=xp)
+    glb_area = sram_area_um2(glb_bits, xp=xp)
+    # NoC + control overhead grows slightly super-linearly with array size
+    noc_area = 120.0 * n * (1.0 + 0.004 * xp.sqrt(n))
+    area_mm2 = (n * pe_area + glb_area + noc_area) * jit_area / 1e6
+
+    # ---- timing ----------------------------------------------------------
+    # Wire delay degrades the achievable clock for very large arrays.
+    wire_penalty = 1.0 + 0.002 * xp.sqrt(n)
+    clock_ghz = xp.minimum((soa["max_clock_ghz"] / wire_penalty) * jit_clk,
+                           soa["clock_cap"])
+
+    # ---- power at nominal activity (70% MAC utilization) ------------------
+    util = 0.70
+    mac_pw = n * util * soa["mac_energy_pj"] * clock_ghz * 1e9 * 1e-12  # mW
+    # each MAC: ifmap read + weight read + ~1 psum spad access
+    e_spad = rf_access_energy_pj(spad_bits, xp=xp)
+    spad_pw = n * util * 3.0 * e_spad * clock_ghz * 1e9 * 1e-12
+    # GLB serves ~1 access per 8 MACs across the array (row-stationary reuse)
+    e_glb = sram_access_energy_pj(glb_bits, xp=xp)
+    glb_pw = n * util * (1.0 / 8.0) * e_glb * clock_ghz * 1e9 * 1e-12
+    leak_mw = leakage_mw_soa(soa)                         # GLB ~2uW/kB
+    power_mw = (mac_pw + spad_pw + glb_pw + leak_mw) * jit_pw
+
+    return {
+        "area_mm2": area_mm2,
+        "power_mw": power_mw,
+        "clock_ghz": clock_ghz,
+        "throughput_gmacs": n * clock_ghz,
+    }
+
+
+def synthesize(cfg: AcceleratorConfig) -> SynthesisReport:
+    """Run the analytical 'synthesis flow' for one design point — a
+    length-1 batch through :func:`synthesize_soa`, so scalar and batched
+    results are bit-identical by construction."""
+    cols = synthesize_soa(configs_to_soa((cfg,)))
+    return SynthesisReport(**{k: float(cols[k][0]) for k in REPORT_COLUMNS})
 
 
 def config_hash(cfg: AcceleratorConfig) -> str:
-    """Stable key for the synthesis cache.
-
-    ``cfg.name()`` omits ``clock_ghz``, which changes timing closure, so the
-    key folds every field in.  A plain formatted string (not a digest): it
-    is exact, stable across processes, and ~50x cheaper than hashing a
-    deep-copied ``dataclasses.astuple``.
-    """
-    return (f"{cfg.pe_type.value}:{cfg.pe_rows}:{cfg.pe_cols}"
-            f":{cfg.ifmap_spad}:{cfg.filter_spad}:{cfg.psum_spad}"
-            f":{cfg.glb_kb}:{cfg.dram_bw_gbps!r}:{cfg.clock_ghz!r}")
+    """Stable identity key for one design point: the hex form of its
+    128-bit packed-field digest.  Folds in *every* field — including
+    ``clock_ghz``, which ``cfg.name()`` omits but which changes timing
+    closure.  Batch paths should use :func:`config_keys` instead."""
+    return config_keys((cfg,))[0].hex()
 
 
-_SYNTH_CACHE: dict[str, SynthesisReport] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+def config_keys(configs: Sequence[AcceleratorConfig],
+                soa: dict[str, np.ndarray] | None = None) -> list[bytes]:
+    """16-byte digest keys for a config batch (vectorized)."""
+    if soa is None:
+        soa = configs_to_soa(tuple(configs))
+    return digest_keys(config_digests(soa))
+
+
+# ---------------------------------------------------------------------------
+# In-process report cache: bounded LRU keyed by the 16-byte digest.
+# ---------------------------------------------------------------------------
+
+_SYNTH_CACHE: collections.OrderedDict[bytes, SynthesisReport] = \
+    collections.OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_CACHE_LIMIT = 1 << 18          # ~260k reports ≈ tens of MB, bounded
 
 
 def synthesis_cache_stats() -> dict[str, int]:
-    return dict(_CACHE_STATS, size=len(_SYNTH_CACHE))
+    stats = dict(_CACHE_STATS, size=len(_SYNTH_CACHE), limit=_CACHE_LIMIT)
+    stats.update(array_hits=_SWEEP_CACHE.hits, array_misses=_SWEEP_CACHE.misses,
+                 array_size=len(_SWEEP_CACHE),
+                 array_evictions=_SWEEP_CACHE.evictions)
+    return stats
+
+
+def set_synthesis_cache_limit(limit: int) -> int:
+    """Cap both in-process synthesis caches (entries/rows); returns the
+    old cap.  Shrinking evicts oldest entries immediately — in the object
+    LRU and in the sweep engine's array store alike."""
+    global _CACHE_LIMIT
+    old, _CACHE_LIMIT = _CACHE_LIMIT, max(0, int(limit))
+    _evict_to_limit()
+    _SWEEP_CACHE.max_rows = _CACHE_LIMIT
+    _SWEEP_CACHE._compact()
+    return old
 
 
 def clear_synthesis_cache() -> None:
     _SYNTH_CACHE.clear()
-    _CACHE_STATS["hits"] = 0
-    _CACHE_STATS["misses"] = 0
+    _CACHE_STATS.update(hits=0, misses=0, evictions=0)
+    _SWEEP_CACHE.clear()
+
+
+def _evict_to_limit() -> None:
+    while len(_SYNTH_CACHE) > _CACHE_LIMIT:
+        _SYNTH_CACHE.popitem(last=False)
+        _CACHE_STATS["evictions"] += 1
+
+
+def _cache_put(key: bytes, rep: SynthesisReport) -> None:
+    _SYNTH_CACHE[key] = rep
+    _evict_to_limit()
 
 
 def synthesize_cached(cfg: AcceleratorConfig) -> SynthesisReport:
     """`synthesize` with memoization — re-sweeping a design space (new
     workload, extended sweep) never re-runs the flow for a known config."""
-    key = config_hash(cfg)
+    key = config_keys((cfg,))[0]
     hit = _SYNTH_CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
+        _SYNTH_CACHE.move_to_end(key)
         return hit
     _CACHE_STATS["misses"] += 1
     rep = synthesize(cfg)
-    _SYNTH_CACHE[key] = rep
+    _cache_put(key, rep)
     return rep
 
 
@@ -98,120 +198,210 @@ def synthesize_many(configs: Sequence[AcceleratorConfig],
                     ) -> list[SynthesisReport]:
     """Vectorized synthesis for a batch of design points.
 
-    The per-op math is evaluated as NumPy array expressions across the whole
-    batch (identical op order to :func:`synthesize`, so results bit-match);
-    only the SHA-based process jitter stays a per-config Python step.  Cached
-    configs are skipped entirely.  ``soa`` (from
-    :func:`repro.core.accelerator.configs_to_soa`) can be passed to reuse an
-    existing struct-of-arrays conversion.
+    Digests, jitter, and the PPA math all evaluate as fused array
+    expressions across the whole batch; cached configs are skipped
+    entirely.  ``soa`` (from
+    :func:`repro.core.accelerator.configs_to_soa`) can be passed to reuse
+    an existing struct-of-arrays conversion.
     """
     configs = list(configs)
     if not configs:
         return []
+    if soa is None:
+        soa = configs_to_soa(configs)
     out: list[SynthesisReport | None] = [None] * len(configs)
-    todo: list[int] = []
-    keys: list[str | None] = [None] * len(configs)
-    for i, cfg in enumerate(configs):
-        if use_cache:
-            keys[i] = key = config_hash(cfg)
+    digests = config_digests(soa)
+    if use_cache:
+        keys = digest_keys(digests)
+        todo = []
+        for i, key in enumerate(keys):
             hit = _SYNTH_CACHE.get(key)
             if hit is not None:
                 _CACHE_STATS["hits"] += 1
+                _SYNTH_CACHE.move_to_end(key)
                 out[i] = hit
-                continue
-            _CACHE_STATS["misses"] += 1
-        todo.append(i)
-    if todo:
-        if soa is None:
-            from repro.core.accelerator import configs_to_soa
-            soa = configs_to_soa(configs)
-        f = np.float64
+            else:
+                _CACHE_STATS["misses"] += 1
+                todo.append(i)
+        if not todo:
+            return out  # type: ignore[return-value]
         idx = np.array(todo, dtype=np.intp)
-        n = soa["num_pes"][idx].astype(f)
-        glb_bits = soa["glb_bits"][idx].astype(f)
-        glb_kb = soa["glb_kb"][idx].astype(f)
-        spad_bits = soa["spad_bits"][idx].astype(f)
-        mac_area = soa["mac_area_um2"][idx]
-        mac_e = soa["mac_energy_pj"][idx]
-        max_clk = soa["max_clock_ghz"][idx]
-        leak_uw = soa["leak_uw"][idx]
-        clk_cap = soa["clock_cap"][idx]
-        names = [configs[i].name() for i in todo]
-        jit_area = np.array([_jitter_named(nm, "area", 0.03)
-                             for nm in names], dtype=f)
-        jit_clk = np.array([_jitter_named(nm, "clk", 0.02)
-                            for nm in names], dtype=f)
-        jit_pw = np.array([_jitter_named(nm, "power", 0.04)
-                           for nm in names], dtype=f)
-
-        pe_area = mac_area + sram_area_um2(spad_bits)
-        glb_area = sram_area_um2(glb_bits)
-        noc_area = 120.0 * n * (1.0 + 0.004 * np.sqrt(n))
-        area_mm2 = (n * pe_area + glb_area + noc_area) * jit_area / 1e6
-
-        wire_penalty = 1.0 + 0.002 * np.sqrt(n)
-        clock_ghz = np.minimum((max_clk / wire_penalty) * jit_clk, clk_cap)
-
-        util = 0.70
-        mac_pw = n * util * mac_e * clock_ghz * 1e9 * 1e-12
-        e_spad = rf_access_energy_pj(spad_bits)
-        spad_pw = n * util * 3.0 * e_spad * clock_ghz * 1e9 * 1e-12
-        e_glb = sram_access_energy_pj(glb_bits)
-        glb_pw = n * util * (1.0 / 8.0) * e_glb * clock_ghz * 1e9 * 1e-12
-        leak_mw = n * leak_uw * 1e-3 + 0.002 * glb_kb
-        power_mw = (mac_pw + spad_pw + glb_pw + leak_mw) * jit_pw
-
+        sub = {k: v[idx] for k, v in soa.items()}
+        cols = synthesize_soa(sub, digests=tuple(d[idx] for d in digests))
         for j, i in enumerate(todo):
             rep = SynthesisReport(
-                area_mm2=float(area_mm2[j]), power_mw=float(power_mw[j]),
-                clock_ghz=float(clock_ghz[j]),
-                throughput_gmacs=float(n[j] * clock_ghz[j]))
+                **{k: float(cols[k][j]) for k in REPORT_COLUMNS})
             out[i] = rep
-            if use_cache:
-                _SYNTH_CACHE[keys[i]] = rep
-    return out  # type: ignore[return-value]
+            _cache_put(keys[i], rep)
+        return out  # type: ignore[return-value]
+    cols = synthesize_soa(soa, digests=digests)
+    return [SynthesisReport(**{k: float(cols[k][i])
+                               for k in REPORT_COLUMNS})
+            for i in range(len(configs))]
 
 
-def synthesize(cfg: AcceleratorConfig) -> SynthesisReport:
-    """Run the analytical 'synthesis flow' for one design point."""
-    s = cfg.spec
-    n = cfg.num_pes
+# ---------------------------------------------------------------------------
+# Persisted synthesis cache: npz of (N, 2) uint64 digest keys + one float64
+# column per REPORT_COLUMNS entry.  Array-level (no report objects), so the
+# streamed sweep driver can hydrate 1M-config spaces in bounded time.
+# ---------------------------------------------------------------------------
 
-    # ---- area ------------------------------------------------------------
-    spad_bits = s.scratchpad_bits(cfg.ifmap_spad, cfg.filter_spad,
-                                  cfg.psum_spad)
-    pe_area = s.mac_area_um2 + sram_area_um2(spad_bits)
-    glb_area = sram_area_um2(cfg.glb_bits)
-    # NoC + control overhead grows slightly super-linearly with array size
-    noc_area = 120.0 * n * (1.0 + 0.004 * math.sqrt(n))
-    area_um2 = (n * pe_area + glb_area + noc_area) * _jitter(cfg, "area", 0.03)
-    area_mm2 = area_um2 / 1e6
+class PersistentSynthesisCache:
+    """Digest-keyed synthesis store with npz persistence.
 
-    # ---- timing ----------------------------------------------------------
-    # Wire delay degrades the achievable clock for very large arrays.
-    wire_penalty = 1.0 + 0.002 * math.sqrt(n)
-    clock_ghz = (s.max_clock_ghz / wire_penalty) * _jitter(cfg, "clk", 0.02)
-    if cfg.clock_ghz is not None:
-        clock_ghz = min(clock_ghz, cfg.clock_ghz)
+    ``lookup`` / ``insert`` operate on whole chunks; rows live in one
+    growing value matrix so hits gather with a single fancy index.  A cold
+    sweep over a previously saved space does zero synthesis math.
 
-    # ---- power at nominal activity (70% MAC utilization) ------------------
-    util = 0.70
-    mac_pw = n * util * s.mac_energy_pj * clock_ghz * 1e9 * 1e-12      # mW
-    # each MAC: ifmap read + weight read + ~1 psum spad access
-    e_spad = rf_access_energy_pj(spad_bits)
-    spad_pw = n * util * 3.0 * e_spad * clock_ghz * 1e9 * 1e-12
-    # GLB serves ~1 access per 8 MACs across the array (row-stationary reuse)
-    e_glb = sram_access_energy_pj(cfg.glb_bits)
-    glb_pw = n * util * (1.0 / 8.0) * e_glb * clock_ghz * 1e9 * 1e-12
-    from repro.core.pe import _P_PE_LEAK_UW  # static power per PE type
-    leak_mw = n * _P_PE_LEAK_UW[s.pe_type] * 1e-3 \
-        + 0.002 * cfg.glb_kb                      # GLB leakage ~2uW/kB
-    power_mw = (mac_pw + spad_pw + glb_pw + leak_mw) \
-        * _jitter(cfg, "power", 0.04)
+    ``max_rows`` bounds memory: on overflow the oldest half of the rows is
+    dropped and the store compacted (counted in ``evictions``).
+    """
 
-    return SynthesisReport(
-        area_mm2=area_mm2,
-        power_mw=power_mw,
-        clock_ghz=clock_ghz,
-        throughput_gmacs=n * clock_ghz,
-    )
+    def __init__(self, path: str | pathlib.Path | None = None,
+                 max_rows: int | None = None):
+        self.path = pathlib.Path(path) if path is not None else None
+        self.max_rows = max_rows
+        self._index: dict[bytes, int] = {}
+        self._keys = np.empty((0, 2), dtype=np.uint64)
+        self._vals = np.empty((0, len(REPORT_COLUMNS)), dtype=np.float64)
+        self._n = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        if self.path is not None and self.path.exists():
+            self.load(self.path)
+
+    def clear(self) -> None:
+        """Drop all rows and stats; keeps the cap and the save path."""
+        path, self.path = self.path, None     # don't reload from disk
+        self.__init__(path=None, max_rows=self.max_rows)
+        self.path = path
+
+    def _compact(self) -> None:
+        if self.max_rows is None or self._n <= self.max_rows:
+            return
+        keep = self.max_rows // 2           # newest half survives
+        drop = self._n - keep
+        self._keys[:keep] = self._keys[drop:self._n]
+        self._vals[:keep] = self._vals[drop:self._n]
+        self._n = keep
+        self.evictions += drop
+        buf = np.ascontiguousarray(self._keys[:keep]).tobytes()
+        self._index = {buf[16 * i:16 * (i + 1)]: i for i in range(keep)}
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _grow(self, extra: int) -> None:
+        need = self._n + extra
+        cap = len(self._keys)
+        if need > cap:
+            cap = max(need, 2 * cap, 1024)
+            self._keys = np.resize(self._keys, (cap, 2))
+            self._vals = np.resize(self._vals, (cap, len(REPORT_COLUMNS)))
+
+    def lookup(self, digests) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+        """(hit_mask, columns) for a digest batch; missed rows are zero."""
+        keys = digest_keys(digests)
+        rows = np.array([self._index.get(k, -1) for k in keys],
+                        dtype=np.intp)
+        mask = rows >= 0
+        vals = np.zeros((len(keys), len(REPORT_COLUMNS)), dtype=np.float64)
+        if mask.any():
+            vals[mask] = self._vals[rows[mask]]
+        self.hits += int(mask.sum())
+        self.misses += int((~mask).sum())
+        return mask, {c: vals[:, j] for j, c in enumerate(REPORT_COLUMNS)}
+
+    def insert(self, digests, cols: dict[str, np.ndarray],
+               rows_mask: np.ndarray | None = None) -> int:
+        """Store (a masked subset of) a digest batch's columns.
+
+        Bulk path: rows append en masse and the index updates with one
+        ``dict.update``.  Duplicate keys (re-inserted or repeated within
+        the batch) leave their older rows in place as dead weight and
+        point the index at the newest — values for a given digest are
+        identical by construction, so this only costs bytes, not
+        correctness.
+        """
+        u64 = np.ascontiguousarray(digests_to_u64(digests))
+        vals = np.stack([np.asarray(cols[c], dtype=np.float64)
+                         for c in REPORT_COLUMNS], axis=-1)
+        if rows_mask is not None:
+            u64, vals = np.ascontiguousarray(u64[rows_mask]), vals[rows_mask]
+        m = len(u64)
+        if m == 0:
+            return 0
+        self._grow(m)
+        self._keys[self._n:self._n + m] = u64
+        self._vals[self._n:self._n + m] = vals
+        buf = u64.tobytes()
+        before = len(self._index)
+        self._index.update(
+            zip((buf[16 * i:16 * (i + 1)] for i in range(m)),
+                range(self._n, self._n + m)))
+        self._n += m
+        self._compact()
+        return len(self._index) - before
+
+    def save(self, path: str | pathlib.Path | None = None) -> int:
+        """Write all rows to ``path`` (default: the constructor path)."""
+        path = pathlib.Path(path) if path is not None else self.path
+        if path is None:
+            raise ValueError("PersistentSynthesisCache.save: no path")
+        # write through a handle: np.savez would append ".npz" to a
+        # suffix-less path and orphan the cache on the next load
+        with open(path, "wb") as fh:
+            np.savez_compressed(
+                fh, keys=self._keys[:self._n],
+                **{c: self._vals[:self._n, j]
+                   for j, c in enumerate(REPORT_COLUMNS)})
+        return self._n
+
+    def load(self, path: str | pathlib.Path) -> int:
+        """Merge rows from an npz file; returns how many were new."""
+        with np.load(pathlib.Path(path)) as z:
+            keys = np.ascontiguousarray(z["keys"], dtype=np.uint64)
+            vals = np.stack([z[c] for c in REPORT_COLUMNS], axis=-1)
+        before = self._n
+        self._grow(len(keys))
+        buf = keys.tobytes()
+        for i in range(len(keys)):
+            key = buf[16 * i:16 * (i + 1)]
+            if key in self._index:
+                continue
+            row = self._n
+            self._index[key] = row
+            self._keys[row] = keys[i]
+            self._vals[row] = vals[i]
+            self._n += 1
+        self._compact()
+        return self._n - before
+
+    def synthesize(self, soa: dict[str, np.ndarray]
+                   ) -> dict[str, np.ndarray]:
+        """Cache-through batched synthesis: hit rows gather from the
+        store, miss rows run :func:`synthesize_soa` and are inserted."""
+        digests = config_digests(soa)
+        mask, cols = self.lookup(digests)
+        miss = ~mask
+        if miss.any():
+            idx = np.nonzero(miss)[0]
+            sub = {k: v[idx] for k, v in soa.items()}
+            fresh = synthesize_soa(sub, digests=tuple(d[idx]
+                                                      for d in digests))
+            for c in REPORT_COLUMNS:
+                cols[c][idx] = fresh[c]
+            self.insert(tuple(d[idx] for d in digests), fresh)
+        return cols
+
+
+# module-level array store: the batched sweep engine's synthesis cache
+# (object-free twin of _SYNTH_CACHE, bounded the same way)
+_SWEEP_CACHE = PersistentSynthesisCache(max_rows=_CACHE_LIMIT)
+
+
+def sweep_synthesis_cache() -> PersistentSynthesisCache:
+    """The process-wide array-level synthesis cache used by
+    :func:`repro.core.dse_batch.sweep_workload` and friends."""
+    return _SWEEP_CACHE

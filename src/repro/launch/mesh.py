@@ -37,3 +37,32 @@ def make_host_mesh(model: int = 1):
     while n % model != 0:
         model -= 1
     return compat_make_mesh((n // model, model), ("data", "model"))
+
+
+def make_sweep_mesh():
+    """1-D mesh over all devices for sharding a DSE sweep's config axis
+    (:func:`repro.core.dse_batch.sweep_workload` with ``backend="jax"``)."""
+    return compat_make_mesh((jax.device_count(),), ("configs",))
+
+
+def compat_shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat ``shard_map`` with the replication check disabled on
+    every jax version — the sweep kernel emits replicated layer stats the
+    checker cannot verify.  The kwarg spelling moved across releases
+    (``check_rep`` -> ``check_vma``), so pick whichever the installed
+    ``shard_map`` accepts."""
+    import inspect
+    sm = jax.shard_map if hasattr(jax, "shard_map") else None
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = {}
+    try:
+        params = inspect.signature(sm).parameters
+        for name in ("check_vma", "check_rep"):
+            if name in params:
+                kwargs[name] = False
+                break
+    except (TypeError, ValueError):   # C-accelerated callable, no sig
+        kwargs["check_rep"] = False
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **kwargs)

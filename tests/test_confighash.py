@@ -1,0 +1,140 @@
+"""Counter-based config hash: bit-identity across scalar / batched-numpy /
+batched-jax paths (ISSUE 2 acceptance), distribution sanity, and key
+stability for the persisted synthesis cache.
+
+Property tests run over seeded random config batches (no hypothesis
+dependency, so they run in every environment)."""
+
+import numpy as np
+import pytest
+
+from repro.core import confighash as ch
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.pe import PEType
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+TYPES = tuple(PEType)
+
+
+def random_config(rng: np.random.Generator) -> AcceleratorConfig:
+    return AcceleratorConfig(
+        pe_type=TYPES[rng.integers(len(TYPES))],
+        pe_rows=int(rng.integers(1, 257)),
+        pe_cols=int(rng.integers(1, 257)),
+        ifmap_spad=int(rng.integers(0, 4097)),
+        filter_spad=int(rng.integers(0, 4097)),
+        psum_spad=int(rng.integers(0, 4097)),
+        glb_kb=int(rng.integers(1, 1 << 16)),
+        dram_bw_gbps=float(np.round(rng.uniform(0.1, 1e4), 3)),
+        clock_ghz=(None if rng.random() < 0.5
+                   else float(np.round(rng.uniform(0.05, 10.0), 3))))
+
+
+def random_batch(rng, n):
+    return [random_config(rng) for _ in range(n)]
+
+
+def test_digests_bit_identical_scalar_batched_jax():
+    """Property: for random config batches, the scalar path (length-1
+    batch), the batched numpy path, and the jax path (default config, no
+    x64) produce bit-identical digest lanes."""
+    rng = np.random.default_rng(42)
+    for trial in range(25):
+        cfgs = random_batch(rng, int(rng.integers(1, 16)))
+        words = ch.pack_config_words(configs_to_soa(cfgs))
+        batched = ch.digest_words(words, xp=np)
+        for i in range(len(cfgs)):
+            soa1 = configs_to_soa(cfgs[i:i + 1])
+            single = ch.digest_words(ch.pack_config_words(soa1), xp=np)
+            for lane_b, lane_s in zip(batched, single):
+                assert lane_b[i] == lane_s[0], (trial, i)
+        jbatched = ch.digest_words(words, xp=jnp)
+        for lane_b, lane_j in zip(batched, jbatched):
+            lane_j = np.asarray(lane_j)
+            assert lane_j.dtype == np.uint32
+            assert np.array_equal(lane_b, lane_j), trial
+
+
+def test_jitter_variates_bit_identical_across_precisions():
+    """float64 (numpy) and float32 (jax x64-free) jitter variates are the
+    same real numbers: 24-bit integers scale exactly in both."""
+    rng = np.random.default_rng(7)
+    d = ch.config_digests(configs_to_soa(random_batch(rng, 64)))
+    for lane in d[:3]:
+        u64 = ch.uniform01(lane, xp=np, dtype=np.float64)
+        u32 = np.asarray(ch.uniform01(jnp.asarray(lane), xp=jnp,
+                                      dtype=np.float32))
+        assert u32.dtype == np.float32
+        assert np.array_equal(u64, u32.astype(np.float64))
+        assert np.all((u64 >= 0.0) & (u64 < 1.0))
+
+
+def test_scalar_and_batched_synthesis_jitter_agree():
+    """End-to-end: synthesize (length-1 batch) == synthesize_many row for
+    random configs — the jitter inherits the digest bit-identity."""
+    from repro.core.synthesis import synthesize, synthesize_many
+    rng = np.random.default_rng(11)
+    cfgs = random_batch(rng, 32)
+    reps = synthesize_many(cfgs, use_cache=False)
+    for cfg, rep in zip(cfgs, reps):
+        assert rep == synthesize(cfg), cfg.name()
+
+
+def test_distinct_configs_get_distinct_digests():
+    rng = np.random.default_rng(3)
+    cfgs = random_batch(rng, 512)
+    uniq_cfgs = len({(c.pe_type, c.pe_rows, c.pe_cols, c.ifmap_spad,
+                      c.filter_spad, c.psum_spad, c.glb_kb,
+                      c.dram_bw_gbps, c.clock_ghz) for c in cfgs})
+    keys = ch.digest_keys(ch.config_digests(configs_to_soa(cfgs)))
+    assert len(set(keys)) == uniq_cfgs
+
+
+def test_digest_uniqueness_and_uniformity_on_grid():
+    from repro.core.accelerator import design_space_soa
+    (soa,) = design_space_soa(glb_kbs=tuple(range(16, 2064, 16)),
+                              bws=(6.4, 12.8, 25.6))
+    n = len(soa["pe_rows"])
+    d = ch.config_digests(soa)
+    u64 = ch.digests_to_u64(d)
+    assert len(np.unique(u64.view([("a", "u8"), ("b", "u8")]))) == n
+    for lane in range(4):
+        u = ch.uniform01(d[lane])
+        assert abs(u.mean() - 0.5) < 0.01
+        assert abs(u.std() - np.sqrt(1 / 12)) < 0.01
+
+
+def test_digest_golden_value_is_stable():
+    """The digest keys npz caches on disk — a change here silently orphans
+    every persisted cache, so pin one golden value."""
+    soa = configs_to_soa([AcceleratorConfig()])
+    key = ch.digest_keys(ch.config_digests(soa))[0]
+    assert key.hex() == "85ec1d0bfd223cd6d7ac4de740b49172"
+
+
+def test_f64_words_canonicalizes_nan_and_separates_values():
+    lo, hi = ch.f64_words(np.array([np.nan, np.inf, 12.8]))
+    lo2, hi2 = ch.f64_words(np.array([np.float64("nan"), np.inf, 12.8]))
+    assert np.array_equal(lo, lo2) and np.array_equal(hi, hi2)
+    assert (lo[1], hi[1]) != (lo[2], hi[2])
+
+
+def test_config_hash_distinguishes_every_field():
+    base = AcceleratorConfig()
+    from repro.core.synthesis import config_hash
+    variants = [
+        AcceleratorConfig(pe_type=PEType.FP32),
+        AcceleratorConfig(pe_rows=13),
+        AcceleratorConfig(pe_cols=13),
+        AcceleratorConfig(ifmap_spad=13),
+        AcceleratorConfig(filter_spad=13),
+        AcceleratorConfig(psum_spad=13),
+        AcceleratorConfig(glb_kb=13),
+        AcceleratorConfig(dram_bw_gbps=13.0),
+        AcceleratorConfig(clock_ghz=0.5),
+    ]
+    h0 = config_hash(base)
+    hashes = {config_hash(v) for v in variants}
+    assert h0 not in hashes and len(hashes) == len(variants)

@@ -46,7 +46,8 @@ TINY_WL = Workload("tiny", (
 
 def test_batched_explore_bitmatches_scalar():
     scalar = explore_scalar(TINY_WL, SMALL_SPACE)
-    batched = explore(TINY_WL, SMALL_SPACE, use_cache=False)
+    batched = explore(TINY_WL, SMALL_SPACE, use_cache=False,
+                      backend="numpy")
     assert len(scalar.points) == len(batched.points)
     for ps, pb in zip(scalar.points, batched.points):
         assert ps.config == pb.config
@@ -65,7 +66,7 @@ def test_batched_headline_ratios_identical_on_full_space():
     cfgs = list(design_space())
     wl = get_workload("vgg16")
     scalar = explore_scalar(wl, cfgs)
-    batched = explore(wl, cfgs)
+    batched = explore(wl, cfgs, backend="numpy")
     assert scalar.headline_ratios() == batched.headline_ratios()
     assert scalar.normalized() == batched.normalized()
 
@@ -94,6 +95,79 @@ def test_pareto_front_matches_scalar_reference():
     assert [p.config for p in fv] == [p.config for p in fs]
 
 
+# ---------------------------------------------------------------------------
+# pareto_mask / pareto_front edge cases (ISSUE 2 satellite)
+# ---------------------------------------------------------------------------
+
+def _brute_mask(perf, energy):
+    return np.array([
+        not any(perf[q] >= perf[i] and energy[q] <= energy[i]
+                and (perf[q] > perf[i] or energy[q] < energy[i])
+                for q in range(len(perf)))
+        for i in range(len(perf))])
+
+
+def test_pareto_mask_empty_and_single_point():
+    assert pareto_mask(np.array([]), np.array([])).shape == (0,)
+    assert pareto_mask(np.array([]), np.array([])).dtype == bool
+    assert pareto_mask(np.array([3.0]), np.array([2.0])).tolist() == [True]
+
+
+def test_pareto_mask_exact_duplicates_all_survive():
+    # duplicate points do not strictly dominate each other: both stay
+    perf = np.array([5.0, 5.0, 5.0, 1.0])
+    energy = np.array([2.0, 2.0, 2.0, 1.0])
+    got = pareto_mask(perf, energy)
+    assert got.tolist() == [True, True, True, True]
+    assert np.array_equal(got, _brute_mask(perf, energy))
+
+
+def test_pareto_mask_ties_on_one_axis():
+    # equal perf: only the lower-energy point survives; equal energy:
+    # only the higher-perf point survives
+    perf = np.array([4.0, 4.0, 2.0, 3.0])
+    energy = np.array([1.0, 2.0, 3.0, 3.0])
+    got = pareto_mask(perf, energy)
+    assert got.tolist() == [True, False, False, False]
+    assert np.array_equal(got, _brute_mask(perf, energy))
+
+
+def test_pareto_mask_sorted_and_bcast_agree_under_heavy_ties():
+    from repro.core.dse_batch import _pareto_mask_bcast, _pareto_mask_sorted
+    rng = np.random.default_rng(19)
+    for trial in range(20):
+        n = int(rng.integers(1, 500))
+        # coarse quantization forces many exact ties and duplicates
+        perf = np.round(rng.uniform(0, 5, n), 1)
+        energy = np.round(rng.uniform(0, 5, n), 1)
+        a = _pareto_mask_bcast(perf, energy, chunk=64)
+        b = _pareto_mask_sorted(perf, energy)
+        assert np.array_equal(a, b), trial
+        assert np.array_equal(a, _brute_mask(perf, energy)), trial
+
+
+def test_pareto_mask_large_batch_uses_sorted_path():
+    rng = np.random.default_rng(23)
+    n = 5000                                   # above the dispatch cutoff
+    perf = np.round(rng.uniform(0, 100, n), 0)
+    energy = np.round(rng.uniform(0, 100, n), 0)
+    from repro.core.dse_batch import _pareto_mask_bcast
+    assert np.array_equal(pareto_mask(perf, energy),
+                          _pareto_mask_bcast(perf, energy, chunk=1024))
+
+
+def test_pareto_front_scalar_vs_vectorized_under_ties():
+    # duplicate DSE points: scalar and vectorized fronts agree exactly
+    res = explore(TINY_WL, SMALL_SPACE)
+    doubled = res.points + res.points
+    fv = pareto_front(doubled)
+    fs = pareto_front_scalar(doubled)
+    assert [p.config for p in fv] == [p.config for p in fs]
+    assert len(fv) == 2 * len(pareto_front(res.points))
+    assert pareto_front([]) == []
+    assert pareto_front(res.points[:1]) == res.points[:1]
+
+
 def test_synthesis_cache_hit_returns_identical_report():
     clear_synthesis_cache()
     cfg = AcceleratorConfig(pe_type=PEType.LIGHTPE1, glb_kb=256)
@@ -115,6 +189,32 @@ def test_synthesize_many_bitmatches_scalar():
         assert rep == synthesize(cfg), cfg.name()
 
 
+def test_synthesis_cache_lru_cap_and_eviction_counter():
+    """Satellite: the in-process report cache is a bounded LRU with an
+    eviction counter in synthesis_cache_stats()."""
+    from repro.core.synthesis import set_synthesis_cache_limit
+    clear_synthesis_cache()
+    old = set_synthesis_cache_limit(8)
+    try:
+        cfgs = [AcceleratorConfig(glb_kb=16 * (i + 1)) for i in range(12)]
+        synthesize_many(cfgs)
+        stats = synthesis_cache_stats()
+        assert stats["size"] == 8 and stats["limit"] == 8
+        assert stats["evictions"] == 4
+        # LRU: the 4 oldest were evicted, the newest 8 still hit
+        first = synthesize_cached(cfgs[-1])
+        assert synthesis_cache_stats()["hits"] == 1
+        assert synthesize_cached(cfgs[0]) is not None     # miss, re-runs
+        assert synthesis_cache_stats()["misses"] == 12 + 1
+        assert synthesize_cached(cfgs[-1]) is first       # still resident
+        # shrinking the cap evicts immediately
+        set_synthesis_cache_limit(2)
+        assert synthesis_cache_stats()["size"] == 2
+    finally:
+        set_synthesis_cache_limit(old)
+        clear_synthesis_cache()
+
+
 def test_config_hash_distinguishes_clock_cap():
     a = AcceleratorConfig()
     b = AcceleratorConfig(clock_ghz=0.5)
@@ -124,22 +224,23 @@ def test_config_hash_distinguishes_clock_cap():
 
 def test_explore_many_matches_individual_explores():
     wls = ("vgg16", "resnet34")
-    many = explore_many(wls, SMALL_SPACE)
+    many = explore_many(wls, SMALL_SPACE, backend="numpy")
     assert set(many) == set(wls)
     for wl in wls:
-        single = explore(wl, SMALL_SPACE)
+        single = explore(wl, SMALL_SPACE, backend="numpy")
         assert many[wl].headline_ratios() == single.headline_ratios()
 
 
 def test_incremental_sweep_matches_oneshot():
     half = len(SMALL_SPACE) // 2
-    inc = IncrementalSweep(TINY_WL, SMALL_SPACE[:half])
+    inc = IncrementalSweep(TINY_WL, SMALL_SPACE[:half],
+                           backend="numpy")
     assert len(inc) == half
     added = inc.extend(SMALL_SPACE)       # overlap: only the rest is new
     assert added == len(SMALL_SPACE) - half
     assert inc.extend(SMALL_SPACE) == 0   # fully deduped re-extend
     got = inc.result()
-    ref = explore(TINY_WL, SMALL_SPACE)
+    ref = explore(TINY_WL, SMALL_SPACE, backend="numpy")
     assert len(got.points) == len(ref.points)
     by_cfg = {p.config: p for p in ref.points}
     for p in got.points:
@@ -149,7 +250,8 @@ def test_incremental_sweep_matches_oneshot():
 
 
 def test_batched_view_aggregates_consistent_with_layers():
-    res = explore(TINY_WL, SMALL_SPACE[:3], use_cache=False)
+    res = explore(TINY_WL, SMALL_SPACE[:3], use_cache=False,
+                  backend="numpy")
     for p in res.points:
         r = p.result
         assert r.total_macs == sum(l.macs for l in r.layers)

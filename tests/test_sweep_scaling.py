@@ -1,0 +1,272 @@
+"""Scaling paths of the sweep engine (ISSUE 2): explicit backend
+resolution, the x64-free jax jit path (parity + no retraces + shard_map),
+the chunked streamed driver, and the persisted synthesis cache."""
+
+import numpy as np
+import pytest
+
+import repro.core.dse_batch as dse_batch
+from repro.core.accelerator import (AcceleratorConfig, configs_to_soa,
+                                    design_space, design_space_soa)
+from repro.core.dse import explore, explore_chunked, pareto_front
+from repro.core.dse_batch import (get_jax_kernel, resolve_backend,
+                                  sweep_chunked, sweep_workload)
+from repro.core.pe import PEType
+from repro.core.synthesis import (PersistentSynthesisCache,
+                                  clear_synthesis_cache, synthesize_soa)
+from repro.core.workloads import ConvLayer, Workload
+
+SMALL_SPACE = [
+    AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=c, glb_kb=g,
+                      dram_bw_gbps=bw)
+    for t in PEType
+    for (r, c, g, bw) in [(8, 8, 64, 6.4), (12, 14, 128, 12.8),
+                          (32, 32, 512, 25.6)]
+]
+
+TINY_WL = Workload("tiny", (
+    ConvLayer("c1", 58, 58, 64, 64),
+    ConvLayer("c2", 30, 30, 64, 128, 3, 3, 2),
+    ConvLayer("fc", 1, 1, 512, 1000, 1, 1),
+))
+
+
+# ---------------------------------------------------------------------------
+# backend resolution (satellite: no silent jax fallback)
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_rejects_unknown_name():
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        resolve_backend("quantum")
+    with pytest.raises(ValueError):
+        sweep_workload(TINY_WL, SMALL_SPACE, backend="quantum")
+
+
+def test_explicit_jax_raises_when_unusable(monkeypatch):
+    monkeypatch.setattr(dse_batch, "_JAX_PROBE",
+                        (False, "simulated breakage"))
+    with pytest.raises(RuntimeError, match="jax is unusable"):
+        resolve_backend("jax")
+    with pytest.raises(RuntimeError, match="simulated breakage"):
+        explore(TINY_WL, SMALL_SPACE, backend="jax")
+    # auto quietly falls back; numpy is unaffected
+    assert resolve_backend("auto") == "numpy"
+    assert resolve_backend("numpy") == "numpy"
+
+
+def test_auto_resolves_by_platform():
+    assert resolve_backend("auto") in ("numpy", "jax")
+    usable, _ = dse_batch._jax_usable()
+    assert usable  # this environment has jax
+    # CPU-only hosts keep the bit-exact numpy engine on auto
+    if not dse_batch._jax_has_accelerator():
+        assert resolve_backend("auto") == "numpy"
+
+
+# ---------------------------------------------------------------------------
+# jax backend: works without x64, matches numpy, no retraces, shard_map
+# ---------------------------------------------------------------------------
+
+def _headline_rel_diff(a, b):
+    ra, rb = a.headline_ratios(), b.headline_ratios()
+    return max(abs(rb[k] - ra[k]) / abs(ra[k]) for k in ra)
+
+
+def test_jax_backend_works_without_x64_and_matches_numpy():
+    import jax
+    assert not jax.config.read("jax_enable_x64")  # default config
+    cfgs = list(design_space())
+    for wl in ("vgg16", "resnet34", "resnet50"):
+        rn = explore(wl, cfgs, backend="numpy")
+        rj = explore(wl, cfgs, backend="jax")
+        assert _headline_rel_diff(rn, rj) < 1e-6, wl
+        # per-point agreement on the headline metrics too
+        pn = np.array([p.perf_per_area for p in rn.points])
+        pj = np.array([p.perf_per_area for p in rj.points])
+        en = np.array([p.energy_j for p in rn.points])
+        ej = np.array([p.energy_j for p in rj.points])
+        assert np.max(np.abs(pj / pn - 1)) < 1e-5, wl
+        assert np.max(np.abs(ej / en - 1)) < 1e-5, wl
+
+
+def test_jax_kernel_does_not_retrace_same_shape_batches():
+    cfgs = list(design_space())
+    explore("vgg16", cfgs, backend="jax")           # compile
+    fn, exact = get_jax_kernel()
+    assert not exact                                # x64-free policy
+    before = fn._cache_size()
+    # different values, same shapes: must hit the jit cache
+    shifted = [AcceleratorConfig(
+        pe_type=c.pe_type, pe_rows=c.pe_rows, pe_cols=c.pe_cols,
+        ifmap_spad=c.ifmap_spad + 1, filter_spad=c.filter_spad,
+        psum_spad=c.psum_spad, glb_kb=c.glb_kb,
+        dram_bw_gbps=c.dram_bw_gbps) for c in cfgs]
+    explore("vgg16", shifted, backend="jax")
+    explore("vgg16", cfgs, backend="jax", use_cache=False)
+    assert fn._cache_size() == before
+
+
+def test_jax_sweep_with_mesh_matches_unsharded():
+    from repro.launch.mesh import make_sweep_mesh
+    mesh = make_sweep_mesh()
+    plain = explore(TINY_WL, SMALL_SPACE, backend="jax")
+    sharded = explore(TINY_WL, SMALL_SPACE, backend="jax", mesh=mesh)
+    for p, s in zip(plain.points, sharded.points):
+        assert p.result.energy_j == pytest.approx(s.result.energy_j,
+                                                  rel=1e-6)
+        assert p.result.perf_per_area == pytest.approx(
+            s.result.perf_per_area, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# chunked streamed driver
+# ---------------------------------------------------------------------------
+
+def test_chunked_front_matches_in_memory_front():
+    cfgs = list(design_space())
+    res = explore("vgg16", cfgs, backend="numpy")
+    want = {p.config for p in pareto_front(res.points)}
+    # stream the same space as SoA chunks of awkward size
+    chunked = explore_chunked("vgg16", design_space_soa(chunk_size=97),
+                              chunk_size=97, backend="numpy")
+    assert chunked.n_configs == len(cfgs)
+    assert chunked.n_chunks == -(-len(cfgs) // 97)
+    got = set(chunked.front_configs())
+    assert got == want
+    # metrics agree with the in-memory sweep
+    by_cfg = {p.config: p for p in res.points}
+    for pt in chunked.front_points():
+        ref = by_cfg[pt["config"]]
+        assert pt["energy_j"] == ref.energy_j
+        assert pt["perf_per_area"] == ref.perf_per_area
+
+
+def test_chunked_accepts_config_generator_and_sequences():
+    gen = (c for c in SMALL_SPACE)                  # flat generator
+    a = sweep_chunked(TINY_WL, gen, chunk_size=5, backend="numpy")
+    b = sweep_chunked(TINY_WL, [SMALL_SPACE], chunk_size=5,
+                      backend="numpy")              # sequence-of-sequences
+    assert a.n_configs == b.n_configs == len(SMALL_SPACE)
+    assert set(a.front_configs()) == set(b.front_configs())
+    res = explore(TINY_WL, SMALL_SPACE, backend="numpy")
+    assert set(a.front_configs()) == \
+        {p.config for p in pareto_front(res.points)}
+
+
+def test_chunked_empty_feed():
+    res = sweep_chunked(TINY_WL, [], backend="numpy")
+    assert res.n_configs == 0 and res.front_size == 0
+    assert res.front_configs() == []
+
+
+def test_chunked_jax_pads_tail_chunk():
+    # 14 configs with chunk_size 8 -> tail of 6 is padded to 8 under jax;
+    # results must still match numpy exactly per point
+    space = SMALL_SPACE + [AcceleratorConfig(glb_kb=192),
+                           AcceleratorConfig(glb_kb=320)]
+    rn = sweep_chunked(TINY_WL, [space], chunk_size=8, backend="numpy")
+    rj = sweep_chunked(TINY_WL, [space], chunk_size=8, backend="jax")
+    assert rn.n_configs == rj.n_configs == len(space)
+    assert set(rn.front_configs()) == set(rj.front_configs())
+
+
+# ---------------------------------------------------------------------------
+# persisted synthesis cache
+# ---------------------------------------------------------------------------
+
+def test_persistent_cache_roundtrip(tmp_path):
+    path = tmp_path / "synth.npz"
+    soa = configs_to_soa(SMALL_SPACE)
+    ref = synthesize_soa(soa)
+
+    cache = PersistentSynthesisCache(path)
+    cols = cache.synthesize(soa)
+    assert cache.misses == len(SMALL_SPACE) and cache.hits == 0
+    for k in ref:
+        assert np.array_equal(cols[k], ref[k])
+    assert cache.save() == len(SMALL_SPACE)
+
+    # a fresh process-equivalent: loads from disk, does zero synthesis
+    cache2 = PersistentSynthesisCache(path)
+    assert len(cache2) == len(SMALL_SPACE)
+    cols2 = cache2.synthesize(soa)
+    assert cache2.misses == 0 and cache2.hits == len(SMALL_SPACE)
+    for k in ref:
+        assert np.array_equal(cols2[k], ref[k])
+
+
+def test_chunked_sweep_persists_and_reuses_cache(tmp_path):
+    path = tmp_path / "sweep_synth.npz"
+    r1 = sweep_chunked(TINY_WL, [SMALL_SPACE], chunk_size=5,
+                       backend="numpy", cache=str(path))
+    assert path.exists()
+    assert r1.synthesis_cache.misses == len(SMALL_SPACE)
+
+    r2 = sweep_chunked(TINY_WL, [SMALL_SPACE], chunk_size=5,
+                       backend="numpy", cache=str(path))
+    assert r2.synthesis_cache.misses == 0          # fully hydrated
+    assert r2.synthesis_cache.hits == len(SMALL_SPACE)
+    assert set(r1.front_configs()) == set(r2.front_configs())
+
+
+def test_persistent_cache_clear_keeps_path_and_cap(tmp_path):
+    path = tmp_path / "c.npz"
+    cache = PersistentSynthesisCache(path, max_rows=64)
+    cache.synthesize(configs_to_soa(SMALL_SPACE))
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.path == path and cache.max_rows == 64
+    cache.synthesize(configs_to_soa(SMALL_SPACE[:2]))
+    assert cache.save() == 2                       # path survived clear()
+
+
+def test_cache_limit_also_bounds_sweep_array_store():
+    from repro.core.synthesis import (set_synthesis_cache_limit,
+                                      sweep_synthesis_cache)
+    clear_synthesis_cache()
+    old = set_synthesis_cache_limit(4)
+    try:
+        explore(TINY_WL, SMALL_SPACE)              # 12 distinct configs
+        store = sweep_synthesis_cache()
+        assert store.max_rows == 4
+        assert len(store) <= 4 and store.evictions > 0
+    finally:
+        set_synthesis_cache_limit(old)
+        clear_synthesis_cache()
+
+
+def test_persistent_cache_bounded_compaction():
+    cache = PersistentSynthesisCache(max_rows=8)
+    soa = configs_to_soa(SMALL_SPACE)               # 12 distinct configs
+    cache.synthesize(soa)
+    assert len(cache) <= 8
+    assert cache.evictions > 0
+    # surviving rows still hit
+    cache.hits = cache.misses = 0
+    cache.synthesize(soa)
+    assert cache.hits > 0
+
+
+def test_incremental_sweep_cache_is_bounded():
+    """Satellite: the in-process sweep cache must not grow without limit
+    across IncrementalSweep.extend calls."""
+    from repro.core.dse import IncrementalSweep
+    from repro.core.synthesis import (sweep_synthesis_cache,
+                                      synthesis_cache_stats)
+    clear_synthesis_cache()
+    store = sweep_synthesis_cache()
+    old_cap = store.max_rows
+    store.max_rows = 16
+    try:
+        sweep = IncrementalSweep(TINY_WL)
+        for glb in (32, 64, 96, 128, 160):
+            sweep.extend(AcceleratorConfig(pe_type=t, glb_kb=glb)
+                         for t in PEType)
+        assert len(sweep) == 20                     # results all kept...
+        assert len(store) <= 16                     # ...the cache bounded
+        stats = synthesis_cache_stats()
+        assert stats["array_evictions"] > 0
+        assert stats["array_size"] <= 16
+    finally:
+        store.max_rows = old_cap
+        clear_synthesis_cache()
