@@ -1,0 +1,54 @@
+"""Search presets for the co-exploration engine (`repro.core.dse.coexplore`).
+
+A preset bundles the knobs of one search campaign — engine, evaluation
+budget, population sizing, objective set — so experiments are named and
+reproducible instead of ad-hoc kwargs.  ``quick`` is the CI smoke setting;
+``default`` matches the benchmark; ``thorough`` turns on the full
+5-objective set (perf/area, energy, EDP, area, quantization noise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.explore.objectives import DEFAULT_OBJECTIVES, OBJECTIVES
+
+
+@dataclasses.dataclass(frozen=True)
+class CoExplorePreset:
+    name: str
+    method: str = "nsga2"            # random | nsga2 | successive_halving
+    budget: int = 2048               # requested genome evaluations
+    pop_size: int = 64               # nsga2 population
+    mutation_rate: float = 0.08
+    objectives: tuple[str, ...] = DEFAULT_OBJECTIVES
+    seed: int = 0
+    chunk_size: int = 4096
+    eta: int = 3                     # successive-halving reduction factor
+
+    def __post_init__(self):
+        unknown = set(self.objectives) - set(OBJECTIVES)
+        if unknown:
+            raise ValueError(
+                f"preset {self.name!r}: unknown objective(s) "
+                f"{sorted(unknown)} (choose from {OBJECTIVES})")
+
+
+PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
+    CoExplorePreset(name="quick", budget=384, pop_size=24),
+    CoExplorePreset(name="default"),
+    CoExplorePreset(name="thorough", budget=8192, pop_size=96,
+                    objectives=OBJECTIVES),
+    CoExplorePreset(name="random-baseline", method="random"),
+    CoExplorePreset(name="halving", method="successive_halving",
+                    budget=4096),
+)}
+
+
+def get_preset(name: str) -> CoExplorePreset:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown co-exploration preset {name!r} "
+            f"(known: {sorted(PRESETS)})") from None

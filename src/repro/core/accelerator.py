@@ -170,33 +170,45 @@ def soa_to_configs(soa: dict[str, np.ndarray],
         for i in idx]
 
 
+# the paper's Sec. 3.3 factor grid — single source for the grid sweeps
+# below and the co-exploration genome space (repro.explore.space)
+DEFAULT_ARRAY_DIMS = ((8, 8), (12, 14), (16, 16), (24, 24), (32, 32))
+DEFAULT_SPAD_SCALES = (0.5, 1.0, 2.0)
+DEFAULT_GLB_KBS = (64, 128, 256, 512)
+DEFAULT_BWS = (6.4, 12.8, 25.6)
+
+
+def spad_capacities(scale: float) -> tuple[int, int, int]:
+    """(ifmap, filter, psum) scratchpad entries for one spad-scale factor
+    (Eyeriss-proportioned 12/224/24 baseline, floored)."""
+    return (max(4, int(12 * scale)), max(16, int(224 * scale)),
+            max(8, int(24 * scale)))
+
+
 def design_space(
     pe_types: tuple[PEType, ...] = tuple(PEType),
-    array_dims: tuple[tuple[int, int], ...] = ((8, 8), (12, 14), (16, 16),
-                                               (24, 24), (32, 32)),
-    spad_scales: tuple[float, ...] = (0.5, 1.0, 2.0),
-    glb_kbs: tuple[int, ...] = (64, 128, 256, 512),
-    bws: tuple[float, ...] = (6.4, 12.8, 25.6),
+    array_dims: tuple[tuple[int, int], ...] = DEFAULT_ARRAY_DIMS,
+    spad_scales: tuple[float, ...] = DEFAULT_SPAD_SCALES,
+    glb_kbs: tuple[int, ...] = DEFAULT_GLB_KBS,
+    bws: tuple[float, ...] = DEFAULT_BWS,
 ) -> Iterator[AcceleratorConfig]:
     """Full-factorial QAPPA design space (paper Sec. 3.3)."""
     for pe_type, (r, c), ss, glb, bw in itertools.product(
             pe_types, array_dims, spad_scales, glb_kbs, bws):
+        ifs, fls, pss = spad_capacities(ss)
         yield AcceleratorConfig(
             pe_type=pe_type, pe_rows=r, pe_cols=c,
-            ifmap_spad=max(4, int(12 * ss)),
-            filter_spad=max(16, int(224 * ss)),
-            psum_spad=max(8, int(24 * ss)),
+            ifmap_spad=ifs, filter_spad=fls, psum_spad=pss,
             glb_kb=glb, dram_bw_gbps=bw,
         )
 
 
 def design_space_size(
     pe_types: tuple[PEType, ...] = tuple(PEType),
-    array_dims: tuple[tuple[int, int], ...] = ((8, 8), (12, 14), (16, 16),
-                                               (24, 24), (32, 32)),
-    spad_scales: tuple[float, ...] = (0.5, 1.0, 2.0),
-    glb_kbs: tuple[int, ...] = (64, 128, 256, 512),
-    bws: tuple[float, ...] = (6.4, 12.8, 25.6),
+    array_dims: tuple[tuple[int, int], ...] = DEFAULT_ARRAY_DIMS,
+    spad_scales: tuple[float, ...] = DEFAULT_SPAD_SCALES,
+    glb_kbs: tuple[int, ...] = DEFAULT_GLB_KBS,
+    bws: tuple[float, ...] = DEFAULT_BWS,
 ) -> int:
     return (len(pe_types) * len(array_dims) * len(spad_scales)
             * len(glb_kbs) * len(bws))
@@ -204,11 +216,10 @@ def design_space_size(
 
 def design_space_soa(
     pe_types: tuple[PEType, ...] = tuple(PEType),
-    array_dims: tuple[tuple[int, int], ...] = ((8, 8), (12, 14), (16, 16),
-                                               (24, 24), (32, 32)),
-    spad_scales: tuple[float, ...] = (0.5, 1.0, 2.0),
-    glb_kbs: tuple[int, ...] = (64, 128, 256, 512),
-    bws: tuple[float, ...] = (6.4, 12.8, 25.6),
+    array_dims: tuple[tuple[int, int], ...] = DEFAULT_ARRAY_DIMS,
+    spad_scales: tuple[float, ...] = DEFAULT_SPAD_SCALES,
+    glb_kbs: tuple[int, ...] = DEFAULT_GLB_KBS,
+    bws: tuple[float, ...] = DEFAULT_BWS,
     chunk_size: int | None = None,
 ) -> Iterator[dict[str, np.ndarray]]:
     """Full-factorial design space expanded directly to struct-of-arrays
@@ -224,12 +235,10 @@ def design_space_soa(
                        dtype=np.int64)
     f_rows = np.array([d[0] for d in array_dims], dtype=np.int64)
     f_cols = np.array([d[1] for d in array_dims], dtype=np.int64)
-    f_if = np.array([max(4, int(12 * s)) for s in spad_scales],
-                    dtype=np.int64)
-    f_fl = np.array([max(16, int(224 * s)) for s in spad_scales],
-                    dtype=np.int64)
-    f_ps = np.array([max(8, int(24 * s)) for s in spad_scales],
-                    dtype=np.int64)
+    spads = [spad_capacities(s) for s in spad_scales]
+    f_if = np.array([s[0] for s in spads], dtype=np.int64)
+    f_fl = np.array([s[1] for s in spads], dtype=np.int64)
+    f_ps = np.array([s[2] for s in spads], dtype=np.int64)
     f_glb = np.array(glb_kbs, dtype=np.int64)
     f_bw = np.array(bws, dtype=np.float64)
 

@@ -21,7 +21,8 @@ import dataclasses
 import math
 
 from repro.core.accelerator import AcceleratorConfig
-from repro.core.pe import rf_access_energy_pj, sram_access_energy_pj
+from repro.core.pe import (PEType, pe_spec, rf_access_energy_pj,
+                           sram_access_energy_pj, supports_mode)
 from repro.core.workloads import ConvLayer, Workload
 
 
@@ -83,8 +84,18 @@ class WorkloadResult:
 
 def map_layer(layer: ConvLayer, cfg: AcceleratorConfig,
               clock_ghz: float, area_mm2: float,
-              leakage_mw: float) -> LayerResult:
+              leakage_mw: float, mode: PEType | None = None) -> LayerResult:
+    """Map one layer onto ``cfg``.
+
+    ``mode`` (default: the config's own PE type) selects the *execution
+    precision* of this layer on a precision-scalable datapath: operand
+    byte counts and per-MAC energy follow the mode's widths, while
+    physical quantities — array dims, scratchpad storage, clock, area,
+    leakage — stay those of the synthesized hardware.  ``mode=None`` is
+    bit-identical to the original homogeneous path.
+    """
     s = cfg.spec
+    ms = s if mode is None else pe_spec(mode)
     r, e, f_, ss = layer.r, layer.e, layer.f, layer.s
     c, k, n = layer.c, layer.k, layer.batch
 
@@ -103,7 +114,7 @@ def map_layer(layer: ConvLayer, cfg: AcceleratorConfig,
     utilization = macs / max(1, compute_cycles * cfg.num_pes)
 
     # ---- element / byte counts (quantization-aware) -------------------------
-    ab, wb, pb = s.act_bits, s.weight_bits, s.psum_bits
+    ab, wb = ms.act_bits, ms.weight_bits
     ifmap_elems = n * c * layer.h * layer.w
     weight_elems = k * c * r * ss
     ofmap_elems = n * k * e * f_
@@ -156,7 +167,7 @@ def map_layer(layer: ConvLayer, cfg: AcceleratorConfig,
     # sum lives in a register; the spad is touched on row hand-off).
     spad_accesses = 3 * macs
     e_spad = spad_accesses * rf_access_energy_pj(spad_bits)
-    e_mac = macs * s.mac_energy_pj
+    e_mac = macs * ms.mac_energy_pj
     e_glb = glb_elems * sram_access_energy_pj(cfg.glb_bits)
     e_leak = leakage_mw * 1e-3 * (total_cycles / (clock_ghz * 1e9)) * 1e12
     energy_pj = e_mac + e_spad + e_glb + e_leak
@@ -196,6 +207,40 @@ def run_workload(workload: Workload, cfg: AcceleratorConfig,
     layers = tuple(
         map_layer(l, cfg, report.clock_ghz, report.area_mm2, leak)
         for l in workload.layers)
+    return WorkloadResult(
+        workload=workload.name, config_name=cfg.name(), layers=layers,
+        area_mm2=report.area_mm2, clock_ghz=report.clock_ghz,
+    )
+
+
+def run_workload_mixed(workload: Workload, cfg: AcceleratorConfig,
+                       assignment, report=None) -> WorkloadResult:
+    """Evaluate a workload with a per-layer execution-precision assignment.
+
+    ``assignment`` is one PE-type mode per layer (PEType values or their
+    string forms).  This is the scalar reference for the batched
+    mixed-precision kernel (:func:`repro.core.dse_batch.sweep_mixed`):
+    synthesis stays a function of the hardware config alone, so the same
+    synthesis report/cache serves every assignment on that hardware.
+    """
+    modes = tuple(PEType(m) for m in assignment)
+    if len(modes) != len(workload.layers):
+        raise ValueError(
+            f"assignment length {len(modes)} != {len(workload.layers)} "
+            f"layers of workload {workload.name!r}")
+    bad = [m.value for m in modes if not supports_mode(cfg.pe_type, m)]
+    if bad:
+        raise ValueError(
+            f"mode(s) {sorted(set(bad))} not executable on "
+            f"{cfg.pe_type.value} hardware (operand widths exceed the "
+            f"datapath)")
+    if report is None:
+        from repro.core.synthesis import synthesize
+        report = synthesize(cfg)
+    leak = leakage_mw(cfg)
+    layers = tuple(
+        map_layer(l, cfg, report.clock_ghz, report.area_mm2, leak, mode=m)
+        for l, m in zip(workload.layers, modes))
     return WorkloadResult(
         workload=workload.name, config_name=cfg.name(), layers=layers,
         area_mm2=report.area_mm2, clock_ghz=report.clock_ghz,

@@ -14,9 +14,11 @@ Two engines produce identical results:
 * ``engine="scalar"`` — the original O(configs x layers) Python loop, kept
   as the bit-exact reference the batched engine is tested against.
 
-``explore_many`` amortizes synthesis + SoA conversion across workloads, and
+``explore_many`` amortizes synthesis + SoA conversion across workloads,
 :class:`IncrementalSweep` lets a sweep be resumed/extended without
-re-evaluating known design points.
+re-evaluating known design points, and :func:`coexplore` runs the guided
+mixed-precision co-exploration engine (:mod:`repro.explore`) over the
+joint (config x per-layer precision) space.
 """
 
 from __future__ import annotations
@@ -221,6 +223,55 @@ def explore_chunked(workload: Workload | str,
     see :func:`repro.core.dse_batch.sweep_chunked` for the knobs
     (chunk size, backend, persisted synthesis cache)."""
     return sweep_chunked(_resolve(workload), configs, **kwargs)
+
+
+def coexplore(workload: Workload | str,
+              *,
+              preset: str = "default",
+              method: str | None = None,
+              budget: int | None = None,
+              seed: int | None = None,
+              backend: str = "auto",
+              objectives=None,
+              ref_point=None,
+              space_overrides: dict | None = None,
+              **method_kwargs):
+    """Guided co-exploration of the joint (config x per-layer precision)
+    space — the QADAM/QUIDAM-direction entry point.
+
+    Resolves a named search preset (:mod:`repro.configs.coexplore_presets`),
+    applies any explicit overrides, sizes the genome space to the
+    workload, and runs the chosen engine from
+    :mod:`repro.explore.search`.  Returns a
+    :class:`repro.explore.search.SearchResult` whose front genomes decode
+    to (AcceleratorConfig, per-layer mode) pairs.
+
+    >>> res = coexplore("vgg16", preset="quick", seed=7)
+    >>> res.front_points()[0]["modes"]            # doctest: +SKIP
+    """
+    from repro.configs.coexplore_presets import get_preset
+    from repro.explore.search import SEARCH_METHODS
+    from repro.explore.space import space_for_workload
+
+    p = get_preset(preset)
+    wl = _resolve(workload)
+    space = space_for_workload(wl, **(space_overrides or {}))
+    method = p.method if method is None else method
+    fn = SEARCH_METHODS.get(method)
+    if fn is None:
+        raise ValueError(
+            f"unknown co-exploration method {method!r} "
+            f"(choose from {sorted(SEARCH_METHODS)})")
+    kwargs = dict(
+        objectives=p.objectives if objectives is None else tuple(objectives),
+        seed=p.seed if seed is None else seed,
+        backend=backend, chunk_size=p.chunk_size, ref_point=ref_point)
+    if method == "nsga2":
+        kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
+    elif method == "successive_halving":
+        kwargs.update(eta=p.eta)
+    kwargs.update(method_kwargs)
+    return fn(space, wl, p.budget if budget is None else budget, **kwargs)
 
 
 class IncrementalSweep:

@@ -134,13 +134,32 @@ def _kahan_sum_rows(xp, x, dtype):
     return total
 
 
-def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True) -> dict:
+# per-config aggregate output columns — the only outputs the search loop
+# and the streamed Pareto reduction need; with ``outputs="aggregates"`` the
+# kernel returns just these, so under jax.jit XLA dead-code-eliminates every
+# (N, L) layer-level intermediate and the device->host transfer shrinks to
+# O(N) (ROADMAP open item)
+AGGREGATE_OUTPUTS = ("total_cycles_sum", "energy_pj_sum", "latency_s",
+                     "energy_j", "throughput_gmacs", "perf_per_area")
+OUTPUT_MODES = ("full", "aggregates")
+
+
+def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True,
+                  outputs: str = "full") -> dict:
     """All-configs x all-layers row-stationary mapping + energy model.
 
     ``cfg`` holds ``(N, 1)`` arrays, ``lay`` holds ``(1, L)`` arrays; every
     expression broadcasts to ``(N, L)``.  ``exact=True`` mirrors
     ``map_layer`` bit-for-bit; ``exact=False`` is the x64-free dtype-safe
     policy (see module docstring).
+
+    Mixed precision: the ``act_bits`` / ``weight_bits`` / ``mac_energy_pj``
+    config columns may be ``(N, L)`` instead of ``(N, 1)`` — one execution
+    mode per (config, layer), see :func:`sweep_mixed`.  The same broadcast
+    expressions cover both shapes, so a homogeneous assignment is
+    bit-identical to the per-config-scalar path.
+
+    ``outputs="aggregates"`` returns only :data:`AGGREGATE_OUTPUTS`.
     """
     f = np.float64 if exact else np.float32
     r, e, f_, ss = lay["r"], lay["e"], lay["f"], lay["s"]
@@ -161,8 +180,12 @@ def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True) -> dict:
     # direct form (np.unique doesn't trace; jit fuses instead).
     _BLOCK_FIELDS = ("pe_rows", "pe_cols", "num_pes", "act_bits",
                      "weight_bits", "glb_kb", "filter_spad", "psum_spad")
+    # per-layer precision columns make the block layer-dependent, so the
+    # unique-row factorization only applies to homogeneous batches
+    homogeneous = all(cfg[k2].shape[1] == 1
+                      for k2 in ("act_bits", "weight_bits", "mac_energy_pj"))
     inv = None
-    if exact and xp is np and cfg["pe_rows"].shape[0] > 16:
+    if exact and xp is np and homogeneous and cfg["pe_rows"].shape[0] > 16:
         key = _pack_block_key(cfg)
         if key is not None:
             _, uidx, inv = np.unique(key, return_index=True,
@@ -299,7 +322,7 @@ def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True) -> dict:
     throughput_gmacs = total_macs / latency_s / 1e9
     perf_per_area = throughput_gmacs / cfg["area_mm2"][:, 0]
 
-    return {
+    out = {
         "compute_cycles": compute_cycles, "mem_cycles": mem_cycles,
         "total_cycles": total_cycles, "utilization": utilization,
         "spad_accesses": spad_accesses, "glb_bytes": glb_bytes,
@@ -308,6 +331,9 @@ def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True) -> dict:
         "latency_s": latency_s, "energy_j": energy_j,
         "throughput_gmacs": throughput_gmacs, "perf_per_area": perf_per_area,
     }
+    if outputs == "aggregates":
+        return {k: out[k] for k in AGGREGATE_OUTPUTS}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -387,14 +413,15 @@ def _to_jax_inputs(cfg: dict, lay: dict, exact: bool) -> tuple[dict, dict]:
     return jcfg, jlay
 
 
-def get_jax_kernel(mesh=None):
+def get_jax_kernel(mesh=None, outputs: str = "full"):
     """The jit-compiled sweep kernel for the current jax config.
 
-    Compiled once per (x64-mode, mesh) and cached — repeat sweeps over
-    same-shape batches hit the jit cache with zero retraces (asserted in
-    tests via ``_cache_size``).  With ``mesh``, the config axis is sharded
-    across the mesh's devices via ``shard_map``; layer arrays are
-    replicated.
+    Compiled once per (x64-mode, mesh, outputs) and cached — repeat sweeps
+    over same-shape batches hit the jit cache with zero retraces (asserted
+    in tests via ``_cache_size``).  With ``mesh``, the config axis is
+    sharded across the mesh's devices via ``shard_map``; layer arrays are
+    replicated.  ``outputs="aggregates"`` jits the aggregates-only kernel,
+    whose (N, L) intermediates XLA dead-code-eliminates.
     """
     import jax
     import jax.numpy as jnp
@@ -406,13 +433,13 @@ def get_jax_kernel(mesh=None):
     mesh_key = None if mesh is None else (
         tuple(mesh.axis_names), mesh.devices.shape,
         tuple(d.id for d in mesh.devices.flat))
-    key = (exact, mesh_key)
+    key = (exact, mesh_key, outputs)
     fn = _JAX_KERNELS.get(key)
     if fn is not None:
         return fn, exact
 
     def kernel(cfg, lay):
-        return _sweep_kernel(jnp, cfg, lay, exact=exact)
+        return _sweep_kernel(jnp, cfg, lay, exact=exact, outputs=outputs)
 
     if mesh is None:
         fn = jax.jit(kernel)
@@ -442,9 +469,13 @@ def get_jax_kernel(mesh=None):
 
 
 def _run_kernel(cfg: dict, lay: dict, backend: str,
-                mesh=None) -> dict[str, np.ndarray]:
+                mesh=None, outputs: str = "full") -> dict[str, np.ndarray]:
+    if outputs not in OUTPUT_MODES:
+        raise ValueError(
+            f"unknown sweep outputs: {outputs!r} (choose from "
+            f"{OUTPUT_MODES})")
     if backend == "jax":
-        fn, exact = get_jax_kernel(mesh)
+        fn, exact = get_jax_kernel(mesh, outputs)
         # under the x64-free policy "macs" lands in float32 via
         # _to_jax_inputs (it feeds only float math in the kernel)
         jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
@@ -457,7 +488,7 @@ def _run_kernel(cfg: dict, lay: dict, backend: str,
         out = {k: np.asarray(v)[:n] if np.ndim(v) else np.asarray(v)
                for k, v in fn(jcfg, jlay).items()}
         return out
-    return _sweep_kernel(np, cfg, lay)
+    return _sweep_kernel(np, cfg, lay, outputs=outputs)
 
 
 @dataclasses.dataclass
@@ -595,13 +626,18 @@ def sweep_workload(workload: Workload,
                    use_cache: bool = True,
                    backend: str = "auto",
                    soa: dict[str, np.ndarray] | None = None,
-                   mesh=None) -> BatchedSweep:
+                   mesh=None,
+                   outputs: str = "full") -> BatchedSweep:
     """Evaluate ``workload`` on every config in one batched pass.
 
     ``reports``/``soa`` let :func:`repro.core.dse.explore_many` synthesize
     and SoA-convert once and reuse across workloads; ``reports`` may be a
     list of :class:`SynthesisReport` or a column dict from
     :func:`repro.core.synthesis.synthesize_soa`.
+
+    ``outputs="aggregates"`` keeps only the per-config columns
+    (:data:`AGGREGATE_OUTPUTS`): the result's per-point views still serve
+    every aggregate metric, but ``.layers`` is unavailable.
     """
     backend = resolve_backend(backend)
     configs = tuple(configs)
@@ -614,11 +650,109 @@ def sweep_workload(workload: Workload,
         cols = _reports_to_cols(reports)
     wb = _workload_batch(workload)
     cfg, lay = _make_cfg_lay(soa, cols, wb)
-    out = _run_kernel(cfg, lay, backend, mesh=mesh)
+    out = _run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs)
     return BatchedSweep(workload=workload.name, configs=configs,
                         layer_names=wb.layer_names, macs=wb.arrays["macs"],
                         clock_ghz=cfg["clock_ghz"][:, 0],
                         area_mm2=cfg["area_mm2"][:, 0], arrays=out)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision sweep: one execution mode per (config, layer)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _mode_tables() -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-PE-type (act_bits, weight_bits, mac_energy_pj) lookup tables,
+    indexed by the canonical ``tuple(PEType)`` order."""
+    from repro.core.pe import PEType, pe_spec
+    specs = [pe_spec(t) for t in PEType]
+    return (np.array([s.act_bits for s in specs], dtype=np.int64),
+            np.array([s.weight_bits for s in specs], dtype=np.int64),
+            np.array([s.mac_energy_pj for s in specs], dtype=np.float64))
+
+
+def mixed_assign_cfg(cfg: dict, assign: np.ndarray) -> dict:
+    """Replace the per-config scalar precision columns with per-layer ones.
+
+    ``assign`` is an ``(N, L)`` int array of PE-type indices (canonical
+    ``tuple(PEType)`` order).  Only ``act_bits`` / ``weight_bits`` /
+    ``mac_energy_pj`` become ``(N, L)``; everything physical (array dims,
+    scratchpad storage, clock, area, leakage) keeps its hardware value, so
+    synthesis — and its confighash-keyed caches — see only the hardware
+    config.
+    """
+    ab_t, wb_t, me_t = _mode_tables()
+    a = np.asarray(assign, dtype=np.int64)
+    if a.size and (a.min() < 0 or a.max() >= len(ab_t)):
+        raise ValueError(
+            f"assignment contains PE-type indices outside "
+            f"[0, {len(ab_t)})")
+    out = dict(cfg)
+    out["act_bits"] = ab_t[a]
+    out["weight_bits"] = wb_t[a]
+    out["mac_energy_pj"] = me_t[a]
+    return out
+
+
+def check_assignment(soa: dict, assign: np.ndarray) -> None:
+    """Raise ``ValueError`` unless every (config, layer) mode is executable
+    on that config's hardware (operand widths fit the datapath)."""
+    from repro.core.pe import PEType, mode_compat_matrix
+    a = np.asarray(assign)
+    n_types = len(tuple(PEType))
+    if a.ndim != 2 or a.shape[0] != len(soa["pe_rows"]):
+        raise ValueError(
+            f"assignment shape {a.shape} does not match "
+            f"{len(soa['pe_rows'])} configs")
+    if a.min(initial=0) < 0 or a.max(initial=0) >= n_types:
+        raise ValueError(
+            f"assignment contains PE-type indices outside [0, {n_types})")
+    ok = mode_compat_matrix()[soa["pe_type_idx"][:, None], a]
+    if not ok.all():
+        n_bad = int((~ok).sum())
+        raise ValueError(
+            f"{n_bad} (config, layer) mode assignment(s) are not "
+            f"executable on their hardware PE type")
+
+
+def sweep_mixed(workload: Workload,
+                soa: dict[str, np.ndarray],
+                assign: np.ndarray,
+                cols: dict[str, np.ndarray] | None = None,
+                *,
+                use_cache: bool = True,
+                backend: str = "auto",
+                outputs: str = "aggregates",
+                mesh=None) -> dict[str, np.ndarray]:
+    """Evaluate a batch of mixed-precision genomes in one fused pass.
+
+    ``soa`` is the hardware half of the genome batch
+    (:func:`repro.core.accelerator.soa_from_fields`), ``assign`` the
+    ``(N, L)`` per-layer execution-mode half.  Synthesis runs on the
+    hardware configs alone — through the digest-keyed sweep cache by
+    default, so re-visited hardware (the common case in an evolutionary
+    search) skips the flow entirely.  Returns the kernel output columns
+    plus ``clock_ghz`` / ``area_mm2``; numpy results are bit-exact vs
+    :func:`repro.core.dataflow.run_workload_mixed` row by row.
+    """
+    backend = resolve_backend(backend)
+    wb = _workload_batch(workload)
+    assign = np.asarray(assign, dtype=np.int64)
+    if assign.shape != (len(soa["pe_rows"]), len(wb)):
+        raise ValueError(
+            f"assignment shape {assign.shape} != "
+            f"({len(soa['pe_rows'])} configs, {len(wb)} layers)")
+    check_assignment(soa, assign)
+    if cols is None:
+        cols = (sweep_synthesis_cache().synthesize(soa) if use_cache
+                else synthesize_soa(soa))
+    cfg, lay = _make_cfg_lay(soa, cols, wb)
+    cfg = mixed_assign_cfg(cfg, assign)
+    out = dict(_run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs))
+    out["clock_ghz"] = cfg["clock_ghz"][:, 0]
+    out["area_mm2"] = cfg["area_mm2"][:, 0]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 
 import numpy as np
 
@@ -129,6 +130,42 @@ _SPECS = {
 
 def pe_spec(pe_type: PEType | str) -> PESpec:
     return _SPECS[PEType(pe_type)]
+
+
+# ---------------------------------------------------------------------------
+# Precision-scalable execution modes (mixed-precision co-exploration).
+#
+# A datapath built for PE type ``hw`` can execute a layer in the *mode* of a
+# narrower PE type: operands are stored/streamed at the mode's widths and the
+# unused datapath slices gate off, so byte counts and MAC energy follow the
+# mode while area / clock / leakage stay those of the synthesized hardware.
+# ---------------------------------------------------------------------------
+
+def supports_mode(hw: PEType | str, mode: PEType | str) -> bool:
+    """Can ``hw`` hardware execute layers in ``mode`` precision?
+
+    True iff the mode's activation and weight widths both fit the
+    hardware's native widths (e.g. INT16 hardware runs int16/w8a8/w4a8
+    layers but not fp32 ones).
+    """
+    h, m = pe_spec(hw), pe_spec(mode)
+    return m.act_bits <= h.act_bits and m.weight_bits <= h.weight_bits
+
+
+def supported_modes(hw: PEType | str) -> tuple[PEType, ...]:
+    """All PE-type modes executable on ``hw`` hardware, in enum order."""
+    return tuple(t for t in PEType if supports_mode(hw, t))
+
+
+@functools.lru_cache(maxsize=1)
+def mode_compat_matrix() -> np.ndarray:
+    """``(T, T)`` bool matrix: ``[hw_idx, mode_idx]`` = mode runs on hw.
+    Row/column order is ``tuple(PEType)`` — the index convention of
+    :func:`repro.core.accelerator.soa_from_fields` (``pe_type_idx``).
+    Cached; treat the returned array as read-only."""
+    types = tuple(PEType)
+    return np.array([[supports_mode(h, m) for m in types] for h in types],
+                    dtype=bool)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,28 @@
+"""Quantization-aware co-exploration subsystem (QADAM/QUIDAM direction).
+
+Searches the joint (accelerator config x per-layer execution precision)
+space under k-objective Pareto optimality, on top of the fused sweep
+engine.  See :mod:`repro.explore.space` for the genome encoding,
+:mod:`repro.explore.search` for the engines, and
+:func:`repro.core.dse.coexplore` for the one-call entry point.
+"""
+
+from repro.explore.objectives import (DEFAULT_OBJECTIVES, OBJECTIVES,
+                                      mode_noise_table, mode_sqnr_db,
+                                      objective_matrix, quant_noise)
+from repro.explore.pareto import (crowding_distance, hypervolume,
+                                  nondominated_sort, pareto_mask_k,
+                                  reference_point)
+from repro.explore.search import (SEARCH_METHODS, Evaluator, SearchResult,
+                                  nsga2, random_search, successive_halving)
+from repro.explore.space import CoExploreSpace, space_for_workload
+
+__all__ = [
+    "CoExploreSpace", "space_for_workload",
+    "OBJECTIVES", "DEFAULT_OBJECTIVES", "objective_matrix", "quant_noise",
+    "mode_noise_table", "mode_sqnr_db",
+    "pareto_mask_k", "nondominated_sort", "crowding_distance",
+    "hypervolume", "reference_point",
+    "Evaluator", "SearchResult", "SEARCH_METHODS",
+    "random_search", "nsga2", "successive_halving",
+]

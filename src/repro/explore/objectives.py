@@ -1,0 +1,160 @@
+"""Objective functions for co-exploration (all minimized).
+
+Hardware objectives come straight from the fused sweep's aggregate columns
+(perf/area negated, energy, EDP, area).  The *accuracy proxy* is a
+quantization-noise score derived from the per-PE-type SQNR of the actual
+quantizers in :mod:`repro.quant.quantizers`: each layer contributes its
+MAC share times the relative noise power (1/SQNR) of its assigned
+execution mode, so an INT4-everywhere genome pays a visible accuracy cost
+instead of trivially winning every hardware objective.
+
+The SQNR table is measured once per process on a fixed synthetic tensor
+(seeded, CPU, float32) — deterministic, and identical regardless of which
+sweep backend (numpy/jax) evaluates the hardware objectives.  When jax is
+unusable the table falls back to the standard analytic SQNR model
+(~6.02 dB/bit for integer, LightNN-published figures for pow2) so the
+search still runs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pe import PEType
+
+OBJECTIVES = ("neg_perf_per_area", "energy_j", "edp", "area_mm2",
+              "quant_noise")
+DEFAULT_OBJECTIVES = ("neg_perf_per_area", "energy_j", "quant_noise")
+
+_TYPES = tuple(PEType)
+
+# analytic fallback noise powers (weight + activation, relative to signal):
+# integer b-bit symmetric quantization ~ 10**(-(6.02*b + 1.76)/10); pow2
+# codes measured in the LightNN paper are a few dB worse than int at equal
+# width.  Order: tuple(PEType) = (FP32, INT16, LIGHTPE1, LIGHTPE2).
+_ANALYTIC_NOISE = {
+    PEType.FP32: 0.0,
+    PEType.INT16: 2 * 10.0 ** (-(6.02 * 16 + 1.76) / 10.0),
+    PEType.LIGHTPE1: 10.0 ** (-(6.02 * 4 - 4.0) / 10.0)
+    + 10.0 ** (-(6.02 * 8 + 1.76) / 10.0),
+    PEType.LIGHTPE2: 10.0 ** (-(6.02 * 8 - 4.0) / 10.0)
+    + 10.0 ** (-(6.02 * 8 + 1.76) / 10.0),
+}
+
+_NOISE_TABLE: np.ndarray | None = None
+
+
+def _measure_noise_table() -> np.ndarray:
+    """Per-PE-type relative quantization-noise power, measured by running
+    the repo's own quantizers over a fixed synthetic Gaussian tensor.
+
+    noise(mode) = E[(w - qdq(w))^2]/E[w^2] + E[(x - qdq_act(x))^2]/E[x^2]
+    with the weight/activation quantizer pairs of
+    :mod:`repro.quant.policy`'s mode table.
+    """
+    import jax.numpy as jnp
+
+    from repro.quant.quantizers import (quantize_dequantize_int,
+                                        quantize_dequantize_pow2,
+                                        quantize_dequantize_pow2_2term)
+
+    rng = np.random.default_rng(20220516)          # paper's arXiv date
+    w = jnp.asarray(rng.normal(size=8192).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=8192)).astype(np.float32))
+
+    def rel_noise(v, q):
+        v64 = np.asarray(v, dtype=np.float64)
+        q64 = np.asarray(q, dtype=np.float64)
+        return float(np.mean((v64 - q64) ** 2) / np.mean(v64 ** 2))
+
+    table = np.zeros(len(_TYPES), dtype=np.float64)
+    per = {
+        # weight quantizer, activation quantizer (None = native precision)
+        PEType.FP32: (None, None),
+        PEType.INT16: (lambda v: quantize_dequantize_int(v, 16),
+                       lambda v: quantize_dequantize_int(v, 16)),
+        PEType.LIGHTPE1: (quantize_dequantize_pow2,
+                          lambda v: quantize_dequantize_int(v, 8)),
+        PEType.LIGHTPE2: (quantize_dequantize_pow2_2term,
+                          lambda v: quantize_dequantize_int(v, 8)),
+    }
+    for t, (wq, aq) in per.items():
+        n = 0.0
+        if wq is not None:
+            n += rel_noise(w, wq(w))
+        if aq is not None:
+            n += rel_noise(x, aq(x))
+        table[_TYPES.index(t)] = n
+    return table
+
+
+def mode_noise_table(refresh: bool = False) -> np.ndarray:
+    """``(T,)`` relative noise power per PE type (canonical order), from
+    the measured quantizers when jax is usable, else the analytic model."""
+    global _NOISE_TABLE
+    if _NOISE_TABLE is None or refresh:
+        try:
+            _NOISE_TABLE = _measure_noise_table()
+        except ImportError as exc:
+            # only the jax-unusable case falls back (loudly); a bug inside
+            # the measurement must raise, not silently shift the objective
+            import warnings
+            warnings.warn(
+                f"jax unusable ({exc}); quantization-noise objective uses "
+                f"the analytic SQNR model instead of measured quantizers",
+                RuntimeWarning, stacklevel=2)
+            _NOISE_TABLE = np.array([_ANALYTIC_NOISE[t] for t in _TYPES],
+                                    dtype=np.float64)
+    return _NOISE_TABLE
+
+
+def mode_sqnr_db() -> dict[str, float]:
+    """Human-readable SQNR (dB) per PE type, for reports."""
+    table = mode_noise_table()
+    out = {}
+    for t, n in zip(_TYPES, table):
+        out[t.value] = float("inf") if n <= 0 else float(-10 * np.log10(n))
+    return out
+
+
+def quant_noise(assign: np.ndarray, layer_macs: np.ndarray) -> np.ndarray:
+    """MAC-weighted quantization-noise score per genome.
+
+    ``assign`` is the ``(N, L)`` mode-index matrix, ``layer_macs`` the
+    ``(L,)`` MAC counts; the score is the noise power of each layer's mode
+    weighted by its share of the workload's MACs — a scale-free [0, ~1)
+    proxy where 0 is fp32-everywhere.
+    """
+    table = mode_noise_table()
+    macs = np.asarray(layer_macs, dtype=np.float64)
+    wts = macs / macs.sum()
+    return table[np.asarray(assign, dtype=np.int64)] @ wts
+
+
+def objective_matrix(agg: dict[str, np.ndarray],
+                     assign: np.ndarray,
+                     layer_macs: np.ndarray,
+                     objectives=DEFAULT_OBJECTIVES) -> np.ndarray:
+    """Assemble the ``(N, K)`` minimization matrix from sweep aggregates.
+
+    ``agg`` is :func:`repro.core.dse_batch.sweep_mixed` output (the
+    aggregate columns plus ``area_mm2``); every objective is oriented so
+    smaller is better.
+    """
+    cols = []
+    for name in objectives:
+        if name == "neg_perf_per_area":
+            cols.append(-np.asarray(agg["perf_per_area"], dtype=np.float64))
+        elif name == "energy_j":
+            cols.append(np.asarray(agg["energy_j"], dtype=np.float64))
+        elif name == "edp":
+            cols.append(np.asarray(agg["energy_j"], dtype=np.float64)
+                        * np.asarray(agg["latency_s"], dtype=np.float64))
+        elif name == "area_mm2":
+            cols.append(np.asarray(agg["area_mm2"], dtype=np.float64))
+        elif name == "quant_noise":
+            cols.append(quant_noise(assign, layer_macs))
+        else:
+            raise ValueError(
+                f"unknown objective {name!r} (choose from {OBJECTIVES})")
+    return np.stack(cols, axis=-1)

@@ -1,0 +1,153 @@
+"""k-objective Pareto tools: dominance mask, non-dominated sort, crowding
+distance, and an exact hypervolume indicator.
+
+Generalizes the 2-D :func:`repro.core.dse_batch.pareto_mask` (max perf,
+min energy) to arbitrary objective counts under an all-minimization
+convention; the 2-objective case delegates to the existing vectorized
+kernel, so both agree bit-for-bit (property-tested).
+
+Tie semantics match the 2-D kernel: a point is dominated only by a point
+that is no worse everywhere and *strictly* better somewhere, so exact
+duplicates all survive.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dse_batch import pareto_mask
+
+
+def pareto_mask_k(F: np.ndarray, chunk: int = 1024) -> np.ndarray:
+    """Boolean non-dominated mask of an ``(N, K)`` minimization matrix.
+
+    ``K == 2`` delegates to the sorted/broadcast 2-D kernel; ``K >= 3``
+    runs a chunked-broadcast dominance test (memory ``chunk * N`` bools —
+    population-scale inputs, not million-point sweeps).
+    """
+    F = np.asarray(F, dtype=np.float64)
+    if F.ndim != 2:
+        raise ValueError(f"objective matrix must be (N, K), got {F.shape}")
+    n, k = F.shape
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    if k == 1:
+        return F[:, 0] == F[:, 0].min()
+    if k == 2:
+        # maximize -f0 == minimize f0
+        return pareto_mask(-F[:, 0], F[:, 1])
+    keep = np.ones(n, dtype=bool)
+    for s in range(0, n, chunk):
+        block = F[s:s + chunk]                      # (B, K)
+        # q dominates p: q <= p everywhere, q < p somewhere
+        no_worse = (F[None, :, :] <= block[:, None, :]).all(-1)
+        better = (F[None, :, :] < block[:, None, :]).any(-1)
+        keep[s:s + chunk] = ~(no_worse & better).any(1)
+    return keep
+
+
+def nondominated_sort(F: np.ndarray) -> np.ndarray:
+    """NSGA-II front ranks: 0 for the Pareto front, 1 for the front of the
+    remainder, and so on.  Returns an ``(N,)`` int array."""
+    F = np.asarray(F, dtype=np.float64)
+    n = len(F)
+    ranks = np.full(n, -1, dtype=np.int64)
+    remaining = np.arange(n)
+    rank = 0
+    while len(remaining):
+        mask = pareto_mask_k(F[remaining])
+        ranks[remaining[mask]] = rank
+        remaining = remaining[~mask]
+        rank += 1
+    return ranks
+
+
+def crowding_distance(F: np.ndarray) -> np.ndarray:
+    """NSGA-II crowding distance within one front (larger = lonelier;
+    boundary points get ``inf``).  Ties broken stably by index."""
+    F = np.asarray(F, dtype=np.float64)
+    n, k = F.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    d = np.zeros(n, dtype=np.float64)
+    for j in range(k):
+        order = np.argsort(F[:, j], kind="stable")
+        fj = F[order, j]
+        span = fj[-1] - fj[0]
+        d[order[0]] = d[order[-1]] = np.inf
+        if span > 0:
+            d[order[1:-1]] += (fj[2:] - fj[:-2]) / span
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Hypervolume (exact, minimization, reference point r: hv of the region
+# dominated by the set and dominating r)
+# ---------------------------------------------------------------------------
+
+def _hv2d(F: np.ndarray, ref: np.ndarray) -> float:
+    """Closed-form 2-D hypervolume: sort by f0 and sweep."""
+    order = np.lexsort((F[:, 1], F[:, 0]))
+    hv = 0.0
+    prev1 = ref[1]
+    for p0, p1 in F[order]:
+        if p1 < prev1:
+            hv += (ref[0] - p0) * (prev1 - p1)
+            prev1 = p1
+    return hv
+
+
+def _hv_recursive(F: np.ndarray, ref: np.ndarray) -> float:
+    k = len(ref)
+    if len(F) == 0:
+        return 0.0
+    if k == 1:
+        return float(ref[0] - F[:, 0].min())
+    if k == 2:
+        return _hv2d(F, ref)
+    # slice along the last objective (HSO): between consecutive levels the
+    # (k-1)-D cross-section is the projection of every point at or below
+    # the lower level
+    order = np.argsort(F[:, -1], kind="stable")
+    F = F[order]
+    zs = np.unique(F[:, -1])
+    hv = 0.0
+    for j, z in enumerate(zs):
+        z_next = zs[j + 1] if j + 1 < len(zs) else ref[-1]
+        sub = F[F[:, -1] <= z, :-1]
+        sub = sub[pareto_mask_k(sub)]               # shrink the recursion
+        hv += (z_next - z) * _hv_recursive(sub, ref[:-1])
+    return hv
+
+
+def hypervolume(F: np.ndarray, ref: np.ndarray) -> float:
+    """Exact hypervolume of an ``(N, K)`` minimization set w.r.t. ``ref``.
+
+    Points not strictly better than ``ref`` in every objective contribute
+    nothing (standard clipping), so a fixed reference lets fronts from
+    different searches be compared on one scale.  Exact algorithms are
+    exponential in ``K`` in the worst case — fine for the K <= 5 objective
+    sets and population-sized fronts used here.
+    """
+    F = np.asarray(F, dtype=np.float64)
+    ref = np.asarray(ref, dtype=np.float64)
+    if F.ndim != 2 or F.shape[1] != len(ref):
+        raise ValueError(
+            f"objective matrix {F.shape} does not match reference point "
+            f"of dimension {len(ref)}")
+    F = F[(F < ref[None, :]).all(axis=1)]
+    if len(F) == 0:
+        return 0.0
+    F = np.unique(F, axis=0)
+    F = F[pareto_mask_k(F)]
+    return float(_hv_recursive(F, ref))
+
+
+def reference_point(F: np.ndarray, margin: float = 0.05) -> np.ndarray:
+    """A reference point slightly worse than every observed objective —
+    the convention used to seed a search's hypervolume history."""
+    F = np.asarray(F, dtype=np.float64)
+    worst = F.max(axis=0)
+    span = worst - F.min(axis=0)
+    pad = margin * np.where(span > 0, span, np.maximum(np.abs(worst), 1.0))
+    return worst + pad

@@ -1,0 +1,391 @@
+"""Guided multi-objective search over the joint design space.
+
+Three engines share one chunked, memoized evaluator that routes every
+genome population through the fused mixed-precision sweep kernel
+(:func:`repro.core.dse_batch.sweep_mixed`, aggregates-only outputs) and
+the digest-keyed synthesis caches:
+
+* :func:`random_search` — the baseline the guided searches must beat at
+  equal evaluation budget (benchmarked in ``BENCH_coexplore.json``);
+* :func:`nsga2` — NSGA-II-style evolutionary loop: non-dominated sorting,
+  crowding distance, binary tournaments, uniform crossover + resampling
+  mutation;
+* :func:`successive_halving` — a budget-aware racing loop that screens
+  large populations on cheap layer-prefix subsets of the workload and
+  promotes only the best fraction to full evaluation.
+
+Determinism: every loop threads one explicit ``numpy.random.Generator``
+(no hidden global RNG), random draws happen in data-independent order, and
+all ranking ties break stably by index — the same seed reproduces the same
+search trajectory, and the numpy/jax kernel parity (~1e-7) makes the final
+fronts match across backends (asserted in ``tests/test_explore.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.dse_batch import resolve_backend, sweep_mixed
+from repro.core.workloads import Workload, get_workload
+from repro.explore.objectives import (DEFAULT_OBJECTIVES, objective_matrix)
+from repro.explore.pareto import (crowding_distance, hypervolume,
+                                  nondominated_sort, pareto_mask_k,
+                                  reference_point)
+from repro.explore.space import CoExploreSpace
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome of one co-exploration run.
+
+    ``genomes`` / ``front_objectives`` hold the final non-dominated set;
+    ``history`` is ``(evaluations, hypervolume)`` pairs under
+    ``ref_point``; ``all_objectives`` keeps every *full-workload*
+    objective row (successive-halving's subset-rung rows are excluded —
+    they live on a different scale) so runs can be re-scored under a
+    shared reference point.
+    """
+
+    method: str
+    workload: str
+    objectives: tuple[str, ...]
+    seed: int
+    space: CoExploreSpace
+    genomes: np.ndarray
+    front_objectives: np.ndarray
+    ref_point: np.ndarray
+    history: list[tuple[int, float]]
+    all_objectives: np.ndarray
+    n_evals: int
+    stats: dict
+
+    @property
+    def front_size(self) -> int:
+        return len(self.genomes)
+
+    def hypervolume(self, ref: np.ndarray | None = None) -> float:
+        """Front hypervolume under ``ref`` (default: the run's own)."""
+        return hypervolume(self.front_objectives,
+                           self.ref_point if ref is None else ref)
+
+    def front_points(self) -> list[dict]:
+        """Materialize the front: config objects, per-layer mode names,
+        objective values — sorted by the first objective."""
+        from repro.core.accelerator import soa_to_configs
+        from repro.core.pe import PEType
+        types = tuple(PEType)
+        soa, assign = self.space.decode(self.genomes)
+        cfgs = soa_to_configs(soa)
+        order = np.argsort(self.front_objectives[:, 0], kind="stable")
+        return [{
+            "config": cfgs[i],
+            "modes": tuple(types[j].value for j in assign[i]),
+            **{name: float(self.front_objectives[i, k])
+               for k, name in enumerate(self.objectives)},
+        } for i in order]
+
+
+class Evaluator:
+    """Chunked, memoized genome evaluation through the fused sweep.
+
+    Populations are decoded to (hardware SoA, assignment) and pushed
+    through :func:`sweep_mixed` with ``outputs="aggregates"`` — under jax
+    the (N, L) layer intermediates are dead-code-eliminated, chunks are
+    padded to power-of-two shapes so a search compiles O(log) kernels.
+    Results are memoized by genome digest, so an evolutionary loop that
+    re-visits a genome never re-runs the kernel; hardware re-visits hit
+    the digest-keyed synthesis cache inside ``sweep_mixed``.
+    """
+
+    def __init__(self, space: CoExploreSpace, workload: Workload | str,
+                 objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+                 *, backend: str = "auto", chunk_size: int = 4096,
+                 use_cache: bool = True):
+        self.space = space
+        self.workload = (get_workload(workload)
+                         if isinstance(workload, str) else workload)
+        if space.n_layers != len(self.workload.layers):
+            raise ValueError(
+                f"space has {space.n_layers} layer genes but workload "
+                f"{self.workload.name!r} has {len(self.workload.layers)} "
+                f"layers")
+        self.objectives = tuple(objectives)
+        self.backend = resolve_backend(backend)
+        self.chunk_size = int(chunk_size)
+        self.use_cache = use_cache
+        self._memo: dict[tuple[bytes, int], np.ndarray] = {}
+        self._subsets: dict[int, Workload] = {}
+        self.n_requested = 0
+        self.n_kernel = 0
+        self.n_memo_hits = 0
+        self.eval_seconds = 0.0
+
+    def _subset(self, m: int) -> Workload:
+        if m >= self.space.n_layers:
+            return self.workload
+        wl = self._subsets.get(m)
+        if wl is None:
+            wl = Workload(name=f"{self.workload.name}[:{m}]",
+                          layers=self.workload.layers[:m])
+            self._subsets[m] = wl
+        return wl
+
+    def _pad(self, n: int) -> int:
+        if self.backend != "jax":
+            return n
+        return min(self.chunk_size, 1 << max(3, (n - 1).bit_length()))
+
+    def evaluate(self, genomes: np.ndarray,
+                 subset: int | None = None) -> np.ndarray:
+        """``(N, K)`` objective rows for a genome matrix.
+
+        ``subset`` evaluates on the first ``subset`` layers only (the
+        successive-halving rungs); objective rows are float64 regardless
+        of backend.
+        """
+        t0 = time.perf_counter()
+        g = self.space.validate(genomes, raise_on_invalid=True)
+        m = self.space.n_layers if subset is None else int(subset)
+        self.n_requested += len(g)
+        keys = self.space.genome_keys(g)
+        out = np.empty((len(g), len(self.objectives)), dtype=np.float64)
+        todo: list[int] = []
+        for i, key in enumerate(keys):
+            row = self._memo.get((key, m))
+            if row is None:
+                todo.append(i)
+            else:
+                self.n_memo_hits += 1
+                out[i] = row
+        wl = self._subset(m)
+        macs = np.array([l.macs for l in wl.layers], dtype=np.float64)
+        for s in range(0, len(todo), self.chunk_size):
+            idx = np.asarray(todo[s:s + self.chunk_size], dtype=np.intp)
+            # rows were validated above; skip the per-chunk repeat
+            soa, assign = self.space.decode(g[idx], skip_validation=True)
+            assign = assign[:, :m]
+            pad = self._pad(len(idx)) - len(idx)
+            if pad > 0:
+                soa = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
+                       for k, v in soa.items()}
+                assign = np.concatenate(
+                    [assign, assign[-1:].repeat(pad, axis=0)])
+            agg = sweep_mixed(wl, soa, assign, use_cache=self.use_cache,
+                              backend=self.backend, outputs="aggregates")
+            F = objective_matrix({k: np.asarray(v)[:len(idx)]
+                                  for k, v in agg.items()},
+                                 assign[:len(idx)], macs, self.objectives)
+            out[idx] = F
+            self.n_kernel += len(idx)
+            for j, i in enumerate(idx):
+                # copy: the caller owns `out`, and an in-place edit of the
+                # returned matrix must not poison the memo
+                self._memo[(keys[i], m)] = out[i].copy()
+        self.eval_seconds += time.perf_counter() - t0
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "requested_evals": self.n_requested,
+            "kernel_evals": self.n_kernel,
+            "memo_hits": self.n_memo_hits,
+            "eval_seconds": self.eval_seconds,
+            "backend": self.backend,
+        }
+
+
+def _front(genomes: np.ndarray, F: np.ndarray
+           ) -> tuple[np.ndarray, np.ndarray]:
+    keep = pareto_mask_k(F)
+    return genomes[keep], F[keep]
+
+
+def _result(method: str, ev: Evaluator, seed: int, genomes, F,
+            ref, history, all_F, n_evals) -> SearchResult:
+    fg, ff = _front(genomes, F)
+    return SearchResult(
+        method=method, workload=ev.workload.name,
+        objectives=ev.objectives, seed=seed, space=ev.space,
+        genomes=fg, front_objectives=ff, ref_point=np.asarray(ref),
+        history=history, all_objectives=np.concatenate(all_F, axis=0),
+        n_evals=n_evals, stats=ev.stats())
+
+
+def random_search(space: CoExploreSpace, workload: Workload | str,
+                  budget: int, *,
+                  objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+                  seed: int = 0, backend: str = "auto",
+                  chunk_size: int = 4096, batch: int | None = None,
+                  ref_point: np.ndarray | None = None) -> SearchResult:
+    """Uniform-random baseline: ``budget`` independent genomes, running
+    non-dominated reduction, hypervolume recorded per batch."""
+    rng = np.random.default_rng(seed)
+    ev = Evaluator(space, workload, objectives, backend=backend,
+                   chunk_size=chunk_size)
+    if budget < 1:
+        raise ValueError("budget must be >= 1")
+    if batch is not None and batch < 1:
+        raise ValueError("batch must be >= 1")
+    batch = min(budget, 256) if batch is None else min(batch, budget)
+    front_g = np.empty((0, space.genome_width), dtype=np.int64)
+    front_F = np.empty((0, len(ev.objectives)), dtype=np.float64)
+    history: list[tuple[int, float]] = []
+    all_F: list[np.ndarray] = []
+    ref = ref_point
+    evals = 0
+    while evals < budget:
+        n = min(batch, budget - evals)
+        g = space.random_population(n, rng)
+        F = ev.evaluate(g)
+        evals += n
+        all_F.append(F)
+        if ref is None:
+            ref = reference_point(F)
+        front_g, front_F = _front(np.concatenate([front_g, g]),
+                                  np.concatenate([front_F, F]))
+        history.append((evals, hypervolume(front_F, ref)))
+    return _result("random", ev, seed, front_g, front_F, ref, history,
+                   all_F, evals)
+
+
+def _ranks_and_crowding(F: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    ranks = nondominated_sort(F)
+    crowd = np.empty(len(F), dtype=np.float64)
+    for r in np.unique(ranks):
+        idx = np.nonzero(ranks == r)[0]
+        crowd[idx] = crowding_distance(F[idx])
+    return ranks, crowd
+
+
+def _tournament(rng: np.random.Generator, n_pick: int,
+                ranks: np.ndarray, crowd: np.ndarray) -> np.ndarray:
+    """Binary tournament on (rank asc, crowding desc, index asc)."""
+    a = rng.integers(0, len(ranks), size=n_pick)
+    b = rng.integers(0, len(ranks), size=n_pick)
+    a_wins = ((ranks[a] < ranks[b])
+              | ((ranks[a] == ranks[b]) & (crowd[a] > crowd[b]))
+              | ((ranks[a] == ranks[b]) & (crowd[a] == crowd[b])
+                 & (a <= b)))
+    return np.where(a_wins, a, b)
+
+
+def nsga2(space: CoExploreSpace, workload: Workload | str, budget: int, *,
+          pop_size: int = 64,
+          objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+          seed: int = 0, backend: str = "auto", chunk_size: int = 4096,
+          mutation_rate: float = 0.08,
+          ref_point: np.ndarray | None = None) -> SearchResult:
+    """NSGA-II-style evolutionary multi-objective search.
+
+    Classic loop: elitist (mu + lambda) survival over non-domination rank
+    then crowding distance, binary-tournament parents, uniform crossover,
+    per-gene resampling mutation, compatibility repair.  ``budget`` counts
+    requested genome evaluations (initial population included), so runs
+    compare 1:1 with :func:`random_search` at the same budget.
+    """
+    if budget < 1:
+        raise ValueError("budget must be >= 1")
+    if pop_size < 4:
+        raise ValueError("pop_size must be >= 4")
+    rng = np.random.default_rng(seed)
+    ev = Evaluator(space, workload, objectives, backend=backend,
+                   chunk_size=chunk_size)
+    pop = space.random_population(min(pop_size, budget), rng)
+    F = ev.evaluate(pop)
+    evals = len(pop)
+    ref = reference_point(F) if ref_point is None else ref_point
+    history = [(evals, hypervolume(F[pareto_mask_k(F)], ref))]
+    all_F = [F]
+    while evals < budget:
+        n_off = min(pop_size, budget - evals)
+        ranks, crowd = _ranks_and_crowding(F)
+        p1 = _tournament(rng, n_off, ranks, crowd)
+        p2 = _tournament(rng, n_off, ranks, crowd)
+        children = space.crossover(pop[p1], pop[p2], rng)
+        children = space.mutate(children, rng, mutation_rate)
+        Fc = ev.evaluate(children)
+        evals += n_off
+        all_F.append(Fc)
+        comb = np.concatenate([pop, children])
+        Fcomb = np.concatenate([F, Fc])
+        ranks2, crowd2 = _ranks_and_crowding(Fcomb)
+        order = np.lexsort((np.arange(len(comb)), -crowd2, ranks2))
+        sel = order[:pop_size]
+        pop, F = comb[sel], Fcomb[sel]
+        history.append((evals, hypervolume(F[pareto_mask_k(F)], ref)))
+    return _result("nsga2", ev, seed, pop, F, ref, history, all_F, evals)
+
+
+def successive_halving(space: CoExploreSpace, workload: Workload | str,
+                       budget: int, *, eta: int = 3,
+                       objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+                       seed: int = 0, backend: str = "auto",
+                       chunk_size: int = 4096, min_layers: int = 2,
+                       ref_point: np.ndarray | None = None) -> SearchResult:
+    """Successive halving over workload layer-prefix subsets.
+
+    Rung ``r`` evaluates its population on the first ``m_r`` layers only
+    (a cheap, correlated proxy of the full workload), keeps the best
+    ``1/eta`` by (non-domination rank, crowding), and promotes them to the
+    next, larger subset; the final rung is the full workload.  Every
+    requested evaluation counts one unit of ``budget`` regardless of
+    subset size, so the comparison with the other engines is conservative.
+    """
+    if budget < 1:
+        raise ValueError("budget must be >= 1")
+    if eta < 2:
+        raise ValueError("eta must be >= 2")
+    rng = np.random.default_rng(seed)
+    ev = Evaluator(space, workload, objectives, backend=backend,
+                   chunk_size=chunk_size)
+    L = space.n_layers
+    sizes = [L]
+    while sizes[-1] > min(min_layers, L) and len(sizes) < 4:
+        nxt = max(min(min_layers, L), -(-sizes[-1] // eta))
+        if nxt == sizes[-1]:
+            break
+        sizes.append(nxt)
+    sizes = sizes[::-1]                    # small -> full
+    r_count = len(sizes)
+    # n0 * (1 + 1/eta + ...) ~= budget
+    geo = sum(eta ** -r for r in range(r_count))
+    n0 = max(eta ** (r_count - 1), int(budget / geo))
+    pops = [max(1, n0 // eta ** r) for r in range(r_count)]
+    total = sum(pops)
+    if total > budget:                      # trim the cheap first rung
+        pops[0] = max(1, pops[0] - (total - budget))
+    pop = space.random_population(pops[0], rng)
+    evals = 0
+    all_F = []
+    history: list[tuple[int, float]] = []
+    F = None
+    for r, (m, n_r) in enumerate(zip(sizes, pops)):
+        pop = pop[:n_r]
+        F = ev.evaluate(pop, subset=None if m == L else m)
+        evals += len(pop)
+        if m == L:
+            # only full-workload rows are comparable across runs;
+            # subset-rung objectives live on a different scale and must
+            # not leak into all_objectives / shared reference points
+            all_F.append(F)
+        if r < r_count - 1:
+            ranks, crowd = _ranks_and_crowding(F)
+            order = np.lexsort((np.arange(len(pop)), -crowd, ranks))
+            pop = pop[order]
+    # the last rung ran on the full workload: its objectives are the
+    # comparable ones
+    ref = reference_point(F) if ref_point is None else ref_point
+    history.append((evals, hypervolume(F[pareto_mask_k(F)], ref)))
+    return _result("successive_halving", ev, seed, pop, F, ref, history,
+                   all_F, evals)
+
+
+SEARCH_METHODS = {
+    "random": random_search,
+    "nsga2": nsga2,
+    "successive_halving": successive_halving,
+}

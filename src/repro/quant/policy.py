@@ -35,6 +35,34 @@ PE_TO_MODE = {
 MODE_TO_PE = {v: k for k, v in PE_TO_MODE.items()}
 
 
+def mode_for_pe(pe_type) -> ExecMode:
+    """The TPU execution mode for a QAPPA PE type.
+
+    Raises a descriptive ``ValueError`` (never a bare ``KeyError``) when
+    the type has no mapping — a PE type added for mixed-precision
+    co-exploration must be wired into ``PE_TO_MODE`` before models can
+    train/serve with it.
+    """
+    try:
+        return PE_TO_MODE[PEType(pe_type)]
+    except (KeyError, ValueError):
+        raise ValueError(
+            f"PE type {pe_type!r} has no execution-mode mapping; add it to "
+            f"repro.quant.policy.PE_TO_MODE (known: "
+            f"{sorted(t.value for t in PE_TO_MODE)})") from None
+
+
+def pe_for_mode(mode) -> PEType:
+    """Inverse of :func:`mode_for_pe`, with the same loud-failure contract."""
+    try:
+        return MODE_TO_PE[ExecMode(mode)]
+    except (KeyError, ValueError):
+        raise ValueError(
+            f"execution mode {mode!r} has no PE-type mapping; add it to "
+            f"repro.quant.policy.PE_TO_MODE (known: "
+            f"{sorted(m.value for m in MODE_TO_PE)})") from None
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
     """Resolved numerics policy for a model instance."""
@@ -69,7 +97,7 @@ class QuantPolicy:
 
     @property
     def pe_type(self) -> PEType:
-        return MODE_TO_PE[self.mode]
+        return pe_for_mode(self.mode)
 
 
 def policy_for(mode: ExecMode | str | None) -> QuantPolicy:

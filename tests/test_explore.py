@@ -1,0 +1,294 @@
+"""Co-exploration subsystem (ISSUE 3): genome space, objectives, search
+engines, determinism, and the coexplore() wiring."""
+
+import numpy as np
+import pytest
+
+from repro.core.dse import coexplore
+from repro.core.pe import PEType, mode_compat_matrix
+from repro.core.workloads import ConvLayer, Workload
+from repro.explore import (CoExploreSpace, Evaluator, hypervolume, nsga2,
+                           random_search, reference_point,
+                           space_for_workload, successive_halving)
+from repro.explore.objectives import (mode_noise_table, objective_matrix,
+                                      quant_noise)
+from repro.explore.space import N_HW_GENES
+
+TYPES = tuple(PEType)
+
+TINY_WL = Workload("tiny", (
+    ConvLayer("c1", 58, 58, 64, 64),
+    ConvLayer("c2", 30, 30, 64, 128, 3, 3, 2),
+    ConvLayer("fc", 1, 1, 512, 1000, 1, 1),
+    ConvLayer("big", 226, 226, 3, 64),
+))
+
+SPACE = CoExploreSpace(n_layers=len(TINY_WL.layers))
+
+
+# ---------------------------------------------------------------------------
+# genome space
+# ---------------------------------------------------------------------------
+
+def test_space_sizing_and_layout():
+    assert SPACE.genome_width == N_HW_GENES + 4
+    assert space_for_workload(TINY_WL).genome_width == SPACE.genome_width
+    assert space_for_workload("vgg16").n_layers == 16
+    # the joint space dwarfs the 720-point homogeneous grid
+    assert SPACE.size() > 720
+
+
+def test_random_population_valid_and_seeded():
+    rng = np.random.default_rng(5)
+    g = SPACE.random_population(300, rng)
+    assert g.shape == (300, SPACE.genome_width)
+    assert SPACE.valid_mask(g).all()
+    g2 = SPACE.random_population(300, np.random.default_rng(5))
+    assert np.array_equal(g, g2)
+    # every hardware type and several modes get sampled
+    assert len(np.unique(g[:, 0])) == len(TYPES)
+    assert len(np.unique(g[:, N_HW_GENES:])) >= 3
+
+
+def test_decode_round_trip_and_synthesis_cache_keying():
+    from repro.core.confighash import config_digests
+    rng = np.random.default_rng(9)
+    g = SPACE.random_population(64, rng)
+    soa, assign = SPACE.decode(g)
+    assert assign.shape == (64, SPACE.n_layers)
+    # hardware half digests through confighash -> same digest as an
+    # equivalent homogeneous sweep config (the synthesis-cache key)
+    from repro.core.accelerator import configs_to_soa, soa_to_configs
+    cfgs = soa_to_configs(soa)
+    d_genome = np.stack(config_digests(soa), axis=-1)
+    d_config = np.stack(config_digests(configs_to_soa(cfgs)), axis=-1)
+    assert np.array_equal(d_genome, d_config)
+
+
+def test_valid_mask_flags_bad_levels_and_modes():
+    g = SPACE.random_population(8, np.random.default_rng(1))
+    g[0, 0] = len(SPACE.pe_types)           # hw level out of range
+    g[1, 1] = -1
+    g[2, N_HW_GENES] = len(TYPES)           # mode index out of range
+    # force an incompatible mode: fp32 mode on lightpe1 hardware
+    g[3, 0] = SPACE.pe_types.index(PEType.LIGHTPE1)
+    g[3, N_HW_GENES] = TYPES.index(PEType.FP32)
+    mask = SPACE.valid_mask(g)
+    assert mask.tolist()[:4] == [False, False, False, False]
+    assert mask[4:].all()
+    with pytest.raises(ValueError, match="invalid genome"):
+        SPACE.decode(g)
+    with pytest.raises(ValueError, match="genome matrix shape"):
+        SPACE.validate(g[:, :3])
+
+
+def test_mutation_and_crossover_preserve_validity():
+    rng = np.random.default_rng(13)
+    a = SPACE.random_population(200, rng)
+    b = SPACE.random_population(200, rng)
+    child = SPACE.crossover(a, b, rng)
+    assert SPACE.valid_mask(child).all()
+    mut = SPACE.mutate(child, rng, rate=0.5)
+    assert SPACE.valid_mask(mut).all()
+    assert (mut != child).any()             # rate 0.5 must change something
+    # repair clamps an incompatible mode to the hardware's own type
+    g = a[:1].copy()
+    g[0, 0] = SPACE.pe_types.index(PEType.LIGHTPE1)
+    g[0, N_HW_GENES:] = TYPES.index(PEType.FP32)
+    fixed = SPACE.repair(g)
+    assert SPACE.valid_mask(fixed).all()
+    assert (fixed[0, N_HW_GENES:] == TYPES.index(PEType.LIGHTPE1)).all()
+
+
+def test_genome_keys_distinct_and_stable():
+    rng = np.random.default_rng(21)
+    g = SPACE.random_population(500, rng)
+    keys = SPACE.genome_keys(g)
+    uniq_rows = len(np.unique(g, axis=0))
+    assert len(set(keys)) == uniq_rows
+    assert keys == SPACE.genome_keys(g)     # pure function of the genome
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+def test_noise_table_orders_precisions_sensibly():
+    t = mode_noise_table()
+    i = {pt: TYPES.index(pt) for pt in TYPES}
+    assert t[i[PEType.FP32]] == 0.0
+    assert t[i[PEType.FP32]] < t[i[PEType.INT16]]
+    assert t[i[PEType.INT16]] < t[i[PEType.LIGHTPE2]]
+    assert t[i[PEType.LIGHTPE2]] < t[i[PEType.LIGHTPE1]]
+
+
+def test_quant_noise_is_mac_weighted():
+    macs = np.array([l.macs for l in TINY_WL.layers], dtype=np.float64)
+    fp32 = np.full((1, 4), TYPES.index(PEType.FP32))
+    int4 = np.full((1, 4), TYPES.index(PEType.LIGHTPE1))
+    assert quant_noise(fp32, macs)[0] == 0.0
+    assert quant_noise(int4, macs)[0] > 0.0
+    # quantizing only the biggest-MAC layer costs more than only the
+    # smallest
+    big = fp32.copy()
+    big[0, int(np.argmax(macs))] = TYPES.index(PEType.LIGHTPE1)
+    small = fp32.copy()
+    small[0, int(np.argmin(macs))] = TYPES.index(PEType.LIGHTPE1)
+    assert quant_noise(big, macs)[0] > quant_noise(small, macs)[0]
+
+
+def test_objective_matrix_orientation_and_unknown_name():
+    ev = Evaluator(SPACE, TINY_WL, backend="numpy")
+    g = SPACE.random_population(16, np.random.default_rng(3))
+    F = ev.evaluate(g)
+    assert F.shape == (16, 3)
+    assert (F[:, 0] < 0).all()              # neg perf/area
+    assert (F[:, 1] > 0).all()              # energy
+    with pytest.raises(ValueError, match="unknown objective"):
+        objective_matrix({"perf_per_area": np.ones(1),
+                          "energy_j": np.ones(1),
+                          "latency_s": np.ones(1),
+                          "area_mm2": np.ones(1)},
+                         np.zeros((1, 4), dtype=np.int64),
+                         np.ones(4), objectives=("speed",))
+
+
+# ---------------------------------------------------------------------------
+# evaluator: memoization + synthesis-cache reuse
+# ---------------------------------------------------------------------------
+
+def test_evaluator_memoizes_and_reuses_synthesis_cache():
+    from repro.core.synthesis import (clear_synthesis_cache,
+                                      synthesis_cache_stats)
+    clear_synthesis_cache()
+    ev = Evaluator(SPACE, TINY_WL, backend="numpy")
+    g = SPACE.random_population(64, np.random.default_rng(2))
+    F1 = ev.evaluate(g)
+    assert ev.n_kernel == 64 - (64 - len(np.unique(g, axis=0)))  \
+        or ev.n_kernel <= 64
+    F2 = ev.evaluate(g)                     # full memo hit
+    assert np.array_equal(F1, F2)
+    assert ev.n_memo_hits >= 64
+    assert ev.n_kernel <= 64
+    # different assignments on the same hardware hit the synthesis cache
+    g2 = g.copy()
+    g2[:, N_HW_GENES:] = SPACE.repair(
+        np.concatenate([g[:, :N_HW_GENES],
+                        np.full((64, SPACE.n_layers),
+                                TYPES.index(PEType.LIGHTPE1))],
+                       axis=1))[:, N_HW_GENES:]
+    stats_before = synthesis_cache_stats()
+    ev.evaluate(g2)
+    stats_after = synthesis_cache_stats()
+    assert stats_after["array_hits"] > stats_before["array_hits"]
+    clear_synthesis_cache()
+
+
+def test_evaluator_rejects_mismatched_space():
+    with pytest.raises(ValueError, match="layer genes"):
+        Evaluator(CoExploreSpace(n_layers=3), TINY_WL)
+
+
+# ---------------------------------------------------------------------------
+# search engines
+# ---------------------------------------------------------------------------
+
+def test_random_search_budget_and_front():
+    res = random_search(SPACE, TINY_WL, 128, seed=0, backend="numpy")
+    assert res.n_evals == 128
+    assert len(res.all_objectives) == 128
+    assert res.front_size >= 1
+    assert res.history[-1][0] == 128
+    # front is mutually non-dominated
+    from repro.explore.pareto import pareto_mask_k
+    assert pareto_mask_k(res.front_objectives).all()
+    # hypervolume history is monotone for an accumulating archive
+    hvs = [h for _, h in res.history]
+    assert all(b >= a - 1e-12 for a, b in zip(hvs, hvs[1:]))
+
+
+def test_nsga2_deterministic_and_beats_or_ties_itself():
+    a = nsga2(SPACE, TINY_WL, 192, pop_size=16, seed=4, backend="numpy")
+    b = nsga2(SPACE, TINY_WL, 192, pop_size=16, seed=4, backend="numpy")
+    assert a.n_evals == b.n_evals == 192
+    assert np.array_equal(a.genomes, b.genomes)
+    assert np.array_equal(a.front_objectives, b.front_objectives)
+    assert a.history == b.history
+    c = nsga2(SPACE, TINY_WL, 192, pop_size=16, seed=5, backend="numpy")
+    assert not np.array_equal(a.genomes, c.genomes)  # seed matters
+
+
+def test_successive_halving_runs_and_final_front_is_full_workload():
+    res = successive_halving(SPACE, TINY_WL, 200, seed=1, backend="numpy")
+    assert res.front_size >= 1
+    assert res.n_evals <= 210               # approximate budget, bounded
+    # final-front objectives match a fresh full-workload evaluation
+    ev = Evaluator(SPACE, TINY_WL, backend="numpy")
+    F = ev.evaluate(res.genomes)
+    assert np.array_equal(F, res.front_objectives)
+
+
+def test_nsga2_reaches_random_hypervolume_at_equal_budget():
+    budget = 384
+    rnd = random_search(SPACE, TINY_WL, budget, seed=0, backend="numpy")
+    gud = nsga2(SPACE, TINY_WL, budget, pop_size=24, seed=0,
+                backend="numpy")
+    ref = reference_point(np.concatenate([rnd.all_objectives,
+                                          gud.all_objectives]))
+    assert hypervolume(gud.front_objectives, ref) >= \
+        hypervolume(rnd.front_objectives, ref) * 0.98
+
+
+def test_search_determinism_across_backends():
+    """Satellite: same seed => bit-identical final front on numpy and
+    jax (the jax kernel's ~1e-7 parity never flips a search decision at
+    these scales)."""
+    from repro.core.dse_batch import resolve_backend
+    try:
+        resolve_backend("jax")
+    except RuntimeError:
+        pytest.skip("jax unusable")
+    n = nsga2(SPACE, TINY_WL, 192, pop_size=16, seed=11, backend="numpy")
+    j = nsga2(SPACE, TINY_WL, 192, pop_size=16, seed=11, backend="jax")
+    assert np.array_equal(n.genomes, j.genomes)
+    rn = random_search(SPACE, TINY_WL, 128, seed=11, backend="numpy")
+    rj = random_search(SPACE, TINY_WL, 128, seed=11, backend="jax")
+    assert np.array_equal(rn.genomes, rj.genomes)
+
+
+# ---------------------------------------------------------------------------
+# coexplore() wiring + presets
+# ---------------------------------------------------------------------------
+
+def test_coexplore_presets_registry():
+    from repro.configs.coexplore_presets import (CoExplorePreset, PRESETS,
+                                                 get_preset)
+    assert {"quick", "default", "thorough"} <= set(PRESETS)
+    assert get_preset("quick").budget < get_preset("default").budget
+    with pytest.raises(ValueError, match="unknown co-exploration preset"):
+        get_preset("warp-speed")
+    with pytest.raises(ValueError, match="unknown objective"):
+        CoExplorePreset(name="bad", objectives=("speed",))
+
+
+def test_coexplore_runs_and_decodes_front():
+    res = coexplore(TINY_WL, preset="quick", budget=96, seed=3,
+                    backend="numpy", pop_size=12)
+    assert res.method == "nsga2"
+    assert res.workload == "tiny"
+    assert res.n_evals == 96
+    pts = res.front_points()
+    assert len(pts) == res.front_size
+    for pt in pts:
+        cfg = pt["config"]
+        assert len(pt["modes"]) == len(TINY_WL.layers)
+        # every decoded mode is executable on its hardware
+        compat = mode_compat_matrix()
+        hw = TYPES.index(cfg.pe_type)
+        for m in pt["modes"]:
+            assert compat[hw, TYPES.index(PEType(m))]
+
+
+def test_coexplore_rejects_unknown_method():
+    with pytest.raises(ValueError, match="unknown co-exploration method"):
+        coexplore(TINY_WL, preset="quick", method="simulated-annealing")

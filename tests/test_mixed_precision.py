@@ -1,0 +1,254 @@
+"""Mixed-precision kernel extension (ISSUE 3 tentpole) + satellites:
+aggregates-only sweep outputs and the loud PE<->mode mapping errors.
+
+The contract: per-layer execution-mode columns through the batched kernel
+are bit-exact vs the extended scalar reference (``run_workload_mixed``) on
+the numpy backend, within the 1e-6 ratio gate on jax, and a homogeneous
+assignment reduces exactly to the original per-config-scalar path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.dataflow import map_layer, run_workload, run_workload_mixed
+from repro.core.dse_batch import (AGGREGATE_OUTPUTS, check_assignment,
+                                  sweep_mixed, sweep_workload)
+from repro.core.pe import (PEType, mode_compat_matrix, pe_spec,
+                           supported_modes, supports_mode)
+from repro.core.synthesis import synthesize
+from repro.core.workloads import ConvLayer, Workload
+
+TYPES = tuple(PEType)
+
+TINY_WL = Workload("tiny", (
+    ConvLayer("c1", 58, 58, 64, 64),
+    ConvLayer("c2", 30, 30, 64, 128, 3, 3, 2),
+    ConvLayer("fc", 1, 1, 512, 1000, 1, 1),
+    ConvLayer("big", 226, 226, 3, 64),
+))
+
+SMALL_SPACE = [
+    AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=c, glb_kb=g,
+                      dram_bw_gbps=bw)
+    for t in TYPES
+    for (r, c, g, bw) in [(8, 8, 64, 6.4), (12, 14, 128, 12.8),
+                          (32, 32, 512, 25.6)]
+]
+
+
+def _random_assignment(rng, configs, n_layers):
+    assign = np.empty((len(configs), n_layers), dtype=np.int64)
+    for i, c in enumerate(configs):
+        modes = [TYPES.index(m) for m in supported_modes(c.pe_type)]
+        assign[i] = rng.choice(modes, size=n_layers)
+    return assign
+
+
+# ---------------------------------------------------------------------------
+# mode-compatibility model
+# ---------------------------------------------------------------------------
+
+def test_supported_modes_follow_operand_widths():
+    assert set(supported_modes(PEType.FP32)) == set(TYPES)
+    assert supported_modes(PEType.LIGHTPE1) == (PEType.LIGHTPE1,)
+    assert set(supported_modes(PEType.INT16)) == {
+        PEType.INT16, PEType.LIGHTPE1, PEType.LIGHTPE2}
+    # lightpe2 (8b x 8b) covers lightpe1 (8b x 4b) but not vice versa
+    assert supports_mode(PEType.LIGHTPE2, PEType.LIGHTPE1)
+    assert not supports_mode(PEType.LIGHTPE1, PEType.LIGHTPE2)
+    compat = mode_compat_matrix()
+    for i, h in enumerate(TYPES):
+        for j, m in enumerate(TYPES):
+            assert compat[i, j] == supports_mode(h, m)
+        assert compat[i, i]                        # native mode always runs
+
+
+# ---------------------------------------------------------------------------
+# scalar reference: map_layer mode override + run_workload_mixed
+# ---------------------------------------------------------------------------
+
+def test_map_layer_native_mode_is_identity():
+    cfg = AcceleratorConfig(pe_type=PEType.INT16)
+    rep = synthesize(cfg)
+    from repro.core.dataflow import leakage_mw
+    leak = leakage_mw(cfg)
+    for layer in TINY_WL.layers:
+        a = map_layer(layer, cfg, rep.clock_ghz, rep.area_mm2, leak)
+        b = map_layer(layer, cfg, rep.clock_ghz, rep.area_mm2, leak,
+                      mode=PEType.INT16)
+        assert a == b
+
+
+def test_map_layer_narrow_mode_cuts_bytes_and_mac_energy():
+    cfg = AcceleratorConfig(pe_type=PEType.FP32)
+    rep = synthesize(cfg)
+    from repro.core.dataflow import leakage_mw
+    leak = leakage_mw(cfg)
+    layer = TINY_WL.layers[0]
+    wide = map_layer(layer, cfg, rep.clock_ghz, rep.area_mm2, leak)
+    narrow = map_layer(layer, cfg, rep.clock_ghz, rep.area_mm2, leak,
+                       mode=PEType.LIGHTPE1)
+    assert narrow.dram_bytes < wide.dram_bytes
+    assert narrow.energy_pj < wide.energy_pj
+    # mapping is precision-independent on a fixed array
+    assert narrow.compute_cycles == wide.compute_cycles
+
+
+def test_run_workload_mixed_homogeneous_matches_run_workload():
+    for cfg in SMALL_SPACE[:4]:
+        ref = run_workload(TINY_WL, cfg)
+        mixed = run_workload_mixed(
+            TINY_WL, cfg, [cfg.pe_type] * len(TINY_WL.layers))
+        assert ref.layers == mixed.layers
+        assert ref.energy_j == mixed.energy_j
+        assert ref.perf_per_area == mixed.perf_per_area
+
+
+def test_run_workload_mixed_validates_inputs():
+    cfg = AcceleratorConfig(pe_type=PEType.LIGHTPE1)
+    with pytest.raises(ValueError, match="assignment length"):
+        run_workload_mixed(TINY_WL, cfg, [PEType.LIGHTPE1])
+    with pytest.raises(ValueError, match="not executable"):
+        run_workload_mixed(TINY_WL, cfg,
+                           [PEType.FP32] * len(TINY_WL.layers))
+
+
+# ---------------------------------------------------------------------------
+# batched kernel: bit-exact vs the scalar reference (acceptance criterion:
+# >= 200 random genomes on numpy)
+# ---------------------------------------------------------------------------
+
+def test_mixed_batched_bitmatches_scalar_on_200_genomes():
+    rng = np.random.default_rng(42)
+    n = 200
+    configs = [SMALL_SPACE[i] for i in
+               rng.integers(0, len(SMALL_SPACE), size=n)]
+    soa = configs_to_soa(configs)
+    assign = _random_assignment(rng, configs, len(TINY_WL.layers))
+    out = sweep_mixed(TINY_WL, soa, assign, backend="numpy",
+                      outputs="full", use_cache=False)
+    for i in rng.permutation(n)[:40]:       # full layer check on a sample
+        ref = run_workload_mixed(TINY_WL, configs[i],
+                                 [TYPES[j] for j in assign[i]])
+        assert ref.energy_j == float(out["energy_j"][i])
+        assert ref.perf_per_area == float(out["perf_per_area"][i])
+        assert ref.total_cycles == int(out["total_cycles_sum"][i])
+        for j, lr in enumerate(ref.layers):
+            assert lr.energy_pj == float(out["energy_pj"][i, j])
+            assert lr.dram_bytes == int(out["dram_bytes"][i, j])
+            assert lr.total_cycles == int(out["total_cycles"][i, j])
+    # aggregate columns checked exhaustively
+    ref_energy = np.array([
+        run_workload_mixed(TINY_WL, configs[i],
+                           [TYPES[j] for j in assign[i]]).energy_j
+        for i in range(n)])
+    assert np.array_equal(ref_energy, out["energy_j"])
+
+
+def test_mixed_homogeneous_assignment_reduces_to_scalar_path():
+    soa = configs_to_soa(SMALL_SPACE)
+    hom = np.repeat(soa["pe_type_idx"][:, None], len(TINY_WL.layers),
+                    axis=1)
+    out = sweep_mixed(TINY_WL, soa, hom, backend="numpy", outputs="full",
+                      use_cache=False)
+    sw = sweep_workload(TINY_WL, SMALL_SPACE, use_cache=False,
+                        backend="numpy")
+    for k in ("energy_j", "perf_per_area", "total_cycles",
+              "dram_bytes", "energy_pj"):
+        assert np.array_equal(out[k], sw.arrays[k]), k
+
+
+def test_mixed_jax_within_ratio_gate():
+    from repro.core.dse_batch import resolve_backend
+    try:
+        resolve_backend("jax")
+    except RuntimeError:
+        pytest.skip("jax unusable")
+    rng = np.random.default_rng(7)
+    soa = configs_to_soa(SMALL_SPACE)
+    assign = _random_assignment(rng, SMALL_SPACE, len(TINY_WL.layers))
+    a = sweep_mixed(TINY_WL, soa, assign, backend="numpy",
+                    outputs="aggregates", use_cache=False)
+    b = sweep_mixed(TINY_WL, soa, assign, backend="jax",
+                    outputs="aggregates", use_cache=False)
+    for k in ("energy_j", "perf_per_area", "latency_s"):
+        assert np.max(np.abs(np.asarray(b[k]) / a[k] - 1)) < 1e-6, k
+
+
+def test_mixed_rejects_bad_assignments():
+    soa = configs_to_soa(SMALL_SPACE)
+    L = len(TINY_WL.layers)
+    with pytest.raises(ValueError, match="shape"):
+        sweep_mixed(TINY_WL, soa, np.zeros((2, L), dtype=np.int64))
+    bad = np.repeat(soa["pe_type_idx"][:, None], L, axis=1)
+    bad[:] = TYPES.index(PEType.FP32)       # fp32 mode on lightpe hardware
+    with pytest.raises(ValueError, match="not executable"):
+        sweep_mixed(TINY_WL, soa, bad)
+    oob = np.zeros((len(SMALL_SPACE), L), dtype=np.int64)
+    oob[0, 0] = len(TYPES)
+    with pytest.raises(ValueError, match="outside"):
+        check_assignment(soa, oob)
+
+
+# ---------------------------------------------------------------------------
+# satellite: aggregates-only sweep outputs
+# ---------------------------------------------------------------------------
+
+def test_aggregates_output_parity_numpy():
+    full = sweep_workload(TINY_WL, SMALL_SPACE, use_cache=False,
+                          backend="numpy")
+    agg = sweep_workload(TINY_WL, SMALL_SPACE, use_cache=False,
+                         backend="numpy", outputs="aggregates")
+    assert set(agg.arrays) == set(AGGREGATE_OUTPUTS)
+    for k in AGGREGATE_OUTPUTS:
+        assert np.array_equal(agg.arrays[k], full.arrays[k]), k
+    # aggregate views still work without layer columns
+    assert agg.result_view(0).energy_j == full.result_view(0).energy_j
+
+
+def test_aggregates_output_parity_jax():
+    from repro.core.dse_batch import resolve_backend
+    try:
+        resolve_backend("jax")
+    except RuntimeError:
+        pytest.skip("jax unusable")
+    full = sweep_workload(TINY_WL, SMALL_SPACE, use_cache=False,
+                          backend="jax")
+    agg = sweep_workload(TINY_WL, SMALL_SPACE, use_cache=False,
+                         backend="jax", outputs="aggregates")
+    for k in AGGREGATE_OUTPUTS:
+        a, f = np.asarray(agg.arrays[k]), np.asarray(full.arrays[k])
+        assert np.max(np.abs(a / np.where(f == 0, 1, f) - 1)) < 1e-6, k
+
+
+def test_unknown_outputs_mode_rejected():
+    with pytest.raises(ValueError, match="unknown sweep outputs"):
+        sweep_workload(TINY_WL, SMALL_SPACE[:2], use_cache=False,
+                       backend="numpy", outputs="everything")
+
+
+# ---------------------------------------------------------------------------
+# satellite: PE<->mode mapping fails loudly, covers every type
+# ---------------------------------------------------------------------------
+
+def test_pe_mode_mapping_round_trips_every_type():
+    from repro.quant.policy import (ExecMode, mode_for_pe, pe_for_mode)
+    for t in PEType:
+        assert pe_for_mode(mode_for_pe(t)) is t
+    for m in ExecMode:
+        assert mode_for_pe(pe_for_mode(m)) is m
+
+
+def test_pe_mode_mapping_raises_clear_error_not_keyerror():
+    from repro.quant.policy import mode_for_pe, pe_for_mode
+    with pytest.raises(ValueError, match="no execution-mode mapping"):
+        mode_for_pe("int3")
+    with pytest.raises(ValueError, match="no PE-type mapping"):
+        pe_for_mode("w2a2")
+    # never a bare KeyError, even for arbitrary junk
+    for junk in (None, 42, object()):
+        with pytest.raises(ValueError):
+            mode_for_pe(junk)
+        with pytest.raises(ValueError):
+            pe_for_mode(junk)

@@ -1,0 +1,171 @@
+"""k-objective Pareto + hypervolume (ISSUE 3 satellite): duplicates,
+ties, degenerate fronts, and property tests against the 2-D kernel."""
+
+import numpy as np
+import pytest
+
+from repro.core.dse_batch import pareto_mask
+from repro.explore.pareto import (crowding_distance, hypervolume,
+                                  nondominated_sort, pareto_mask_k,
+                                  reference_point)
+
+
+def _brute_mask_k(F):
+    n = len(F)
+    return np.array([
+        not any((F[q] <= F[i]).all() and (F[q] < F[i]).any()
+                for q in range(n))
+        for i in range(n)])
+
+
+def test_pareto_mask_k_matches_brute_force_random():
+    rng = np.random.default_rng(3)
+    for k in (2, 3, 4, 5):
+        for _ in range(5):
+            n = int(rng.integers(1, 120))
+            F = np.round(rng.uniform(0, 3, size=(n, k)), 1)  # force ties
+            got = pareto_mask_k(F, chunk=16)
+            assert np.array_equal(got, _brute_mask_k(F)), (k, n)
+
+
+def test_pareto_mask_k_duplicates_all_survive():
+    F = np.array([[1.0, 2.0, 3.0]] * 4 + [[2.0, 3.0, 4.0]])
+    got = pareto_mask_k(F)
+    assert got.tolist() == [True] * 4 + [False]
+
+
+def test_pareto_mask_k_ties_on_some_axes():
+    # equal in two objectives, strictly better in the third: dominates
+    F = np.array([[1.0, 1.0, 1.0],
+                  [1.0, 1.0, 2.0],
+                  [0.5, 2.0, 2.0]])
+    assert pareto_mask_k(F).tolist() == [True, False, True]
+
+
+def test_pareto_mask_k_degenerate_fronts():
+    # single point
+    assert pareto_mask_k(np.array([[1.0, 2.0, 3.0]])).tolist() == [True]
+    # empty
+    assert pareto_mask_k(np.empty((0, 3))).shape == (0,)
+    # all-dominated-but-one (a strictly dominating corner point)
+    rng = np.random.default_rng(5)
+    F = rng.uniform(1, 2, size=(50, 3))
+    F = np.vstack([F, [[0.0, 0.0, 0.0]]])
+    got = pareto_mask_k(F)
+    assert got[-1] and got[:-1].sum() == 0
+    # one objective: all minima survive (ties included)
+    F1 = np.array([[2.0], [1.0], [1.0], [3.0]])
+    assert pareto_mask_k(F1).tolist() == [False, True, True, False]
+
+
+def test_pareto_mask_k2_delegates_bit_identical_to_2d_kernel():
+    rng = np.random.default_rng(11)
+    perf = np.round(rng.uniform(1, 50, 400), 0)
+    energy = np.round(rng.uniform(0.1, 5, 400), 1)
+    # 2-D minimization of (-perf, energy) == (max perf, min energy)
+    got = pareto_mask_k(np.stack([-perf, energy], axis=-1))
+    assert np.array_equal(got, pareto_mask(perf, energy))
+
+
+def test_3obj_front_superset_of_2d_front():
+    """Dropping an objective can only shrink the front: every point on the
+    2-D front stays non-dominated when a third objective is added
+    (distinct values; exact ties in both shared objectives can demote a
+    2-D-front point in 3-D under strict-dominance semantics)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis.extra import numpy as hnp
+
+    @settings(max_examples=60, deadline=None)
+    @given(hnp.arrays(np.float64, (37, 3),
+                      elements=hypothesis.strategies.floats(
+                          0, 1e6, allow_nan=False),
+                      unique=True))
+    def check(F):
+        mask2 = pareto_mask_k(F[:, :2])
+        mask3 = pareto_mask_k(F)
+        assert (mask3 | ~mask2).all()       # mask2 => mask3
+        # and the 2-D restriction agrees with the production 2-D kernel
+        assert np.array_equal(mask2, pareto_mask(-F[:, 0], F[:, 1]))
+
+    check()
+
+
+def test_nondominated_sort_ranks():
+    F = np.array([[0.0, 0.0],       # front 0
+                  [1.0, 1.0],       # front 1
+                  [0.5, 2.0],       # dominated by [0,0] only -> front 1
+                  [2.0, 2.0]])      # front 2
+    assert nondominated_sort(F).tolist() == [0, 1, 1, 2]
+
+
+def test_crowding_distance_boundaries_and_interior():
+    F = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    d = crowding_distance(F)
+    assert np.isinf(d[0]) and np.isinf(d[-1])
+    assert np.isfinite(d[1]) and np.isfinite(d[2])
+    assert crowding_distance(F[:2]).tolist() == [np.inf, np.inf]
+
+
+# ---------------------------------------------------------------------------
+# hypervolume
+# ---------------------------------------------------------------------------
+
+def test_hypervolume_single_point_is_box_volume():
+    ref = np.array([4.0, 5.0, 6.0])
+    F = np.array([[1.0, 2.0, 3.0]])
+    assert hypervolume(F, ref) == pytest.approx(3.0 * 3.0 * 3.0)
+
+
+def test_hypervolume_clips_points_beyond_reference():
+    ref = np.array([1.0, 1.0])
+    F = np.array([[0.5, 0.5], [2.0, -1.0], [0.5, 0.5]])  # dup + outside
+    assert hypervolume(F, ref) == pytest.approx(0.25)
+    assert hypervolume(np.array([[2.0, 2.0]]), ref) == 0.0
+    assert hypervolume(np.empty((0, 2)), ref) == 0.0
+
+
+def test_hypervolume_union_of_two_boxes_2d_and_3d():
+    ref2 = np.array([2.0, 2.0])
+    F2 = np.array([[0.0, 1.0], [1.0, 0.0]])
+    # union = 2*2 area of two 2x1 boxes overlapping in 1x1
+    assert hypervolume(F2, ref2) == pytest.approx(2.0 + 2.0 - 1.0)
+    ref3 = np.array([2.0, 2.0, 2.0])
+    F3 = np.array([[0.0, 1.0, 0.0], [1.0, 0.0, 0.0]])
+    assert hypervolume(F3, ref3) == pytest.approx((2 + 2 - 1) * 2.0)
+
+
+def test_hypervolume_monotone_under_added_points():
+    rng = np.random.default_rng(17)
+    F = rng.uniform(0, 1, size=(30, 3))
+    ref = np.full(3, 1.2)
+    hv = hypervolume(F, ref)
+    for _ in range(5):
+        extra = rng.uniform(0, 1, size=(5, 3))
+        hv2 = hypervolume(np.vstack([F, extra]), ref)
+        assert hv2 >= hv - 1e-12
+        F, hv = np.vstack([F, extra]), hv2
+
+
+def test_hypervolume_3d_matches_monte_carlo():
+    rng = np.random.default_rng(23)
+    F = rng.uniform(0, 1, size=(12, 3))
+    ref = np.full(3, 1.0)
+    hv = hypervolume(F, ref)
+    pts = rng.uniform(0, 1, size=(200_000, 3))
+    dominated = ((pts[:, None, :] >= F[None, :, :]).all(-1)).any(1)
+    mc = dominated.mean()
+    assert hv == pytest.approx(mc, abs=5e-3)
+
+
+def test_hypervolume_dimension_mismatch_raises():
+    with pytest.raises(ValueError, match="reference point"):
+        hypervolume(np.zeros((3, 2)), np.zeros(3))
+
+
+def test_reference_point_bounds_all_points():
+    rng = np.random.default_rng(29)
+    F = rng.normal(size=(40, 4))
+    ref = reference_point(F)
+    assert (F < ref[None, :]).all()
+    assert hypervolume(F, ref) > 0
