@@ -1,17 +1,27 @@
-"""Search presets for the co-exploration engine (`repro.core.dse.coexplore`).
+"""Search presets for the co-exploration engines
+(`repro.core.dse.coexplore` / `repro.core.dse.coexplore_many`).
 
 A preset bundles the knobs of one search campaign — engine, evaluation
 budget, population sizing, objective set — so experiments are named and
 reproducible instead of ad-hoc kwargs.  ``quick`` is the CI smoke setting;
 ``default`` matches the benchmark; ``thorough`` turns on the full
 5-objective set (perf/area, energy, EDP, area, quantization noise).
+
+The ``many-*`` presets target the multi-workload setting (one shared
+hardware config, per-workload precision assignments): their objective
+names come from :data:`repro.explore.objectives.MULTI_OBJECTIVES`
+(worst-case / energy-weighted-mean across the suite), and
+``sqnr_floor_db`` optionally turns per-workload accuracy floors into
+constraints.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.explore.objectives import DEFAULT_OBJECTIVES, OBJECTIVES
+from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
+                                      DEFAULT_OBJECTIVES, MULTI_OBJECTIVES,
+                                      OBJECTIVES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,13 +35,17 @@ class CoExplorePreset:
     seed: int = 0
     chunk_size: int = 4096
     eta: int = 3                     # successive-halving reduction factor
+    sqnr_floor_db: float | tuple[float, ...] | None = None
+    weights: tuple[float, ...] | None = None   # None = energy-weighted
 
     def __post_init__(self):
-        unknown = set(self.objectives) - set(OBJECTIVES)
+        unknown = set(self.objectives) - set(OBJECTIVES) \
+            - set(MULTI_OBJECTIVES)
         if unknown:
             raise ValueError(
                 f"preset {self.name!r}: unknown objective(s) "
-                f"{sorted(unknown)} (choose from {OBJECTIVES})")
+                f"{sorted(unknown)} (choose from single-workload "
+                f"{OBJECTIVES} or multi-workload {MULTI_OBJECTIVES})")
 
 
 PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
@@ -42,6 +56,16 @@ PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
     CoExplorePreset(name="random-baseline", method="random"),
     CoExplorePreset(name="halving", method="successive_halving",
                     budget=4096),
+    # multi-workload campaigns (shared hardware, per-workload precision)
+    CoExplorePreset(name="many-quick", budget=384, pop_size=24,
+                    objectives=DEFAULT_MULTI_OBJECTIVES),
+    CoExplorePreset(name="many-default",
+                    objectives=DEFAULT_MULTI_OBJECTIVES),
+    CoExplorePreset(name="many-thorough", budget=8192, pop_size=96,
+                    objectives=("neg_worst_perf_per_area",
+                                "total_energy_j", "worst_edp",
+                                "worst_quant_noise"),
+                    sqnr_floor_db=20.0),
 )}
 
 

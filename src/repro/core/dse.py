@@ -16,9 +16,11 @@ Two engines produce identical results:
 
 ``explore_many`` amortizes synthesis + SoA conversion across workloads,
 :class:`IncrementalSweep` lets a sweep be resumed/extended without
-re-evaluating known design points, and :func:`coexplore` runs the guided
+re-evaluating known design points, :func:`coexplore` runs the guided
 mixed-precision co-exploration engine (:mod:`repro.explore`) over the
-joint (config x per-layer precision) space.
+joint (config x per-layer precision) space, and :func:`coexplore_many`
+extends it to a workload *suite* sharing one hardware config with
+per-workload precision assignments (the full QUIDAM setting).
 """
 
 from __future__ import annotations
@@ -272,6 +274,73 @@ def coexplore(workload: Workload | str,
         kwargs.update(eta=p.eta)
     kwargs.update(method_kwargs)
     return fn(space, wl, p.budget if budget is None else budget, **kwargs)
+
+
+def coexplore_many(workloads: Sequence[Workload | str],
+                   *,
+                   preset: str = "many-default",
+                   method: str | None = None,
+                   budget: int | None = None,
+                   seed: int | None = None,
+                   backend: str = "auto",
+                   objectives=None,
+                   ref_point=None,
+                   weights=None,
+                   sqnr_floor_db=None,
+                   space_overrides: dict | None = None,
+                   **method_kwargs):
+    """Multi-workload co-exploration: one shared hardware config, one
+    per-layer precision assignment *per workload* — the full QUIDAM
+    setting.
+
+    The genome packs the shared hardware levels plus every workload's
+    ragged mode segment into one flat uint row
+    (:class:`repro.explore.space.CoExploreManySpace`); each population
+    chunk is evaluated against all W workloads in a single fused kernel
+    call (:func:`repro.core.dse_batch.sweep_mixed_many`) with synthesis
+    shared per hardware digest, so the W-workload evaluation costs ~O(1
+    synthesis) per hardware config.  Objectives aggregate across the
+    suite: ``worst_*`` objectives are the max over workloads (Pareto
+    claims then hold for *every* workload), ``mean_*`` are
+    energy-weighted means unless ``weights`` fixes an importance vector,
+    and ``sqnr_floor_db`` turns per-workload accuracy floors into
+    constraints (see
+    :func:`repro.explore.objectives.multi_objective_matrix`).
+
+    Returns a :class:`repro.explore.search.SearchResult` whose
+    ``front_points()`` decode to (config, ``{workload: modes}``) pairs.
+
+    >>> res = coexplore_many(["vgg16", "resnet34", "resnet50"],
+    ...                      preset="many-quick", seed=7)  # doctest: +SKIP
+    """
+    from repro.configs.coexplore_presets import get_preset
+    from repro.explore.search import SEARCH_METHODS
+    from repro.explore.space import space_for_workloads
+
+    p = get_preset(preset)
+    wls = tuple(_resolve(w) for w in workloads)
+    if not wls:
+        raise ValueError("coexplore_many needs at least one workload")
+    space = space_for_workloads(wls, **(space_overrides or {}))
+    method = p.method if method is None else method
+    fn = SEARCH_METHODS.get(method)
+    if fn is None:
+        raise ValueError(
+            f"unknown co-exploration method {method!r} "
+            f"(choose from {sorted(SEARCH_METHODS)})")
+    kwargs = dict(
+        objectives=p.objectives if objectives is None else tuple(objectives),
+        seed=p.seed if seed is None else seed,
+        backend=backend, chunk_size=p.chunk_size, ref_point=ref_point,
+        weights=p.weights if weights is None else weights,
+        sqnr_floor_db=(p.sqnr_floor_db if sqnr_floor_db is None
+                       else sqnr_floor_db))
+    if method == "nsga2":
+        kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
+    elif method == "successive_halving":
+        kwargs.update(eta=p.eta)
+    kwargs.update(method_kwargs)
+    return fn(space, wls, p.budget if budget is None else budget, **kwargs)
 
 
 class IncrementalSweep:

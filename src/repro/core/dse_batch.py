@@ -141,7 +141,11 @@ def _kahan_sum_rows(xp, x, dtype):
 # O(N) (ROADMAP open item)
 AGGREGATE_OUTPUTS = ("total_cycles_sum", "energy_pj_sum", "latency_s",
                      "energy_j", "throughput_gmacs", "perf_per_area")
-OUTPUT_MODES = ("full", "aggregates")
+# the (N, L) columns the multi-workload segment reduction consumes — with
+# ``outputs="layer_totals"`` the kernel returns only these two, so XLA can
+# DCE every other layer-level intermediate before the per-workload sums
+LAYER_TOTAL_OUTPUTS = ("total_cycles", "energy_pj")
+OUTPUT_MODES = ("full", "aggregates", "layer_totals")
 
 
 def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True,
@@ -302,6 +306,10 @@ def _sweep_kernel(xp, cfg: dict, lay: dict, *, exact: bool = True,
     e_leak = cfg["leak_mw"] * 1e-3 \
         * (total_cycles / (clock_ghz * 1e9)) * 1e12
     energy_pj = e_mac + e_spad + e_glb + e_leak
+
+    if outputs == "layer_totals":
+        # the segmented multi-workload reduction happens in the caller
+        return {"total_cycles": total_cycles, "energy_pj": energy_pj}
 
     # ---- per-config aggregates ---------------------------------------------
     if exact:
@@ -750,6 +758,153 @@ def sweep_mixed(workload: Workload,
     cfg, lay = _make_cfg_lay(soa, cols, wb)
     cfg = mixed_assign_cfg(cfg, assign)
     out = dict(_run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs))
+    out["clock_ghz"] = cfg["clock_ghz"][:, 0]
+    out["area_mm2"] = cfg["area_mm2"][:, 0]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-workload mixed-precision sweep: W workloads per genome batch, one
+# fused kernel call, synthesis shared per hardware digest
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _workload_batch_many(wls: tuple[Workload, ...]
+                         ) -> tuple[WorkloadBatch, tuple[tuple[int, int], ...]]:
+    """Concatenate W workloads into one layer-axis batch plus the
+    ``(start, end)`` column bounds of each workload's segment."""
+    wbs = [_workload_batch(w) for w in wls]
+    bounds: list[tuple[int, int]] = []
+    start = 0
+    for wb in wbs:
+        bounds.append((start, start + len(wb)))
+        start += len(wb)
+    arrays = {k: np.concatenate([wb.arrays[k] for wb in wbs])
+              for k in wbs[0].arrays}
+    names = tuple(f"{wb.name}/{nm}" for wb in wbs for nm in wb.layer_names)
+    combined = WorkloadBatch(name="+".join(wb.name for wb in wbs),
+                             layer_names=names, arrays=arrays)
+    return combined, tuple(bounds)
+
+
+def _segment_aggregates(xp, totals: dict, cfg: dict, lay: dict,
+                        bounds: tuple[tuple[int, int], ...],
+                        exact: bool) -> dict:
+    """Per-workload aggregate columns from the combined layer axis.
+
+    Mirrors the single-workload kernel's aggregate block op-for-op on each
+    ``[start, end)`` segment, so workload ``w``'s row is bit-identical
+    (exact path) to running that workload through :func:`sweep_mixed`
+    alone.  Returns ``{column: (W, N)}`` over :data:`AGGREGATE_OUTPUTS`.
+    """
+    f = np.float64 if exact else np.float32
+    tc, ep = totals["total_cycles"], totals["energy_pj"]
+    clk = cfg["clock_ghz"][:, 0]
+    area = cfg["area_mm2"][:, 0]
+    rows: dict[str, list] = {k: [] for k in AGGREGATE_OUTPUTS}
+    for s, e in bounds:
+        epw, tcw = ep[:, s:e], tc[:, s:e]
+        if exact:
+            energy_sum = xp.zeros(epw.shape[0], dtype=np.float64)
+            for j in range(epw.shape[1]):
+                energy_sum = energy_sum + epw[:, j]
+            cycles_sum = xp.sum(tcw, axis=1)
+        else:
+            energy_sum = _kahan_sum_rows(xp, epw, f)
+            cycles_sum = _kahan_sum_rows(xp, tcw, f)
+        total_macs = xp.sum(lay["macs"][:, s:e])
+        latency_s = cycles_sum / (clk * 1e9)
+        energy_j = energy_sum / 1e12
+        throughput_gmacs = total_macs / latency_s / 1e9
+        perf_per_area = throughput_gmacs / area
+        for k, v in zip(AGGREGATE_OUTPUTS,
+                        (cycles_sum, energy_sum, latency_s, energy_j,
+                         throughput_gmacs, perf_per_area)):
+            rows[k].append(v)
+    return {k: xp.stack(v, axis=0) for k, v in rows.items()}
+
+
+_JAX_MANY_KERNELS: dict = {}
+
+
+def get_jax_many_kernel(bounds: tuple[tuple[int, int], ...]):
+    """Jit-compiled multi-workload kernel, cached per (x64-mode, segment
+    bounds): the layer mapping runs once over the concatenated layer axis
+    and the per-workload reductions happen inside the same jit, so XLA
+    fuses everything into one dispatch and DCEs the (N, L) intermediates."""
+    import jax
+    import jax.numpy as jnp
+
+    exact = bool(jax.config.read("jax_enable_x64"))
+    key = (exact, bounds)
+    fn = _JAX_MANY_KERNELS.get(key)
+    if fn is None:
+        def kernel(cfg, lay):
+            totals = _sweep_kernel(jnp, cfg, lay, exact=exact,
+                                   outputs="layer_totals")
+            return _segment_aggregates(jnp, totals, cfg, lay, bounds,
+                                       exact=exact)
+
+        fn = jax.jit(kernel)
+        _JAX_MANY_KERNELS[key] = fn
+    return fn, exact
+
+
+def sweep_mixed_many(workloads: Sequence[Workload],
+                     soa: dict[str, np.ndarray],
+                     assigns: Sequence[np.ndarray],
+                     cols: dict[str, np.ndarray] | None = None,
+                     *,
+                     use_cache: bool = True,
+                     backend: str = "auto") -> dict[str, np.ndarray]:
+    """Evaluate one genome batch against W workloads in one fused pass.
+
+    ``soa`` is the shared hardware half (N configs); ``assigns`` holds one
+    ``(N, L_w)`` per-layer mode matrix per workload — the per-workload
+    precision assignment of the QUIDAM co-exploration setting.  The W
+    workloads' layer axes are concatenated into a single ``(N, sum L_w)``
+    kernel evaluation (layers are independent under the row-stationary
+    mapping), then reduced per workload segment, so the whole call costs
+    one synthesis pass + one kernel dispatch regardless of W.  Synthesis
+    runs on the hardware configs alone through the digest-keyed sweep
+    cache by default — revisited hardware (the common case in a search)
+    skips the flow entirely, keeping W-workload evaluation ~O(1 synthesis)
+    per hardware config.
+
+    Returns ``{column: (W, N)}`` over :data:`AGGREGATE_OUTPUTS` plus
+    ``clock_ghz`` / ``area_mm2`` as ``(N,)``.  Workload ``w``'s row is
+    bit-identical (numpy) to :func:`sweep_mixed` on that workload alone;
+    jax agrees to the usual ~1e-7 relative parity.
+    """
+    backend = resolve_backend(backend)
+    wls = tuple(workloads)
+    if not wls:
+        raise ValueError("sweep_mixed_many needs at least one workload")
+    combined, bounds = _workload_batch_many(wls)
+    n = len(soa["pe_rows"])
+    assigns = [np.asarray(a, dtype=np.int64) for a in assigns]
+    if len(assigns) != len(wls):
+        raise ValueError(
+            f"{len(assigns)} assignment matrices for {len(wls)} workloads")
+    for (s, e), a, wl in zip(bounds, assigns, wls):
+        if a.shape != (n, e - s):
+            raise ValueError(
+                f"assignment shape {a.shape} != ({n} configs, "
+                f"{e - s} layers) for workload {wl.name!r}")
+    assign_all = np.concatenate(assigns, axis=1)
+    check_assignment(soa, assign_all)
+    if cols is None:
+        cols = (sweep_synthesis_cache().synthesize(soa) if use_cache
+                else synthesize_soa(soa))
+    cfg, lay = _make_cfg_lay(soa, cols, combined)
+    cfg = mixed_assign_cfg(cfg, assign_all)
+    if backend == "jax":
+        fn, exact = get_jax_many_kernel(bounds)
+        jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
+        out = {k: np.asarray(v) for k, v in fn(jcfg, jlay).items()}
+    else:
+        totals = _sweep_kernel(np, cfg, lay, outputs="layer_totals")
+        out = _segment_aggregates(np, totals, cfg, lay, bounds, exact=True)
     out["clock_ghz"] = cfg["clock_ghz"][:, 0]
     out["area_mm2"] = cfg["area_mm2"][:, 0]
     return out

@@ -269,7 +269,19 @@ class PersistentSynthesisCache:
         self.misses = 0
         self.evictions = 0
         if self.path is not None and self.path.exists():
-            self.load(self.path)
+            try:
+                self.load(self.path)
+            except Exception as exc:
+                # a corrupted / truncated / foreign npz must never poison
+                # the cache with garbage rows: warn and rebuild from empty
+                # (the next save overwrites the bad file).  An *explicit*
+                # load() call still raises.
+                import warnings
+                warnings.warn(
+                    f"persistent synthesis cache at {self.path} is "
+                    f"unreadable ({type(exc).__name__}: {exc}); starting "
+                    f"with an empty cache and rebuilding",
+                    RuntimeWarning, stacklevel=2)
 
     def clear(self) -> None:
         """Drop all rows and stats; keeps the cap and the save path."""
@@ -359,10 +371,32 @@ class PersistentSynthesisCache:
         return self._n
 
     def load(self, path: str | pathlib.Path) -> int:
-        """Merge rows from an npz file; returns how many were new."""
+        """Merge rows from an npz file; returns how many were new.
+
+        Raises (``ValueError`` for a structurally wrong file, whatever
+        ``np.load`` raises for a corrupt one) instead of ever merging
+        garbage — the constructor catches this and rebuilds, an explicit
+        call surfaces it.
+        """
         with np.load(pathlib.Path(path)) as z:
+            missing = {"keys", *REPORT_COLUMNS} - set(z.files)
+            if missing:
+                raise ValueError(
+                    f"synthesis cache {path} is missing array(s) "
+                    f"{sorted(missing)}")
             keys = np.ascontiguousarray(z["keys"], dtype=np.uint64)
+            if keys.ndim != 2 or keys.shape[1] != 2:
+                raise ValueError(
+                    f"synthesis cache {path}: keys shape {keys.shape} "
+                    f"!= (N, 2)")
             vals = np.stack([z[c] for c in REPORT_COLUMNS], axis=-1)
+            if vals.shape != (len(keys), len(REPORT_COLUMNS)):
+                raise ValueError(
+                    f"synthesis cache {path}: {len(keys)} keys but "
+                    f"value block {vals.shape}")
+            if not np.isfinite(vals).all():
+                raise ValueError(
+                    f"synthesis cache {path}: non-finite report values")
         before = self._n
         self._grow(len(keys))
         buf = keys.tobytes()

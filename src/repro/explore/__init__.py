@@ -7,19 +7,26 @@ engine.  See :mod:`repro.explore.space` for the genome encoding,
 :func:`repro.core.dse.coexplore` for the one-call entry point.
 """
 
-from repro.explore.objectives import (DEFAULT_OBJECTIVES, OBJECTIVES,
-                                      mode_noise_table, mode_sqnr_db,
-                                      objective_matrix, quant_noise)
+from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
+                                      DEFAULT_OBJECTIVES, MULTI_OBJECTIVES,
+                                      OBJECTIVES, mode_noise_table,
+                                      mode_sqnr_db, multi_objective_matrix,
+                                      objective_matrix, quant_noise,
+                                      sqnr_floor_violation)
 from repro.explore.pareto import (crowding_distance, hypervolume,
                                   nondominated_sort, pareto_mask_k,
                                   reference_point)
 from repro.explore.search import (SEARCH_METHODS, Evaluator, SearchResult,
                                   nsga2, random_search, successive_halving)
-from repro.explore.space import CoExploreSpace, space_for_workload
+from repro.explore.space import (CoExploreManySpace, CoExploreSpace,
+                                 space_for_workload, space_for_workloads)
 
 __all__ = [
-    "CoExploreSpace", "space_for_workload",
+    "CoExploreSpace", "CoExploreManySpace",
+    "space_for_workload", "space_for_workloads",
     "OBJECTIVES", "DEFAULT_OBJECTIVES", "objective_matrix", "quant_noise",
+    "MULTI_OBJECTIVES", "DEFAULT_MULTI_OBJECTIVES",
+    "multi_objective_matrix", "sqnr_floor_violation",
     "mode_noise_table", "mode_sqnr_db",
     "pareto_mask_k", "nondominated_sort", "crowding_distance",
     "hypervolume", "reference_point",

@@ -26,6 +26,21 @@ OBJECTIVES = ("neg_perf_per_area", "energy_j", "edp", "area_mm2",
               "quant_noise")
 DEFAULT_OBJECTIVES = ("neg_perf_per_area", "energy_j", "quant_noise")
 
+# multi-workload objectives (shared hardware, per-workload assignments):
+# worst_* is the max over the workload suite, mean_* the weighted mean
+# (default weights: each workload's share of the genome's total energy)
+MULTI_OBJECTIVES = ("neg_worst_perf_per_area", "worst_latency_s",
+                    "mean_latency_s", "worst_edp", "mean_edp",
+                    "total_energy_j", "worst_quant_noise",
+                    "mean_quant_noise")
+DEFAULT_MULTI_OBJECTIVES = ("neg_worst_perf_per_area", "total_energy_j",
+                            "worst_quant_noise")
+
+# static-penalty scale for SQNR-floor constraint violations: any genome
+# breaking an accuracy floor lands far outside the feasible objective
+# ranges in every dimension, so feasible points always dominate it
+FLOOR_PENALTY = 1e9
+
 _TYPES = tuple(PEType)
 
 # analytic fallback noise powers (weight + activation, relative to signal):
@@ -158,3 +173,117 @@ def objective_matrix(agg: dict[str, np.ndarray],
             raise ValueError(
                 f"unknown objective {name!r} (choose from {OBJECTIVES})")
     return np.stack(cols, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Multi-workload objectives (the QUIDAM co-exploration setting)
+# ---------------------------------------------------------------------------
+
+def sqnr_floor_violation(assigns, layer_macs_list,
+                         floor_db) -> np.ndarray:
+    """Per-genome violation of per-workload SQNR accuracy floors.
+
+    ``floor_db`` is the minimum acceptable MAC-weighted SQNR in dB, a
+    scalar (shared floor) or one value per workload.  A workload's
+    quantization-noise score must stay below the ceiling
+    ``10**(-floor_db/10)``; the violation is the summed relative excess
+    ``max(0, noise_w - ceiling_w) / ceiling_w`` over workloads — zero for
+    feasible genomes.  Pure function of the assignment, so it is
+    backend-independent and memo-safe.
+    """
+    floors = np.broadcast_to(np.asarray(floor_db, dtype=np.float64),
+                             (len(assigns),))
+    ceil = 10.0 ** (-floors / 10.0)
+    v = np.zeros(len(np.asarray(assigns[0])), dtype=np.float64)
+    for a, macs, c in zip(assigns, layer_macs_list, ceil):
+        noise = quant_noise(a, macs)
+        v += np.maximum(0.0, noise - c) / c
+    return v
+
+
+def multi_objective_matrix(agg: dict[str, np.ndarray],
+                           assigns,
+                           layer_macs_list,
+                           objectives=DEFAULT_MULTI_OBJECTIVES,
+                           weights=None,
+                           sqnr_floor_db=None) -> np.ndarray:
+    """Assemble the ``(N, K)`` minimization matrix for a workload suite.
+
+    ``agg`` holds the ``(W, N)`` aggregate columns from
+    :func:`repro.core.dse_batch.sweep_mixed_many`, ``assigns`` the
+    per-workload ``(N, L_w)`` mode matrices, ``layer_macs_list`` the
+    per-workload ``(L_w,)`` MAC counts.
+
+    ``worst_*`` objectives take the max over the workload axis — the
+    QUIDAM-style guarantee that Pareto claims hold for *every* workload,
+    not just on average.  ``mean_*`` objectives are weighted means:
+    ``weights`` is either a fixed ``(W,)`` importance vector (normalized
+    internally) or ``None`` for *energy-weighted* means, where each
+    workload's weight is its share of the genome's own total energy — a
+    workload the design spends most of its energy on dominates the mean.
+
+    ``sqnr_floor_db`` (scalar or per-workload) turns per-workload accuracy
+    floors into constraints via a static penalty: the summed relative
+    floor violation times :data:`FLOOR_PENALTY` is added to **every**
+    objective, so infeasible genomes are dominated by all feasible ones
+    while remaining comparable among themselves (less violation wins).
+    """
+    lat = np.asarray(agg["latency_s"], dtype=np.float64)
+    energy = np.asarray(agg["energy_j"], dtype=np.float64)
+    if lat.ndim != 2:
+        raise ValueError(
+            f"multi-workload aggregates must be (W, N), got {lat.shape}")
+    w_count = lat.shape[0]
+    if len(assigns) != w_count or len(layer_macs_list) != w_count:
+        raise ValueError(
+            f"{len(assigns)} assignment matrices / "
+            f"{len(layer_macs_list)} MAC vectors for {w_count} workloads")
+    if weights is None:
+        # energy-weighted: each workload's share of this genome's energy
+        wts = energy / energy.sum(axis=0, keepdims=True)      # (W, N)
+    else:
+        wts = np.asarray(weights, dtype=np.float64)
+        if wts.shape != (w_count,) or (wts < 0).any() or wts.sum() <= 0:
+            raise ValueError(
+                f"weights must be (W,) non-negative with positive sum, "
+                f"got {weights!r}")
+        wts = (wts / wts.sum())[:, None]                      # (W, 1)
+
+    edp = energy * lat
+    noise = None
+
+    def _noise():
+        nonlocal noise
+        if noise is None:
+            noise = np.stack([quant_noise(a, m) for a, m in
+                              zip(assigns, layer_macs_list)])  # (W, N)
+        return noise
+
+    cols = []
+    for name in objectives:
+        if name == "neg_worst_perf_per_area":
+            ppa = np.asarray(agg["perf_per_area"], dtype=np.float64)
+            cols.append(-ppa.min(axis=0))
+        elif name == "worst_latency_s":
+            cols.append(lat.max(axis=0))
+        elif name == "mean_latency_s":
+            cols.append((wts * lat).sum(axis=0))
+        elif name == "worst_edp":
+            cols.append(edp.max(axis=0))
+        elif name == "mean_edp":
+            cols.append((wts * edp).sum(axis=0))
+        elif name == "total_energy_j":
+            cols.append(energy.sum(axis=0))
+        elif name == "worst_quant_noise":
+            cols.append(_noise().max(axis=0))
+        elif name == "mean_quant_noise":
+            cols.append((wts * _noise()).sum(axis=0))
+        else:
+            raise ValueError(
+                f"unknown multi-workload objective {name!r} "
+                f"(choose from {MULTI_OBJECTIVES})")
+    F = np.stack(cols, axis=-1)
+    if sqnr_floor_db is not None:
+        v = sqnr_floor_violation(assigns, layer_macs_list, sqnr_floor_db)
+        F = F + (FLOOR_PENALTY * v)[:, None]
+    return F

@@ -29,13 +29,17 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.dse_batch import resolve_backend, sweep_mixed
+from repro.core.dse_batch import (resolve_backend, sweep_mixed,
+                                  sweep_mixed_many)
 from repro.core.workloads import Workload, get_workload
-from repro.explore.objectives import (DEFAULT_OBJECTIVES, objective_matrix)
+from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
+                                      DEFAULT_OBJECTIVES,
+                                      multi_objective_matrix,
+                                      objective_matrix)
 from repro.explore.pareto import (crowding_distance, hypervolume,
                                   nondominated_sort, pareto_mask_k,
                                   reference_point)
-from repro.explore.space import CoExploreSpace
+from repro.explore.space import CoExploreManySpace, CoExploreSpace
 
 
 @dataclasses.dataclass
@@ -62,6 +66,11 @@ class SearchResult:
     all_objectives: np.ndarray
     n_evals: int
     stats: dict
+    # final evolutionary population (nsga2 only): the returned front is the
+    # unbounded external archive, which is a superset of this population's
+    # own non-dominated set
+    population: np.ndarray | None = None
+    population_objectives: np.ndarray | None = None
 
     @property
     def front_size(self) -> int:
@@ -74,16 +83,33 @@ class SearchResult:
 
     def front_points(self) -> list[dict]:
         """Materialize the front: config objects, per-layer mode names,
-        objective values — sorted by the first objective."""
+        objective values — sorted by the first objective.
+
+        Multi-workload runs report ``modes`` as a dict keyed by workload
+        name (each value the workload's own per-layer mode tuple) instead
+        of a flat tuple.
+        """
         from repro.core.accelerator import soa_to_configs
         from repro.core.pe import PEType
         types = tuple(PEType)
         soa, assign = self.space.decode(self.genomes)
         cfgs = soa_to_configs(soa)
         order = np.argsort(self.front_objectives[:, 0], kind="stable")
+        if isinstance(self.space, CoExploreManySpace):
+            names = (self.space.workload_names
+                     or tuple(f"workload{w}"
+                              for w in range(self.space.n_workloads)))
+
+            def modes_of(i):
+                return {nm: tuple(types[j].value for j in assign[i, s:e])
+                        for nm, (s, e) in zip(names,
+                                              self.space.segment_bounds)}
+        else:
+            def modes_of(i):
+                return tuple(types[j].value for j in assign[i])
         return [{
             "config": cfgs[i],
-            "modes": tuple(types[j].value for j in assign[i]),
+            "modes": modes_of(i),
             **{name: float(self.front_objectives[i, k])
                for k, name in enumerate(self.objectives)},
         } for i in order]
@@ -99,57 +125,137 @@ class Evaluator:
     Results are memoized by genome digest, so an evolutionary loop that
     re-visits a genome never re-runs the kernel; hardware re-visits hit
     the digest-keyed synthesis cache inside ``sweep_mixed``.
+
+    **Multi-workload mode** (the QUIDAM co-exploration setting): pass a
+    *sequence* of workloads together with a
+    :class:`~repro.explore.space.CoExploreManySpace` — genomes then carry
+    one mode segment per workload, evaluation routes through
+    :func:`sweep_mixed_many` (one fused kernel call for all W workloads,
+    synthesis shared per hardware digest), and objectives come from
+    :func:`repro.explore.objectives.multi_objective_matrix` (worst-case /
+    weighted-mean across the suite, optional per-workload SQNR floors via
+    ``sqnr_floor_db``).
     """
 
-    def __init__(self, space: CoExploreSpace, workload: Workload | str,
-                 objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+    def __init__(self, space: CoExploreSpace,
+                 workload: Workload | str | Sequence[Workload | str],
+                 objectives: Sequence[str] | None = None,
                  *, backend: str = "auto", chunk_size: int = 4096,
-                 use_cache: bool = True):
+                 use_cache: bool = True, weights=None,
+                 sqnr_floor_db=None):
         self.space = space
-        self.workload = (get_workload(workload)
-                         if isinstance(workload, str) else workload)
-        if space.n_layers != len(self.workload.layers):
-            raise ValueError(
-                f"space has {space.n_layers} layer genes but workload "
-                f"{self.workload.name!r} has {len(self.workload.layers)} "
-                f"layers")
-        self.objectives = tuple(objectives)
+        self.multi = isinstance(workload, (list, tuple))
+        if self.multi:
+            wls = tuple(get_workload(w) if isinstance(w, str) else w
+                        for w in workload)
+            if not isinstance(space, CoExploreManySpace):
+                raise ValueError(
+                    "a workload sequence needs a CoExploreManySpace "
+                    "(see repro.explore.space.space_for_workloads)")
+            counts = tuple(len(w.layers) for w in wls)
+            if space.layer_counts != counts:
+                raise ValueError(
+                    f"space layer_counts {space.layer_counts} != workload "
+                    f"layer counts {counts}")
+            self.workloads = wls
+            self.workload = None
+        else:
+            wl = (get_workload(workload)
+                  if isinstance(workload, str) else workload)
+            if space.n_layers != len(wl.layers):
+                raise ValueError(
+                    f"space has {space.n_layers} layer genes but workload "
+                    f"{wl.name!r} has {len(wl.layers)} layers")
+            self.workloads = (wl,)
+            self.workload = wl
+        self.objectives = tuple(
+            (DEFAULT_MULTI_OBJECTIVES if self.multi else DEFAULT_OBJECTIVES)
+            if objectives is None else objectives)
         self.backend = resolve_backend(backend)
         self.chunk_size = int(chunk_size)
         self.use_cache = use_cache
+        self.weights = weights
+        self.sqnr_floor_db = sqnr_floor_db
         self._memo: dict[tuple[bytes, int], np.ndarray] = {}
-        self._subsets: dict[int, Workload] = {}
+        self._subsets: dict[int, tuple] = {}
         self.n_requested = 0
         self.n_kernel = 0
         self.n_memo_hits = 0
         self.eval_seconds = 0.0
 
-    def _subset(self, m: int) -> Workload:
-        if m >= self.space.n_layers:
-            return self.workload
-        wl = self._subsets.get(m)
-        if wl is None:
-            wl = Workload(name=f"{self.workload.name}[:{m}]",
-                          layers=self.workload.layers[:m])
-            self._subsets[m] = wl
-        return wl
+    @property
+    def name(self) -> str:
+        """Workload identity for reports: a single name or ``a+b+c``."""
+        return "+".join(w.name for w in self.workloads)
+
+    @property
+    def full_subset(self) -> int:
+        """The ``m`` that means "every layer": per-workload prefix length
+        in multi mode, total layer count otherwise."""
+        if self.multi:
+            return max(self.space.layer_counts)
+        return self.space.n_layers
+
+    def _subset(self, m: int) -> tuple:
+        """``(workloads, per-workload macs)`` for prefix length ``m`` —
+        in multi mode each workload is cut to its first ``min(m, L_w)``
+        layers, so successive-halving rungs race on cheap prefixes of the
+        whole suite."""
+        if m >= self.full_subset:
+            m = self.full_subset
+        cached = self._subsets.get(m)
+        if cached is None:
+            wls = tuple(
+                w if m >= len(w.layers) else
+                Workload(name=f"{w.name}[:{m}]", layers=w.layers[:m])
+                for w in self.workloads)
+            macs = tuple(np.array([l.macs for l in w.layers],
+                                  dtype=np.float64) for w in wls)
+            cached = (wls, macs)
+            self._subsets[m] = cached
+        return cached
 
     def _pad(self, n: int) -> int:
         if self.backend != "jax":
             return n
         return min(self.chunk_size, 1 << max(3, (n - 1).bit_length()))
 
+    def _objective_rows(self, wls, macs, soa, assign, n_real) -> np.ndarray:
+        """One padded chunk through the fused kernel -> (n_real, K)."""
+        if self.multi:
+            bounds = self.space.segment_bounds
+            assigns = [assign[:, s:e][:, :len(w.layers)]
+                       for (s, e), w in zip(bounds, wls)]
+            agg = sweep_mixed_many(wls, soa, assigns,
+                                   use_cache=self.use_cache,
+                                   backend=self.backend)
+            agg = {k: np.asarray(v)[:, :n_real]
+                   for k, v in agg.items() if np.ndim(v) == 2}
+            return multi_objective_matrix(
+                agg, [a[:n_real] for a in assigns], macs,
+                self.objectives, weights=self.weights,
+                sqnr_floor_db=self.sqnr_floor_db)
+        wl, = wls
+        agg = sweep_mixed(wl, soa, assign[:, :len(wl.layers)],
+                          use_cache=self.use_cache,
+                          backend=self.backend, outputs="aggregates")
+        return objective_matrix({k: np.asarray(v)[:n_real]
+                                 for k, v in agg.items()},
+                                assign[:n_real, :len(wl.layers)],
+                                macs[0], self.objectives)
+
     def evaluate(self, genomes: np.ndarray,
                  subset: int | None = None) -> np.ndarray:
         """``(N, K)`` objective rows for a genome matrix.
 
         ``subset`` evaluates on the first ``subset`` layers only (the
-        successive-halving rungs); objective rows are float64 regardless
-        of backend.
+        successive-halving rungs; per workload in multi mode); objective
+        rows are float64 regardless of backend.
         """
         t0 = time.perf_counter()
         g = self.space.validate(genomes, raise_on_invalid=True)
-        m = self.space.n_layers if subset is None else int(subset)
+        m = self.full_subset if subset is None else min(int(subset),
+                                                       self.full_subset)
         self.n_requested += len(g)
         keys = self.space.genome_keys(g)
         out = np.empty((len(g), len(self.objectives)), dtype=np.float64)
@@ -161,25 +267,19 @@ class Evaluator:
             else:
                 self.n_memo_hits += 1
                 out[i] = row
-        wl = self._subset(m)
-        macs = np.array([l.macs for l in wl.layers], dtype=np.float64)
+        wls, macs = self._subset(m)
         for s in range(0, len(todo), self.chunk_size):
             idx = np.asarray(todo[s:s + self.chunk_size], dtype=np.intp)
             # rows were validated above; skip the per-chunk repeat
             soa, assign = self.space.decode(g[idx], skip_validation=True)
-            assign = assign[:, :m]
             pad = self._pad(len(idx)) - len(idx)
             if pad > 0:
                 soa = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
                        for k, v in soa.items()}
                 assign = np.concatenate(
                     [assign, assign[-1:].repeat(pad, axis=0)])
-            agg = sweep_mixed(wl, soa, assign, use_cache=self.use_cache,
-                              backend=self.backend, outputs="aggregates")
-            F = objective_matrix({k: np.asarray(v)[:len(idx)]
-                                  for k, v in agg.items()},
-                                 assign[:len(idx)], macs, self.objectives)
-            out[idx] = F
+            out[idx] = self._objective_rows(wls, macs, soa, assign,
+                                            len(idx))
             self.n_kernel += len(idx)
             for j, i in enumerate(idx):
                 # copy: the caller owns `out`, and an in-place edit of the
@@ -195,6 +295,7 @@ class Evaluator:
             "memo_hits": self.n_memo_hits,
             "eval_seconds": self.eval_seconds,
             "backend": self.backend,
+            "n_workloads": len(self.workloads),
         }
 
 
@@ -205,27 +306,37 @@ def _front(genomes: np.ndarray, F: np.ndarray
 
 
 def _result(method: str, ev: Evaluator, seed: int, genomes, F,
-            ref, history, all_F, n_evals) -> SearchResult:
+            ref, history, all_F, n_evals, *, population=None,
+            population_objectives=None) -> SearchResult:
     fg, ff = _front(genomes, F)
     return SearchResult(
-        method=method, workload=ev.workload.name,
+        method=method, workload=ev.name,
         objectives=ev.objectives, seed=seed, space=ev.space,
         genomes=fg, front_objectives=ff, ref_point=np.asarray(ref),
         history=history, all_objectives=np.concatenate(all_F, axis=0),
-        n_evals=n_evals, stats=ev.stats())
+        n_evals=n_evals, stats=ev.stats(), population=population,
+        population_objectives=population_objectives)
 
 
-def random_search(space: CoExploreSpace, workload: Workload | str,
-                  budget: int, *,
-                  objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+def random_search(space: CoExploreSpace, workload, budget: int, *,
+                  objectives: Sequence[str] | None = None,
                   seed: int = 0, backend: str = "auto",
                   chunk_size: int = 4096, batch: int | None = None,
-                  ref_point: np.ndarray | None = None) -> SearchResult:
+                  ref_point: np.ndarray | None = None,
+                  weights=None, sqnr_floor_db=None) -> SearchResult:
     """Uniform-random baseline: ``budget`` independent genomes, running
-    non-dominated reduction, hypervolume recorded per batch."""
+    non-dominated reduction, hypervolume recorded per batch.
+
+    ``workload`` may be a single workload or a sequence (multi-workload
+    co-exploration — then ``space`` must be a
+    :class:`~repro.explore.space.CoExploreManySpace`; ``weights`` and
+    ``sqnr_floor_db`` configure the suite objectives, see
+    :class:`Evaluator`).  Same for the other engines.
+    """
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
-                   chunk_size=chunk_size)
+                   chunk_size=chunk_size, weights=weights,
+                   sqnr_floor_db=sqnr_floor_db)
     if budget < 1:
         raise ValueError("budget must be >= 1")
     if batch is not None and batch < 1:
@@ -273,12 +384,13 @@ def _tournament(rng: np.random.Generator, n_pick: int,
     return np.where(a_wins, a, b)
 
 
-def nsga2(space: CoExploreSpace, workload: Workload | str, budget: int, *,
+def nsga2(space: CoExploreSpace, workload, budget: int, *,
           pop_size: int = 64,
-          objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+          objectives: Sequence[str] | None = None,
           seed: int = 0, backend: str = "auto", chunk_size: int = 4096,
           mutation_rate: float = 0.08,
-          ref_point: np.ndarray | None = None) -> SearchResult:
+          ref_point: np.ndarray | None = None,
+          weights=None, sqnr_floor_db=None) -> SearchResult:
     """NSGA-II-style evolutionary multi-objective search.
 
     Classic loop: elitist (mu + lambda) survival over non-domination rank
@@ -286,6 +398,15 @@ def nsga2(space: CoExploreSpace, workload: Workload | str, budget: int, *,
     per-gene resampling mutation, compatibility repair.  ``budget`` counts
     requested genome evaluations (initial population included), so runs
     compare 1:1 with :func:`random_search` at the same budget.
+
+    Every evaluated genome also flows through an **unbounded external
+    archive** — a running non-dominated reduction over the whole search
+    trajectory, like random search's running front — so a non-dominated
+    genome that crowding truncation drops from the population is never
+    lost.  The returned front *is* the archive (a superset of the final
+    population's own non-dominated set, which is also returned via
+    ``population`` / ``population_objectives``); the hypervolume history
+    tracks the archive, and is therefore monotone.
     """
     if budget < 1:
         raise ValueError("budget must be >= 1")
@@ -293,12 +414,14 @@ def nsga2(space: CoExploreSpace, workload: Workload | str, budget: int, *,
         raise ValueError("pop_size must be >= 4")
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
-                   chunk_size=chunk_size)
+                   chunk_size=chunk_size, weights=weights,
+                   sqnr_floor_db=sqnr_floor_db)
     pop = space.random_population(min(pop_size, budget), rng)
     F = ev.evaluate(pop)
     evals = len(pop)
     ref = reference_point(F) if ref_point is None else ref_point
-    history = [(evals, hypervolume(F[pareto_mask_k(F)], ref))]
+    arch_g, arch_F = _front(pop, F)
+    history = [(evals, hypervolume(arch_F, ref))]
     all_F = [F]
     while evals < budget:
         n_off = min(pop_size, budget - evals)
@@ -310,30 +433,41 @@ def nsga2(space: CoExploreSpace, workload: Workload | str, budget: int, *,
         Fc = ev.evaluate(children)
         evals += n_off
         all_F.append(Fc)
+        comb_g = np.concatenate([arch_g, children])
+        comb_F = np.concatenate([arch_F, Fc])
+        # a genome re-visited across generations has an identical memoized
+        # objective row; keep one copy (first occurrence) so the archive
+        # stays the *set* of non-dominated genomes found
+        _, uidx = np.unique(comb_g, axis=0, return_index=True)
+        uidx.sort()
+        arch_g, arch_F = _front(comb_g[uidx], comb_F[uidx])
         comb = np.concatenate([pop, children])
         Fcomb = np.concatenate([F, Fc])
         ranks2, crowd2 = _ranks_and_crowding(Fcomb)
         order = np.lexsort((np.arange(len(comb)), -crowd2, ranks2))
         sel = order[:pop_size]
         pop, F = comb[sel], Fcomb[sel]
-        history.append((evals, hypervolume(F[pareto_mask_k(F)], ref)))
-    return _result("nsga2", ev, seed, pop, F, ref, history, all_F, evals)
+        history.append((evals, hypervolume(arch_F, ref)))
+    return _result("nsga2", ev, seed, arch_g, arch_F, ref, history, all_F,
+                   evals, population=pop, population_objectives=F)
 
 
-def successive_halving(space: CoExploreSpace, workload: Workload | str,
-                       budget: int, *, eta: int = 3,
-                       objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+def successive_halving(space: CoExploreSpace, workload, budget: int, *,
+                       eta: int = 3,
+                       objectives: Sequence[str] | None = None,
                        seed: int = 0, backend: str = "auto",
                        chunk_size: int = 4096, min_layers: int = 2,
-                       ref_point: np.ndarray | None = None) -> SearchResult:
+                       ref_point: np.ndarray | None = None,
+                       weights=None, sqnr_floor_db=None) -> SearchResult:
     """Successive halving over workload layer-prefix subsets.
 
     Rung ``r`` evaluates its population on the first ``m_r`` layers only
-    (a cheap, correlated proxy of the full workload), keeps the best
-    ``1/eta`` by (non-domination rank, crowding), and promotes them to the
-    next, larger subset; the final rung is the full workload.  Every
-    requested evaluation counts one unit of ``budget`` regardless of
-    subset size, so the comparison with the other engines is conservative.
+    (a cheap, correlated proxy of the full workload; per workload in the
+    multi-workload setting), keeps the best ``1/eta`` by (non-domination
+    rank, crowding), and promotes them to the next, larger subset; the
+    final rung is the full workload.  Every requested evaluation counts
+    one unit of ``budget`` regardless of subset size, so the comparison
+    with the other engines is conservative.
     """
     if budget < 1:
         raise ValueError("budget must be >= 1")
@@ -341,8 +475,9 @@ def successive_halving(space: CoExploreSpace, workload: Workload | str,
         raise ValueError("eta must be >= 2")
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
-                   chunk_size=chunk_size)
-    L = space.n_layers
+                   chunk_size=chunk_size, weights=weights,
+                   sqnr_floor_db=sqnr_floor_db)
+    L = ev.full_subset
     sizes = [L]
     while sizes[-1] > min(min_layers, L) and len(sizes) < 4:
         nxt = max(min(min_layers, L), -(-sizes[-1] // eta))

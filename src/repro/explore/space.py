@@ -245,6 +245,12 @@ class CoExploreSpace:
         return self.repair(np.where(take_a, a, b))
 
     # ---- identity ----------------------------------------------------------
+    def _digest_salt(self) -> tuple[int, ...]:
+        """Extra words folded into every genome digest, so genomes of
+        structurally different spaces (layer counts, workload boundaries)
+        can never alias."""
+        return (self.n_layers,)
+
     def genome_digests(self, genomes: np.ndarray):
         """128-bit counter-hash digests of whole genomes (hardware levels
         + assignment), via the same primitive that keys the synthesis
@@ -252,14 +258,105 @@ class CoExploreSpace:
         g = self.validate(genomes)
         words = [g[:, j].astype(np.uint32)
                  for j in range(self.genome_width)]
-        # fold the layer count in so equal prefixes of different spaces
-        # cannot alias
-        words.append(np.full(len(g), self.n_layers, dtype=np.uint32))
+        # fold the space's structure in so equal prefixes of different
+        # spaces cannot alias
+        for salt in self._digest_salt():
+            words.append(np.full(len(g), salt, dtype=np.uint32))
         return digest_words(words)
 
     def genome_keys(self, genomes: np.ndarray) -> list[bytes]:
         """16-byte memo keys, one per genome."""
         return digest_keys(self.genome_digests(genomes))
+
+    # ---- storage (uint16 pack / unpack) ------------------------------------
+    def pack_genomes(self, genomes: np.ndarray) -> np.ndarray:
+        """Validated genome matrix -> compact ``uint16`` form.
+
+        Every gene is a small factor level or mode index (all < 2**16 by
+        construction), so the packed matrix is a lossless 4x-smaller
+        serialization — archives, golden files, and npz checkpoints store
+        this form.  Round-trips bit-identically through
+        :meth:`unpack_genomes` (property-tested).
+        """
+        g = self.validate(genomes, raise_on_invalid=True)
+        return g.astype(np.uint16)
+
+    def unpack_genomes(self, packed: np.ndarray) -> np.ndarray:
+        """Inverse of :meth:`pack_genomes`; validates on the way out so a
+        corrupted archive fails loudly instead of decoding garbage."""
+        g = np.asarray(packed, dtype=np.uint16).astype(np.int64)
+        return self.validate(g, raise_on_invalid=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoExploreManySpace(CoExploreSpace):
+    """Joint design space for W workloads sharing one accelerator.
+
+    The QUIDAM co-exploration setting: one hardware config serves every
+    workload, but each workload gets its own per-layer execution-precision
+    assignment.  The genome stays a single flat uint row —
+
+    * ``genome[:N_HW_GENES]`` — the shared hardware half (unchanged);
+    * ``genome[N_HW_GENES:]`` — the W workloads' ragged per-layer mode
+      segments packed back to back, workload ``w`` occupying columns
+      ``[N_HW_GENES + offset_w, N_HW_GENES + offset_w + layer_counts[w])``.
+
+    Because mode validity depends only on the shared hardware (never on
+    which workload a layer belongs to), every inherited operator —
+    sampling, mutation, crossover, repair, validation, digests —
+    works on the packed layout unchanged; :meth:`split_assign` recovers
+    the per-workload ``(N, L_w)`` matrices that
+    :func:`repro.core.dse_batch.sweep_mixed_many` consumes.
+    """
+
+    layer_counts: tuple[int, ...] = ()
+    workload_names: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        counts = tuple(int(c) for c in self.layer_counts)
+        if not counts or any(c < 1 for c in counts):
+            raise ValueError(
+                f"layer_counts must be a non-empty tuple of positive "
+                f"ints, got {self.layer_counts!r}")
+        object.__setattr__(self, "layer_counts", counts)
+        if self.n_layers != sum(counts):
+            raise ValueError(
+                f"n_layers={self.n_layers} != sum(layer_counts)="
+                f"{sum(counts)}")
+        if self.workload_names and len(self.workload_names) != len(counts):
+            raise ValueError(
+                f"{len(self.workload_names)} workload names for "
+                f"{len(counts)} layer-count segments")
+        super().__post_init__()
+
+    @property
+    def n_workloads(self) -> int:
+        return len(self.layer_counts)
+
+    @property
+    def segment_bounds(self) -> tuple[tuple[int, int], ...]:
+        """``(start, end)`` column bounds of each workload's mode segment
+        within the ``(N, sum L_w)`` assignment matrix."""
+        bounds = []
+        start = 0
+        for c in self.layer_counts:
+            bounds.append((start, start + c))
+            start += c
+        return tuple(bounds)
+
+    def split_assign(self, assign: np.ndarray) -> list[np.ndarray]:
+        """Split the packed ``(N, sum L_w)`` assignment into per-workload
+        ``(N, L_w)`` views (no copy)."""
+        a = np.asarray(assign)
+        if a.ndim != 2 or a.shape[1] != self.n_layers:
+            raise ValueError(
+                f"assignment shape {a.shape} != (N, {self.n_layers})")
+        return [a[:, s:e] for s, e in self.segment_bounds]
+
+    def _digest_salt(self) -> tuple[int, ...]:
+        # fold every segment boundary in: (3, 5) and (5, 3) share a total
+        # layer count but are different spaces
+        return (self.n_layers, self.n_workloads, *self.layer_counts)
 
 
 def space_for_workload(workload, **overrides) -> CoExploreSpace:
@@ -268,3 +365,17 @@ def space_for_workload(workload, **overrides) -> CoExploreSpace:
     wl = get_workload(workload) if isinstance(workload, str) else workload
     assert isinstance(wl, Workload)
     return CoExploreSpace(n_layers=len(wl.layers), **overrides)
+
+
+def space_for_workloads(workloads, **overrides) -> CoExploreManySpace:
+    """A :class:`CoExploreManySpace` sized to a workload suite (names may
+    be strings from :data:`repro.core.workloads.WORKLOADS`)."""
+    from repro.core.workloads import Workload, get_workload
+    wls = [get_workload(w) if isinstance(w, str) else w for w in workloads]
+    if not wls:
+        raise ValueError("space_for_workloads needs at least one workload")
+    assert all(isinstance(w, Workload) for w in wls)
+    counts = tuple(len(w.layers) for w in wls)
+    return CoExploreManySpace(n_layers=sum(counts), layer_counts=counts,
+                              workload_names=tuple(w.name for w in wls),
+                              **overrides)

@@ -1,5 +1,8 @@
 import os
 
+import numpy as np
+import pytest
+
 # Tests run on the single real CPU device; the 512-device XLA flag is set
 # ONLY inside launch/dryrun.py (see system design).  Guard against leakage.
 assert "xla_force_host_platform_device_count" not in \
@@ -7,3 +10,76 @@ assert "xla_force_host_platform_device_count" not in \
     "dry-run XLA_FLAGS must not leak into the test environment"
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend differential harness (ISSUE 4 satellite)
+#
+# The sweep/explore stack's contract is layered: the batched *numpy* path
+# is bit-exact against the scalar reference, and the *jax* path agrees
+# with numpy to 1e-6 relative.  `cross_backend_check` packages that
+# three-way comparison so every kernel entry point (sweep_mixed,
+# sweep_mixed_many, sweep_chunked, ...) asserts the same contract through
+# one fixture instead of hand-rolled copies.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def jax_usable() -> bool:
+    from repro.core.dse_batch import resolve_backend
+    try:
+        resolve_backend("jax")
+        return True
+    except RuntimeError:
+        return False
+
+
+@pytest.fixture
+def cross_backend_check(jax_usable):
+    """Run one batch through scalar / numpy / jax and assert the parity
+    contract.
+
+    Usage::
+
+        out = cross_backend_check(
+            run=lambda backend: <dict of column -> array>,
+            scalar=<dict of column -> array from the scalar reference>,
+            bit_keys=(...),     # scalar vs numpy: np.array_equal
+            ratio_keys=(...),   # numpy vs jax: |b/a - 1| < rtol
+        )
+
+    ``run`` is called with ``backend="numpy"`` and (when jax is usable)
+    ``backend="jax"``.  ``scalar`` / ``bit_keys`` may be omitted for
+    paths with no scalar reference.  Returns the numpy outputs so callers
+    can make extra assertions.  If jax is unusable the jax leg is skipped
+    (CI always runs it).
+    """
+    def check(run, scalar=None, bit_keys=(), ratio_keys=None,
+              rtol=1e-6):
+        out_np = run("numpy")
+        if scalar is not None:
+            for k in bit_keys:
+                a = np.asarray(scalar[k])
+                b = np.asarray(out_np[k])
+                assert a.shape == b.shape, \
+                    f"scalar vs numpy shape mismatch for {k!r}"
+                assert np.array_equal(a, b), \
+                    f"scalar vs numpy not bit-identical for {k!r}"
+        if jax_usable:
+            out_j = run("jax")
+            for k in (bit_keys if ratio_keys is None else ratio_keys):
+                a = np.asarray(out_np[k], dtype=np.float64)
+                b = np.asarray(out_j[k], dtype=np.float64)
+                assert a.shape == b.shape, \
+                    f"numpy vs jax shape mismatch for {k!r}"
+                # where both backends agree on exactly 0, parity holds;
+                # |b/denom - 1| would spuriously report 1.0 there
+                both_zero = (a == 0) & (b == 0)
+                denom = np.where(a == 0, 1.0, a)
+                rel = (np.max(np.where(both_zero, 0.0,
+                                       np.abs(b / denom - 1.0)))
+                       if a.size else 0.0)
+                assert rel < rtol, \
+                    f"numpy vs jax relative error {rel:.3g} >= {rtol} " \
+                    f"for {k!r}"
+        return out_np
+    return check

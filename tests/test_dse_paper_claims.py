@@ -11,7 +11,7 @@ orderings/Pareto statements hold exactly.
 import numpy as np
 import pytest
 
-from repro.core.dse import DSEResult, explore, pareto_front
+from repro.core.dse import DSEResult, explore, explore_many, pareto_front
 from repro.core.pe import PEType
 
 PAPER = {
@@ -63,6 +63,56 @@ def test_normalization_anchor(results):
         norm = res.normalized()
         int16 = [p for p in norm if p["pe_type"] == "int16"]
         assert abs(max(p["norm_perf_per_area"] for p in int16) - 1.0) < 1e-9
+
+
+def test_lightpe_advantage_holds_under_worst_case_across_workloads():
+    """ISSUE 4 satellite: the paper's up-to-4.9x LightPE-1 perf/area
+    advantage over INT16 is not an artifact of per-model cherry-picking —
+    it survives the *worst-case-across-workloads* objective (each config
+    scored by its weakest workload), the aggregation `coexplore_many`
+    optimizes."""
+    results = explore_many(("vgg16", "resnet34", "resnet50"))
+    per_wl = np.array([[p.perf_per_area for p in res.points]
+                       for res in results.values()])
+    worst = per_wl.min(axis=0)
+    types = [p.config.pe_type for p in next(iter(results.values())).points]
+    best = {t: max(worst[i] for i, ty in enumerate(types) if ty is t)
+            for t in PEType}
+    r1 = best[PEType.LIGHTPE1] / best[PEType.INT16]
+    r2 = best[PEType.LIGHTPE2] / best[PEType.INT16]
+    assert 3.5 < r1 < 4.9 * 1.25, r1            # "up to 4.9x" holds
+    assert 3.0 < r2 < 4.2 * 1.25, r2
+    assert best[PEType.INT16] > best[PEType.FP32]
+
+
+def test_coexplore_many_reproduces_golden_front():
+    """A fixed-seed multi-workload co-exploration run reproduces the
+    checked-in golden Pareto front bit-for-bit (numpy backend): genomes
+    identical after the uint16 pack round-trip, objectives to 1e-9."""
+    import json
+    import pathlib
+
+    from repro.core.dse import coexplore_many
+
+    golden = json.loads(
+        (pathlib.Path(__file__).parent / "golden_coexplore_many.json")
+        .read_text())
+    res = coexplore_many(golden["workloads"], preset=golden["preset"],
+                         budget=golden["budget"], seed=golden["seed"],
+                         backend="numpy", pop_size=golden["pop_size"])
+    assert list(res.objectives) == golden["objectives"]
+    want_g = res.space.unpack_genomes(
+        np.array(golden["front_genomes_u16"], dtype=np.uint16))
+    assert np.array_equal(res.genomes, want_g)
+    want_F = np.array(golden["front_objectives"], dtype=np.float64)
+    np.testing.assert_allclose(res.front_objectives, want_F, rtol=1e-9)
+    # the golden front respects the paper's dominance claim on its own
+    # terms: under the 3-objective set FP32 may survive by winning the
+    # accuracy axis, but the best *worst-case perf/area* point is
+    # lightweight-PE hardware
+    pts = res.front_points()
+    best = min(pts, key=lambda p: p["neg_worst_perf_per_area"])
+    assert best["config"].pe_type in (PEType.LIGHTPE1, PEType.LIGHTPE2)
 
 
 def test_fp32_highest_power_and_area_per_pe():

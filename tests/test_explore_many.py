@@ -1,0 +1,354 @@
+"""Multi-workload co-exploration (ISSUE 4 tentpole): shared hardware +
+per-workload precision genomes, the fused W-workload kernel, suite
+objectives with accuracy floors, the search engines in multi mode, the
+NSGA-II external archive, and the coexplore_many() wiring."""
+
+import numpy as np
+import pytest
+
+from repro.core.dse import coexplore_many
+from repro.core.dse_batch import sweep_mixed, sweep_mixed_many
+from repro.core.pe import PEType
+from repro.core.workloads import ConvLayer, Workload
+from repro.explore import (CoExploreManySpace, Evaluator,
+                           multi_objective_matrix, nsga2, pareto_mask_k,
+                           quant_noise, random_search, space_for_workloads,
+                           sqnr_floor_violation, successive_halving)
+from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
+                                      MULTI_OBJECTIVES)
+from repro.explore.space import N_HW_GENES
+
+TYPES = tuple(PEType)
+
+WL_A = Workload("wlA", (
+    ConvLayer("c1", 58, 58, 64, 64),
+    ConvLayer("c2", 30, 30, 64, 128, 3, 3, 2),
+    ConvLayer("fc", 1, 1, 512, 1000, 1, 1),
+))
+WL_B = Workload("wlB", (
+    ConvLayer("c1", 114, 114, 32, 64),
+    ConvLayer("fc", 1, 1, 256, 100, 1, 1),
+))
+WL_C = Workload("wlC", (
+    ConvLayer("c1", 226, 226, 3, 64),
+    ConvLayer("c2", 56, 56, 64, 64),
+    ConvLayer("c3", 28, 28, 64, 128),
+    ConvLayer("fc", 1, 1, 128, 10, 1, 1),
+))
+SUITE = (WL_A, WL_B, WL_C)
+SPACE = space_for_workloads(SUITE)
+
+
+# ---------------------------------------------------------------------------
+# many-space layout
+# ---------------------------------------------------------------------------
+
+def test_space_for_workloads_layout():
+    assert SPACE.layer_counts == (3, 2, 4)
+    assert SPACE.n_layers == 9
+    assert SPACE.genome_width == N_HW_GENES + 9
+    assert SPACE.segment_bounds == ((0, 3), (3, 5), (5, 9))
+    assert SPACE.workload_names == ("wlA", "wlB", "wlC")
+    assert SPACE.n_workloads == 3
+
+
+def test_many_space_validation():
+    with pytest.raises(ValueError, match="layer_counts"):
+        CoExploreManySpace(n_layers=0, layer_counts=())
+    with pytest.raises(ValueError, match="sum"):
+        CoExploreManySpace(n_layers=4, layer_counts=(2, 3))
+    with pytest.raises(ValueError, match="workload names"):
+        CoExploreManySpace(n_layers=5, layer_counts=(2, 3),
+                           workload_names=("only-one",))
+    with pytest.raises(ValueError):
+        space_for_workloads([])
+
+
+def test_split_assign_views():
+    g = SPACE.random_population(10, np.random.default_rng(0))
+    _, assign = SPACE.decode(g)
+    parts = SPACE.split_assign(assign)
+    assert [p.shape for p in parts] == [(10, 3), (10, 2), (10, 4)]
+    assert np.array_equal(np.concatenate(parts, axis=1), assign)
+    with pytest.raises(ValueError, match="assignment shape"):
+        SPACE.split_assign(assign[:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# fused multi-workload kernel
+# ---------------------------------------------------------------------------
+
+def test_sweep_mixed_many_matches_per_workload_sweeps():
+    g = SPACE.random_population(32, np.random.default_rng(7))
+    soa, assign = SPACE.decode(g)
+    assigns = SPACE.split_assign(assign)
+    many = sweep_mixed_many(SUITE, soa, assigns, backend="numpy",
+                            use_cache=False)
+    for w, (wl, a) in enumerate(zip(SUITE, assigns)):
+        one = sweep_mixed(wl, soa, a, backend="numpy", use_cache=False)
+        for k in ("total_cycles_sum", "energy_pj_sum", "latency_s",
+                  "energy_j", "throughput_gmacs", "perf_per_area"):
+            assert np.array_equal(many[k][w], one[k]), (wl.name, k)
+    # hardware columns are per-config, shared across workloads
+    assert many["clock_ghz"].shape == (32,)
+    assert many["area_mm2"].shape == (32,)
+
+
+def test_sweep_mixed_many_validates_inputs():
+    g = SPACE.random_population(4, np.random.default_rng(1))
+    soa, assign = SPACE.decode(g)
+    assigns = SPACE.split_assign(assign)
+    with pytest.raises(ValueError, match="at least one workload"):
+        sweep_mixed_many((), soa, [])
+    with pytest.raises(ValueError, match="assignment matrices"):
+        sweep_mixed_many(SUITE, soa, assigns[:2])
+    with pytest.raises(ValueError, match="assignment shape"):
+        sweep_mixed_many(SUITE, soa, [assigns[0], assigns[0], assigns[2]])
+
+
+def test_sweep_mixed_many_shares_synthesis_across_workloads():
+    from repro.core.synthesis import (clear_synthesis_cache,
+                                      synthesis_cache_stats)
+    clear_synthesis_cache()
+    g = SPACE.random_population(24, np.random.default_rng(3))
+    soa, assign = SPACE.decode(g)
+    assigns = SPACE.split_assign(assign)
+    sweep_mixed_many(SUITE, soa, assigns, backend="numpy")
+    stats = synthesis_cache_stats()
+    # one synthesis pass for 3 workloads: misses == unique hardware rows,
+    # and nothing was synthesized per-workload
+    assert stats["array_misses"] <= 24
+    sweep_mixed_many(SUITE, soa, assigns, backend="numpy")
+    stats2 = synthesis_cache_stats()
+    assert stats2["array_hits"] >= 24           # full reuse on re-sweep
+    clear_synthesis_cache()
+
+
+# ---------------------------------------------------------------------------
+# suite objectives
+# ---------------------------------------------------------------------------
+
+def _agg_for(g):
+    soa, assign = SPACE.decode(g)
+    assigns = SPACE.split_assign(assign)
+    agg = sweep_mixed_many(SUITE, soa, assigns, backend="numpy")
+    agg = {k: v for k, v in agg.items() if np.ndim(v) == 2}
+    macs = [np.array([l.macs for l in w.layers], dtype=np.float64)
+            for w in SUITE]
+    return agg, assigns, macs
+
+
+def test_multi_objective_semantics():
+    g = SPACE.random_population(40, np.random.default_rng(5))
+    agg, assigns, macs = _agg_for(g)
+    F = multi_objective_matrix(agg, assigns, macs, MULTI_OBJECTIVES)
+    cols = {n: F[:, i] for i, n in enumerate(MULTI_OBJECTIVES)}
+    lat = agg["latency_s"]
+    # worst-case == max over the suite; the energy-weighted mean lies
+    # inside the per-workload envelope
+    assert np.array_equal(cols["worst_latency_s"], lat.max(axis=0))
+    assert (cols["mean_latency_s"] <= lat.max(axis=0) + 1e-300).all()
+    assert (cols["mean_latency_s"] >= lat.min(axis=0) - 1e-300).all()
+    assert np.array_equal(cols["total_energy_j"],
+                          agg["energy_j"].sum(axis=0))
+    assert np.array_equal(cols["neg_worst_perf_per_area"],
+                          -agg["perf_per_area"].min(axis=0))
+    noise = np.stack([quant_noise(a, m) for a, m in zip(assigns, macs)])
+    assert np.array_equal(cols["worst_quant_noise"], noise.max(axis=0))
+    edp = agg["energy_j"] * lat
+    assert np.array_equal(cols["worst_edp"], edp.max(axis=0))
+
+    # fixed importance weights replace the energy weighting
+    Fw = multi_objective_matrix(agg, assigns, macs, ("mean_latency_s",),
+                                weights=(1.0, 0.0, 0.0))
+    assert np.array_equal(Fw[:, 0], lat[0])
+
+    with pytest.raises(ValueError, match="unknown multi-workload"):
+        multi_objective_matrix(agg, assigns, macs, ("speed",))
+    with pytest.raises(ValueError, match="weights"):
+        multi_objective_matrix(agg, assigns, macs, ("mean_latency_s",),
+                               weights=(1.0,))
+
+
+def test_sqnr_floor_constraints_penalize_noisy_genomes():
+    g = SPACE.random_population(64, np.random.default_rng(9))
+    # an fp32-capable all-fp32 genome is feasible under any floor
+    g[0, 0] = SPACE.pe_types.index(PEType.FP32)
+    g[0, N_HW_GENES:] = TYPES.index(PEType.FP32)
+    agg, assigns, macs = _agg_for(g)
+    v = sqnr_floor_violation(assigns, macs, 20.0)
+    assert v.shape == (64,)
+    assert v[0] == 0.0
+    assert (v >= 0).all()
+
+    F_free = multi_objective_matrix(agg, assigns, macs,
+                                    DEFAULT_MULTI_OBJECTIVES)
+    F_floor = multi_objective_matrix(agg, assigns, macs,
+                                     DEFAULT_MULTI_OBJECTIVES,
+                                     sqnr_floor_db=20.0)
+    feasible = v == 0
+    assert np.array_equal(F_free[feasible], F_floor[feasible])
+    assert (F_floor[~feasible] > F_free[~feasible]).all()
+    # per-workload floors broadcast
+    v3 = sqnr_floor_violation(assigns, macs, (20.0, 25.0, 30.0))
+    assert (v3 >= v).all()
+
+
+# ---------------------------------------------------------------------------
+# evaluator in multi mode
+# ---------------------------------------------------------------------------
+
+def test_evaluator_multi_requires_many_space_and_matching_counts():
+    from repro.explore.space import CoExploreSpace
+    with pytest.raises(ValueError, match="CoExploreManySpace"):
+        Evaluator(CoExploreSpace(n_layers=9), SUITE)
+    bad = space_for_workloads([WL_A, WL_B])
+    with pytest.raises(ValueError, match="layer_counts"):
+        Evaluator(bad, SUITE)
+
+
+def test_evaluator_multi_memoizes_and_matches_manual():
+    ev = Evaluator(SPACE, SUITE, backend="numpy")
+    assert ev.objectives == DEFAULT_MULTI_OBJECTIVES
+    assert ev.name == "wlA+wlB+wlC"
+    g = SPACE.random_population(32, np.random.default_rng(2))
+    F1 = ev.evaluate(g)
+    assert F1.shape == (32, len(DEFAULT_MULTI_OBJECTIVES))
+    agg, assigns, macs = _agg_for(g)
+    F_manual = multi_objective_matrix(agg, assigns, macs,
+                                      DEFAULT_MULTI_OBJECTIVES)
+    assert np.array_equal(F1, F_manual)
+    F2 = ev.evaluate(g)
+    assert np.array_equal(F1, F2)
+    assert ev.n_memo_hits >= 32
+    assert ev.stats()["n_workloads"] == 3
+
+
+def test_evaluator_multi_subset_prefixes_every_workload():
+    ev = Evaluator(SPACE, SUITE, backend="numpy")
+    g = SPACE.random_population(8, np.random.default_rng(4))
+    F_sub = ev.evaluate(g, subset=2)
+    # manual: first min(2, L_w) layers of each workload
+    wls, macs = ev._subset(2)
+    assert [len(w.layers) for w in wls] == [2, 2, 2]
+    soa, assign = SPACE.decode(g)
+    assigns = [a[:, :2] for a in SPACE.split_assign(assign)]
+    agg = sweep_mixed_many(wls, soa, assigns, backend="numpy")
+    agg = {k: v for k, v in agg.items() if np.ndim(v) == 2}
+    F_manual = multi_objective_matrix(agg, assigns, list(macs),
+                                      ev.objectives)
+    assert np.array_equal(F_sub, F_manual)
+
+
+# ---------------------------------------------------------------------------
+# engines in multi mode + the external archive
+# ---------------------------------------------------------------------------
+
+def test_random_search_multi_deterministic():
+    a = random_search(SPACE, SUITE, 96, seed=3, backend="numpy")
+    b = random_search(SPACE, SUITE, 96, seed=3, backend="numpy")
+    assert a.workload == "wlA+wlB+wlC"
+    assert np.array_equal(a.genomes, b.genomes)
+    assert pareto_mask_k(a.front_objectives).all()
+
+
+def test_successive_halving_multi_runs():
+    res = successive_halving(SPACE, SUITE, 150, seed=1, backend="numpy")
+    assert res.front_size >= 1
+    ev = Evaluator(SPACE, SUITE, backend="numpy")
+    assert np.array_equal(ev.evaluate(res.genomes), res.front_objectives)
+
+
+def test_nsga2_external_archive_supersets_population_front():
+    res = nsga2(SPACE, SUITE, 192, pop_size=16, seed=6, backend="numpy")
+    assert res.population is not None and len(res.population) == 16
+    # acceptance: the archive (returned front) is a superset of the final
+    # population's non-dominated set — dominance judged over archive ∪
+    # population, so a pop member beaten by an earlier-generation archive
+    # genome counts as dominated
+    comb_g = np.concatenate([res.genomes, res.population])
+    comb_F = np.concatenate([res.front_objectives,
+                             res.population_objectives])
+    for row in comb_g[pareto_mask_k(comb_F)]:
+        assert (res.genomes == row).all(axis=1).any()
+    # equivalently: every within-population front member is either in the
+    # archive or strictly dominated by an archive genome
+    keep = pareto_mask_k(res.population_objectives)
+    for g_row, f_row in zip(res.population[keep],
+                            res.population_objectives[keep]):
+        in_arch = (res.genomes == g_row).all(axis=1).any()
+        dominated = ((res.front_objectives <= f_row).all(axis=1)
+                     & (res.front_objectives < f_row).any(axis=1)).any()
+        assert in_arch or dominated
+    # archive is itself mutually non-dominated, duplicate-free, and its
+    # hypervolume history is monotone
+    assert pareto_mask_k(res.front_objectives).all()
+    assert len(np.unique(res.genomes, axis=0)) == res.front_size
+    hvs = [h for _, h in res.history]
+    assert all(b >= a - 1e-12 for a, b in zip(hvs, hvs[1:]))
+
+
+def test_nsga2_archive_absorbs_all_evaluations():
+    """The archive equals the non-dominated set of every objective row
+    the search ever produced — nothing non-dominated is dropped."""
+    res = nsga2(SPACE, SUITE, 128, pop_size=16, seed=8, backend="numpy")
+    allF = res.all_objectives
+    global_front = allF[pareto_mask_k(allF)]
+    # every global-front row appears in the archive objectives
+    arch = res.front_objectives
+    for row in np.unique(global_front, axis=0):
+        assert (arch == row).all(axis=1).any()
+
+
+# ---------------------------------------------------------------------------
+# coexplore_many wiring
+# ---------------------------------------------------------------------------
+
+def test_coexplore_many_runs_and_decodes_front():
+    res = coexplore_many(SUITE, preset="many-quick", budget=96, seed=3,
+                         backend="numpy", pop_size=12)
+    assert res.method == "nsga2"
+    assert res.workload == "wlA+wlB+wlC"
+    assert res.n_evals == 96
+    pts = res.front_points()
+    assert len(pts) == res.front_size
+    from repro.core.pe import mode_compat_matrix
+    compat = mode_compat_matrix()
+    for pt in pts:
+        modes = pt["modes"]
+        assert set(modes) == {"wlA", "wlB", "wlC"}
+        assert [len(m) for m in modes.values()] == [3, 2, 4]
+        hw = TYPES.index(pt["config"].pe_type)
+        for ms in modes.values():
+            for m in ms:
+                assert compat[hw, TYPES.index(PEType(m))]
+
+
+def test_coexplore_many_backends_bit_identical_fronts(jax_usable):
+    """Acceptance: >= 3 QAPPA workloads, numpy and jax produce the same
+    Pareto-front genomes."""
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    wls = ("vgg16", "resnet34", "resnet50")
+    n = coexplore_many(wls, preset="many-quick", budget=128, seed=0,
+                       backend="numpy", pop_size=16)
+    j = coexplore_many(wls, preset="many-quick", budget=128, seed=0,
+                       backend="jax", pop_size=16)
+    assert n.space.n_workloads == 3
+    assert np.array_equal(n.genomes, j.genomes)
+    assert np.array_equal(n.population, j.population)
+
+
+def test_coexplore_many_rejects_unknowns():
+    with pytest.raises(ValueError, match="unknown co-exploration method"):
+        coexplore_many(SUITE, preset="many-quick", method="hill-climb")
+    with pytest.raises(ValueError, match="at least one workload"):
+        coexplore_many([])
+
+
+def test_many_presets_registered():
+    from repro.configs.coexplore_presets import PRESETS, get_preset
+    assert {"many-quick", "many-default", "many-thorough"} <= set(PRESETS)
+    assert set(get_preset("many-default").objectives) <= \
+        set(MULTI_OBJECTIVES)
+    assert get_preset("many-thorough").sqnr_floor_db == 20.0

@@ -1,0 +1,128 @@
+"""Property-based closure tests for the co-exploration genome spaces
+(ISSUE 4 satellite).
+
+Any sequence of sample / mutate / crossover / repair operations must stay
+inside the space: every produced genome decodes to compatible (hardware,
+mode) pairs, and every genome round-trips through pack/unpack
+bit-identically — for single-workload `CoExploreSpace` and the ragged
+multi-workload `CoExploreManySpace` alike.  Requires `hypothesis`
+(skipped when absent; CI installs it).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.pe import mode_compat_matrix  # noqa: E402
+from repro.explore.space import (CoExploreManySpace,  # noqa: E402
+                                 CoExploreSpace, N_HW_GENES)
+
+MAX_EXAMPLES = 60
+
+
+def _space(layer_counts):
+    if len(layer_counts) == 1:
+        return CoExploreSpace(n_layers=layer_counts[0])
+    return CoExploreManySpace(n_layers=sum(layer_counts),
+                              layer_counts=tuple(layer_counts))
+
+
+spaces = st.lists(st.integers(min_value=1, max_value=9),
+                  min_size=1, max_size=4).map(_space)
+# an op sequence: (op, seed) pairs applied in order
+ops = st.lists(st.tuples(st.sampled_from(["mutate", "crossover",
+                                          "repair", "resample"]),
+                         st.integers(0, 2 ** 31 - 1)),
+               min_size=0, max_size=6)
+
+
+def _assert_closed(space, g):
+    """The closure invariant: valid levels, executable modes, decode
+    consistency."""
+    assert space.valid_mask(g).all()
+    soa, assign = space.decode(g)
+    assert assign.shape == (len(g), space.n_layers)
+    compat = mode_compat_matrix()
+    hw = soa["pe_type_idx"]
+    assert compat[hw[:, None], assign].all()
+    if isinstance(space, CoExploreManySpace):
+        parts = space.split_assign(assign)
+        assert [p.shape[1] for p in parts] == list(space.layer_counts)
+        assert np.array_equal(np.concatenate(parts, axis=1), assign)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(space=spaces, seed=st.integers(0, 2 ** 31 - 1), ops=ops,
+       n=st.integers(2, 24), rate=st.floats(0.0, 1.0))
+def test_op_sequences_stay_closed(space, seed, ops, n, rate):
+    rng = np.random.default_rng(seed)
+    g = space.random_population(n, rng)
+    _assert_closed(space, g)
+    for op, op_seed in ops:
+        op_rng = np.random.default_rng(op_seed)
+        if op == "mutate":
+            g = space.mutate(g, op_rng, rate=rate)
+        elif op == "crossover":
+            other = space.random_population(len(g), op_rng)
+            g = space.crossover(g, other, op_rng)
+        elif op == "repair":
+            g = space.repair(g)
+        else:                                   # resample a fresh batch
+            g = space.random_population(len(g), op_rng)
+        _assert_closed(space, g)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(space=spaces, seed=st.integers(0, 2 ** 31 - 1),
+       n=st.integers(1, 32))
+def test_pack_unpack_round_trips_bit_identically(space, seed, n):
+    g = space.random_population(n, np.random.default_rng(seed))
+    packed = space.pack_genomes(g)
+    assert packed.dtype == np.uint16
+    assert packed.shape == g.shape
+    back = space.unpack_genomes(packed)
+    assert back.dtype == g.dtype == np.int64
+    assert np.array_equal(back, g)
+    # digests (the memo identity) survive the round trip too
+    assert space.genome_keys(back) == space.genome_keys(g)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(space=spaces, seed=st.integers(0, 2 ** 31 - 1),
+       rate=st.floats(0.0, 1.0))
+def test_repair_is_idempotent_and_preserves_valid_genomes(space, seed,
+                                                          rate):
+    rng = np.random.default_rng(seed)
+    g = space.random_population(8, rng)
+    assert np.array_equal(space.repair(g), g)   # valid input untouched
+    mut = space.mutate(g, rng, rate=rate)
+    assert np.array_equal(space.repair(mut), mut)  # mutate ends repaired
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       counts=st.lists(st.integers(1, 6), min_size=2, max_size=4))
+def test_many_space_digests_fold_segment_boundaries(seed, counts):
+    """Same flat genome, different workload boundaries => different
+    digests (the memo must never alias two packings)."""
+    hypothesis.assume(tuple(counts) != tuple(reversed(counts)))
+    a = CoExploreManySpace(n_layers=sum(counts),
+                           layer_counts=tuple(counts))
+    b = CoExploreManySpace(n_layers=sum(counts),
+                           layer_counts=tuple(reversed(counts)))
+    g = a.random_population(4, np.random.default_rng(seed))
+    assert a.genome_keys(g) != b.genome_keys(g)
+
+
+def test_unpack_rejects_corrupted_archives():
+    space = CoExploreManySpace(n_layers=5, layer_counts=(2, 3))
+    g = space.random_population(4, np.random.default_rng(0))
+    packed = space.pack_genomes(g)
+    bad = packed.copy()
+    bad[0, 0] = 2 ** 15                         # absurd factor level
+    with pytest.raises(ValueError, match="invalid genome"):
+        space.unpack_genomes(bad)
+    with pytest.raises(ValueError, match="genome matrix shape"):
+        space.unpack_genomes(packed[:, :-1])
