@@ -140,6 +140,23 @@ def bench(workloads=("vgg16", "resnet34", "resnet50"), quick: bool = False,
                                               _row_sorted(res_n.genomes))))
         out["nsga2_jax_front_matches_numpy"] = same_front
 
+        # sharded evaluation: the same search with every population chunk
+        # spread across all devices via shard_map (1 device degenerates to
+        # the plain jit path — the multi-device-smoke CI job runs this
+        # with 4 forced host devices)
+        import jax
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh()
+        rows_s, res_s = bench_method("nsga2", workloads, budget, seed,
+                                     "jax", pop_size=pop, mesh=mesh)
+        out["n_devices"] = jax.device_count()
+        out["nsga2_jax_sharded_evals_per_s"] = rows_s["nsga2_evals_per_s"]
+        out["nsga2_jax_sharded_s"] = rows_s["nsga2_s"]
+        out["nsga2_jax_sharded_front_matches_numpy"] = (
+            res_s.genomes.shape == res_n.genomes.shape
+            and bool(np.array_equal(_row_sorted(res_s.genomes),
+                                    _row_sorted(res_n.genomes))))
+
     if not quick:
         # quick-mode numbers recorded by full runs keep the CI regression
         # gate like-for-like (see check_against)
@@ -212,6 +229,12 @@ def main() -> None:
               f"{r['nsga2_jax_evals_per_s']:9.0f} evals/s  "
               f"front matches numpy: "
               f"{r['nsga2_jax_front_matches_numpy']}")
+    if "nsga2_jax_sharded_evals_per_s" in r:
+        print(f"nsga2 (jax, {r['n_devices']}-device mesh) "
+              f"{r['nsga2_jax_sharded_s'] * 1e3:6.1f} ms  "
+              f"{r['nsga2_jax_sharded_evals_per_s']:9.0f} evals/s  "
+              f"front matches numpy: "
+              f"{r['nsga2_jax_sharded_front_matches_numpy']}")
     print(f"hypervolume (shared ref): nsga2 {r['nsga2_hypervolume']:.5g} "
           f"vs random {r['random_hypervolume']:.5g}  "
           f"({r['nsga2_vs_random_hypervolume']:.3f}x)")
@@ -229,6 +252,10 @@ def main() -> None:
         raise SystemExit(
             "NSGA-II external archive dropped a non-dominated genome from "
             "the final population")
+    if not r.get("nsga2_jax_sharded_front_matches_numpy", True):
+        raise SystemExit(
+            f"mesh-sharded nsga2 front diverged from the numpy front "
+            f"({r.get('n_devices')} device(s))")
     if not r["quick"] and r["nsga2_synth_cache_hit_rate"] < MIN_HIT_RATE:
         raise SystemExit(
             f"synthesis-cache hit rate "

@@ -236,6 +236,7 @@ def coexplore(workload: Workload | str,
               backend: str = "auto",
               objectives=None,
               ref_point=None,
+              mesh=None,
               space_overrides: dict | None = None,
               **method_kwargs):
     """Guided co-exploration of the joint (config x per-layer precision)
@@ -267,7 +268,8 @@ def coexplore(workload: Workload | str,
     kwargs = dict(
         objectives=p.objectives if objectives is None else tuple(objectives),
         seed=p.seed if seed is None else seed,
-        backend=backend, chunk_size=p.chunk_size, ref_point=ref_point)
+        backend=backend, chunk_size=p.chunk_size, ref_point=ref_point,
+        mesh=mesh)
     if method == "nsga2":
         kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
     elif method == "successive_halving":
@@ -287,6 +289,7 @@ def coexplore_many(workloads: Sequence[Workload | str],
                    ref_point=None,
                    weights=None,
                    sqnr_floor_db=None,
+                   mesh=None,
                    space_overrides: dict | None = None,
                    **method_kwargs):
     """Multi-workload co-exploration: one shared hardware config, one
@@ -306,6 +309,10 @@ def coexplore_many(workloads: Sequence[Workload | str],
     and ``sqnr_floor_db`` turns per-workload accuracy floors into
     constraints (see
     :func:`repro.explore.objectives.multi_objective_matrix`).
+    ``mesh`` (e.g. :func:`repro.launch.mesh.make_sweep_mesh`) shards
+    every evaluation chunk's genome axis across devices via
+    ``shard_map``; under the numpy backend an int simulates that many
+    shards bit-identically.
 
     Returns a :class:`repro.explore.search.SearchResult` whose
     ``front_points()`` decode to (config, ``{workload: modes}``) pairs.
@@ -332,6 +339,7 @@ def coexplore_many(workloads: Sequence[Workload | str],
         objectives=p.objectives if objectives is None else tuple(objectives),
         seed=p.seed if seed is None else seed,
         backend=backend, chunk_size=p.chunk_size, ref_point=ref_point,
+        mesh=mesh,
         weights=p.weights if weights is None else weights,
         sqnr_floor_db=(p.sqnr_floor_db if sqnr_floor_db is None
                        else sqnr_floor_db))

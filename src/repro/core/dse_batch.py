@@ -435,13 +435,7 @@ def get_jax_kernel(mesh=None, outputs: str = "full"):
     import jax.numpy as jnp
 
     exact = bool(jax.config.read("jax_enable_x64"))
-    # key meshes by value (axes + device ids), not identity: fresh but
-    # equivalent meshes reuse one compiled kernel instead of growing the
-    # cache (and pinning executables) without bound
-    mesh_key = None if mesh is None else (
-        tuple(mesh.axis_names), mesh.devices.shape,
-        tuple(d.id for d in mesh.devices.flat))
-    key = (exact, mesh_key, outputs)
+    key = (exact, _mesh_cache_key(mesh), outputs)
     fn = _JAX_KERNELS.get(key)
     if fn is not None:
         return fn, exact
@@ -483,16 +477,14 @@ def _run_kernel(cfg: dict, lay: dict, backend: str,
             f"unknown sweep outputs: {outputs!r} (choose from "
             f"{OUTPUT_MODES})")
     if backend == "jax":
+        _require_jax_mesh(mesh)
         fn, exact = get_jax_kernel(mesh, outputs)
         # under the x64-free policy "macs" lands in float32 via
         # _to_jax_inputs (it feeds only float math in the kernel)
         jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
         n = cfg["pe_rows"].shape[0]
         if mesh is not None:
-            pad = -n % mesh.devices.size
-            if pad:
-                jcfg = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
-                        for k, v in jcfg.items()}
+            jcfg = _pad_rows(jcfg, -n % _mesh_shards(mesh))
         out = {k: np.asarray(v)[:n] if np.ndim(v) else np.asarray(v)
                for k, v in fn(jcfg, jlay).items()}
         return out
@@ -827,16 +819,62 @@ def _segment_aggregates(xp, totals: dict, cfg: dict, lay: dict,
 _JAX_MANY_KERNELS: dict = {}
 
 
-def get_jax_many_kernel(bounds: tuple[tuple[int, int], ...]):
+def _mesh_shards(mesh) -> int:
+    """Config-axis shard count implied by a ``mesh=`` argument: ``None``
+    -> 1, an int -> itself (the numpy backend's simulated shard count),
+    a ``jax.sharding.Mesh`` -> its device count.  Pure attribute access —
+    never imports jax."""
+    if mesh is None:
+        return 1
+    if isinstance(mesh, int):
+        if mesh < 1:
+            raise ValueError(f"mesh shard count must be >= 1, got {mesh}")
+        return mesh
+    return int(mesh.devices.size)
+
+
+def _require_jax_mesh(mesh) -> None:
+    if isinstance(mesh, int):
+        raise ValueError(
+            "backend='jax' needs a jax.sharding.Mesh for mesh=, not "
+            "an int shard count (see repro.launch.mesh.make_sweep_mesh)")
+
+
+def _mesh_cache_key(mesh):
+    """Key a mesh by value (axes + device ids), not identity: fresh but
+    equivalent meshes reuse one compiled kernel instead of growing the
+    jit caches (and pinning executables) without bound."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), mesh.devices.shape,
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def _pad_rows(arrays: dict, pad: int) -> dict:
+    """Repeat each array's last row ``pad`` times (row-local kernels make
+    the padded rows valid throwaway work; callers slice them back off)."""
+    if pad <= 0:
+        return arrays
+    return {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
+            for k, v in arrays.items()}
+
+
+def get_jax_many_kernel(bounds: tuple[tuple[int, int], ...], mesh=None):
     """Jit-compiled multi-workload kernel, cached per (x64-mode, segment
-    bounds): the layer mapping runs once over the concatenated layer axis
-    and the per-workload reductions happen inside the same jit, so XLA
-    fuses everything into one dispatch and DCEs the (N, L) intermediates."""
+    bounds, mesh): the layer mapping runs once over the concatenated layer
+    axis and the per-workload reductions happen inside the same jit, so
+    XLA fuses everything into one dispatch and DCEs the (N, L)
+    intermediates.  With ``mesh`` the config axis is sharded across the
+    mesh's devices via ``shard_map`` — every (config, layer) expression
+    and the per-workload segment reductions are row-local, so each device
+    reduces its own config shard independently and the stacked ``(W, n)``
+    aggregate columns concatenate along the config axis with no
+    cross-device collectives at all."""
     import jax
     import jax.numpy as jnp
 
     exact = bool(jax.config.read("jax_enable_x64"))
-    key = (exact, bounds)
+    key = (exact, bounds, _mesh_cache_key(mesh))
     fn = _JAX_MANY_KERNELS.get(key)
     if fn is None:
         def kernel(cfg, lay):
@@ -845,7 +883,25 @@ def get_jax_many_kernel(bounds: tuple[tuple[int, int], ...]):
             return _segment_aggregates(jnp, totals, cfg, lay, bounds,
                                        exact=exact)
 
-        fn = jax.jit(kernel)
+        if mesh is None:
+            fn = jax.jit(kernel)
+        else:
+            from repro.launch.mesh import compat_shard_map
+            P = jax.sharding.PartitionSpec
+
+            def sharded(cfg, lay):
+                cfg_specs = {k: P("configs", None) for k in cfg}
+                lay_specs = {k: P(None, None) for k in lay}
+                # every output is a (W, n_local) stack of per-workload
+                # aggregates — config-major on axis 1
+                out_specs = {k: P(None, "configs")
+                             for k in AGGREGATE_OUTPUTS}
+                return compat_shard_map(
+                    kernel, mesh=mesh,
+                    in_specs=(cfg_specs, lay_specs),
+                    out_specs=out_specs)(cfg, lay)
+
+            fn = jax.jit(sharded)
         _JAX_MANY_KERNELS[key] = fn
     return fn, exact
 
@@ -856,7 +912,8 @@ def sweep_mixed_many(workloads: Sequence[Workload],
                      cols: dict[str, np.ndarray] | None = None,
                      *,
                      use_cache: bool = True,
-                     backend: str = "auto") -> dict[str, np.ndarray]:
+                     backend: str = "auto",
+                     mesh=None) -> dict[str, np.ndarray]:
     """Evaluate one genome batch against W workloads in one fused pass.
 
     ``soa`` is the shared hardware half (N configs); ``assigns`` holds one
@@ -875,6 +932,15 @@ def sweep_mixed_many(workloads: Sequence[Workload],
     ``clock_ghz`` / ``area_mm2`` as ``(N,)``.  Workload ``w``'s row is
     bit-identical (numpy) to :func:`sweep_mixed` on that workload alone;
     jax agrees to the usual ~1e-7 relative parity.
+
+    ``mesh`` shards the genome (config) axis: under jax a
+    ``jax.sharding.Mesh`` from :func:`repro.launch.mesh.make_sweep_mesh`
+    spreads the batch across devices via ``shard_map`` (the batch is
+    padded to a device-count multiple and sliced back); under numpy an
+    int (or a mesh, whose device count is taken) splits the batch into
+    that many contiguous shards evaluated independently — bit-identical
+    to the unsharded path, used to test shard-boundary semantics without
+    multiple devices.
     """
     backend = resolve_backend(backend)
     wls = tuple(workloads)
@@ -899,12 +965,35 @@ def sweep_mixed_many(workloads: Sequence[Workload],
     cfg, lay = _make_cfg_lay(soa, cols, combined)
     cfg = mixed_assign_cfg(cfg, assign_all)
     if backend == "jax":
-        fn, exact = get_jax_many_kernel(bounds)
+        _require_jax_mesh(mesh)
+        fn, exact = get_jax_many_kernel(bounds, mesh)
         jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
-        out = {k: np.asarray(v) for k, v in fn(jcfg, jlay).items()}
+        if mesh is not None:
+            jcfg = _pad_rows(jcfg, -n % _mesh_shards(mesh))
+        out = {k: np.asarray(v)[:, :n] for k, v in fn(jcfg, jlay).items()}
     else:
-        totals = _sweep_kernel(np, cfg, lay, outputs="layer_totals")
-        out = _segment_aggregates(np, totals, cfg, lay, bounds, exact=True)
+        shards = min(_mesh_shards(mesh), max(1, n))
+        if shards == 1:
+            totals = _sweep_kernel(np, cfg, lay, outputs="layer_totals")
+            out = _segment_aggregates(np, totals, cfg, lay, bounds,
+                                      exact=True)
+        else:
+            # simulated sharding: contiguous config-axis splits through
+            # the same kernel + segment reduction, concatenated back —
+            # every expression is row-local, so this is bit-identical to
+            # the single-shard path by construction
+            parts = []
+            splits = np.array_split(np.arange(n), shards)
+            for idx in splits:
+                if len(idx) == 0:
+                    continue
+                cfg_s = {k: v[idx] for k, v in cfg.items()}
+                totals = _sweep_kernel(np, cfg_s, lay,
+                                       outputs="layer_totals")
+                parts.append(_segment_aggregates(np, totals, cfg_s, lay,
+                                                 bounds, exact=True))
+            out = {k: np.concatenate([p[k] for p in parts], axis=1)
+                   for k in AGGREGATE_OUTPUTS}
     out["clock_ghz"] = cfg["clock_ghz"][:, 0]
     out["area_mm2"] = cfg["area_mm2"][:, 0]
     return out
@@ -934,6 +1023,12 @@ class ChunkedSweep:
     front_soa: dict[str, np.ndarray]      # identity fields of survivors
     front_metrics: dict[str, np.ndarray]  # _FRONT_METRICS columns
     synthesis_cache: PersistentSynthesisCache | None = None
+    # stage accounting from the streamed driver: wall_s (whole stream),
+    # synth_s (host synthesis + feed pull), kernel_wait_s (time blocked on
+    # kernel results — under the overlapped pipeline this shrinks toward
+    # zero as synthesis of chunk i+1 hides behind the kernel on chunk i),
+    # overlap (whether the two-stage pipeline was active)
+    timings: dict | None = None
 
     @property
     def front_size(self) -> int:
@@ -982,6 +1077,34 @@ def _as_soa_chunks(chunks, chunk_size: int) -> Iterator[dict]:
         yield configs_to_soa(tuple(pending))
 
 
+def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
+                    chunk_size: int, n: int, executor):
+    """Launch the aggregates kernel for one chunk without blocking.
+
+    Returns a zero-arg ``finalize()`` producing the host-side ``(n,)``
+    aggregate columns.  Under jax the jit call dispatches asynchronously
+    and ``finalize`` materializes the device buffers; under numpy with an
+    ``executor`` the kernel runs on a worker thread (numpy ufuncs release
+    the GIL) so the caller can synthesize the next chunk meanwhile.
+    """
+    if backend == "jax":
+        # pad the tail chunk to the steady-state shape: one jit trace
+        # serves the whole stream (padded rows are sliced off below)
+        cfg = _pad_rows(cfg, (chunk_size - n % chunk_size) % chunk_size)
+        fn, exact = get_jax_kernel(mesh, "aggregates")
+        jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
+        if mesh is not None:
+            jcfg = _pad_rows(jcfg,
+                             -len(jcfg["pe_rows"]) % _mesh_shards(mesh))
+        out = fn(jcfg, jlay)                       # async dispatch
+        return lambda: {k: np.asarray(v)[:n] for k, v in out.items()}
+    kernel = functools.partial(_sweep_kernel, np, cfg, lay,
+                               outputs="aggregates")
+    if executor is not None:
+        return executor.submit(kernel).result
+    return kernel
+
+
 def sweep_chunked(workload: Workload,
                   configs: Iterable,
                   *,
@@ -990,7 +1113,8 @@ def sweep_chunked(workload: Workload,
                   use_cache: bool = False,
                   cache: PersistentSynthesisCache | str | None = None,
                   save_cache: bool = True,
-                  mesh=None) -> ChunkedSweep:
+                  mesh=None,
+                  overlap: bool = True) -> ChunkedSweep:
     """Stream an arbitrary-size config feed through the sweep engine in
     bounded memory, keeping only running aggregates + the Pareto front.
 
@@ -1002,8 +1126,23 @@ def sweep_chunked(workload: Workload,
     path) persists synthesis results across runs, so a cold re-sweep of a
     seen space skips synthesis; ``use_cache`` instead routes through the
     in-process array cache.
+
+    ``overlap=True`` (default) runs the stream as a **two-stage
+    pipeline**: while the kernel maps chunk *i* (on device under jax, on
+    a worker thread under numpy), the host already pulls chunk *i+1* from
+    the feed and synthesizes it; the running Pareto reduction of chunk
+    *i* then also hides behind the dispatch of chunk *i+1*.  Chunks are
+    synthesized, reduced, and cache-inserted in exactly the stream order
+    of the serial path, so results, resume points, and
+    :class:`~repro.core.synthesis.PersistentSynthesisCache` hit/miss
+    accounting are identical (asserted in
+    ``tests/test_chunked_pipeline.py``); ``overlap=False`` keeps the
+    fully serial per-chunk loop.
     """
+    import time
     backend = resolve_backend(backend)
+    if backend == "jax":
+        _require_jax_mesh(mesh)
     if isinstance(cache, (str, bytes)) or hasattr(cache, "__fspath__"):
         cache = PersistentSynthesisCache(cache)
     wb = _workload_batch(workload)
@@ -1012,27 +1151,12 @@ def sweep_chunked(workload: Workload,
     front_metrics: dict[str, np.ndarray] | None = None
     n_total = 0
     n_chunks = 0
-    for soa in _as_soa_chunks(configs, chunk_size):
-        n = len(soa["pe_rows"])
-        if n == 0:
-            continue
-        n_total += n
-        n_chunks += 1
-        if cache is not None:
-            cols = cache.synthesize(soa)
-        elif use_cache:
-            cols = sweep_synthesis_cache().synthesize(soa)
-        else:
-            cols = synthesize_soa(soa)
-        cfg, lay = _make_cfg_lay(soa, cols, wb)
-        if backend == "jax" and 0 < n % chunk_size:
-            # pad the tail chunk to the steady-state shape: one jit trace
-            # serves the whole stream (padded rows are sliced off below)
-            pad = chunk_size - n % chunk_size
-            cfg = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
-                   for k, v in cfg.items()}
-        out = _run_kernel(cfg, lay, backend, mesh=mesh)
+    t_wall = time.perf_counter()
+    timings = {"overlap": bool(overlap), "wall_s": 0.0, "synth_s": 0.0,
+               "kernel_wait_s": 0.0}
 
+    def reduce_chunk(soa: dict, n: int, out: dict) -> None:
+        nonlocal front_soa, front_metrics
         perf = np.asarray(out["perf_per_area"], dtype=np.float64)[:n]
         energy = np.asarray(out["energy_j"], dtype=np.float64)[:n]
         # prefilter: only the chunk's own frontier can join the global one
@@ -1054,6 +1178,55 @@ def sweep_chunked(workload: Workload,
         front_soa = {k: v[keep] for k, v in front_soa.items()}
         front_metrics = {m: v[keep] for m, v in front_metrics.items()}
 
+    executor = None
+    if overlap and backend == "numpy":
+        from concurrent.futures import ThreadPoolExecutor
+        executor = ThreadPoolExecutor(max_workers=1)
+    pending: tuple[dict, int, object] | None = None   # (soa, n, finalize)
+    try:
+        feed = _as_soa_chunks(configs, chunk_size)
+        while True:
+            t0 = time.perf_counter()
+            soa = next(feed, None)
+            if soa is not None:
+                n = len(soa["pe_rows"])
+                if n == 0:
+                    continue
+                n_total += n
+                n_chunks += 1
+                # stage 1 (host): synthesis — in stream order, so cache
+                # lookups/inserts match the serial path row for row
+                if cache is not None:
+                    cols = cache.synthesize(soa)
+                elif use_cache:
+                    cols = sweep_synthesis_cache().synthesize(soa)
+                else:
+                    cols = synthesize_soa(soa)
+                cfg, lay = _make_cfg_lay(soa, cols, wb)
+                timings["synth_s"] += time.perf_counter() - t0
+                # stage 2 (device / worker thread): dispatch the kernel
+                finalize = _dispatch_chunk(cfg, lay, backend, mesh,
+                                           chunk_size, n, executor)
+            if pending is not None:
+                psoa, pn, pfin = pending
+                t0 = time.perf_counter()
+                out = pfin()
+                timings["kernel_wait_s"] += time.perf_counter() - t0
+                reduce_chunk(psoa, pn, out)
+                pending = None
+            if soa is None:
+                break
+            if overlap:
+                pending = (soa, n, finalize)
+            else:
+                t0 = time.perf_counter()
+                out = finalize()
+                timings["kernel_wait_s"] += time.perf_counter() - t0
+                reduce_chunk(soa, n, out)
+    finally:
+        if executor is not None:
+            executor.shutdown(wait=True)
+
     if front_soa is None:
         front_soa = {k: np.empty(0, dtype=np.int64)
                      for k in _SOA_ID_FIELDS}
@@ -1061,10 +1234,11 @@ def sweep_chunked(workload: Workload,
                          for m in _FRONT_METRICS}
     if cache is not None and save_cache and cache.path is not None:
         cache.save()
+    timings["wall_s"] = time.perf_counter() - t_wall
     return ChunkedSweep(workload=workload.name, backend=backend,
                         n_configs=n_total, n_chunks=n_chunks,
                         front_soa=front_soa, front_metrics=front_metrics,
-                        synthesis_cache=cache)
+                        synthesis_cache=cache, timings=timings)
 
 
 def _pareto_mask_bcast(perf: np.ndarray, energy: np.ndarray,

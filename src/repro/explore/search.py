@@ -29,8 +29,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.dse_batch import (resolve_backend, sweep_mixed,
-                                  sweep_mixed_many)
+from repro.core.dse_batch import (_mesh_shards, resolve_backend,
+                                  sweep_mixed, sweep_mixed_many)
 from repro.core.workloads import Workload, get_workload
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       DEFAULT_OBJECTIVES,
@@ -142,7 +142,7 @@ class Evaluator:
                  objectives: Sequence[str] | None = None,
                  *, backend: str = "auto", chunk_size: int = 4096,
                  use_cache: bool = True, weights=None,
-                 sqnr_floor_db=None):
+                 sqnr_floor_db=None, mesh=None):
         self.space = space
         self.multi = isinstance(workload, (list, tuple))
         if self.multi:
@@ -176,6 +176,14 @@ class Evaluator:
         self.use_cache = use_cache
         self.weights = weights
         self.sqnr_floor_db = sqnr_floor_db
+        # mesh= shards every evaluation chunk's genome axis across devices
+        # (jax: shard_map via sweep_mixed / sweep_mixed_many; numpy: an
+        # int simulates that many shards bit-identically)
+        if self.backend == "jax" and isinstance(mesh, int):
+            raise ValueError(
+                "backend='jax' needs a jax.sharding.Mesh for mesh=, not "
+                "an int shard count (see repro.launch.mesh.make_sweep_mesh)")
+        self.mesh = mesh
         self._memo: dict[tuple[bytes, int], np.ndarray] = {}
         self._subsets: dict[int, tuple] = {}
         self.n_requested = 0
@@ -228,7 +236,7 @@ class Evaluator:
                        for (s, e), w in zip(bounds, wls)]
             agg = sweep_mixed_many(wls, soa, assigns,
                                    use_cache=self.use_cache,
-                                   backend=self.backend)
+                                   backend=self.backend, mesh=self.mesh)
             agg = {k: np.asarray(v)[:, :n_real]
                    for k, v in agg.items() if np.ndim(v) == 2}
             return multi_objective_matrix(
@@ -238,7 +246,8 @@ class Evaluator:
         wl, = wls
         agg = sweep_mixed(wl, soa, assign[:, :len(wl.layers)],
                           use_cache=self.use_cache,
-                          backend=self.backend, outputs="aggregates")
+                          backend=self.backend, outputs="aggregates",
+                          mesh=self.mesh)
         return objective_matrix({k: np.asarray(v)[:n_real]
                                  for k, v in agg.items()},
                                 assign[:n_real, :len(wl.layers)],
@@ -296,6 +305,8 @@ class Evaluator:
             "eval_seconds": self.eval_seconds,
             "backend": self.backend,
             "n_workloads": len(self.workloads),
+            "mesh_shards": (None if self.mesh is None else
+                            _mesh_shards(self.mesh)),
         }
 
 
@@ -323,7 +334,8 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
                   seed: int = 0, backend: str = "auto",
                   chunk_size: int = 4096, batch: int | None = None,
                   ref_point: np.ndarray | None = None,
-                  weights=None, sqnr_floor_db=None) -> SearchResult:
+                  weights=None, sqnr_floor_db=None,
+                  mesh=None) -> SearchResult:
     """Uniform-random baseline: ``budget`` independent genomes, running
     non-dominated reduction, hypervolume recorded per batch.
 
@@ -336,7 +348,7 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db)
+                   sqnr_floor_db=sqnr_floor_db, mesh=mesh)
     if budget < 1:
         raise ValueError("budget must be >= 1")
     if batch is not None and batch < 1:
@@ -390,7 +402,7 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
           seed: int = 0, backend: str = "auto", chunk_size: int = 4096,
           mutation_rate: float = 0.08,
           ref_point: np.ndarray | None = None,
-          weights=None, sqnr_floor_db=None) -> SearchResult:
+          weights=None, sqnr_floor_db=None, mesh=None) -> SearchResult:
     """NSGA-II-style evolutionary multi-objective search.
 
     Classic loop: elitist (mu + lambda) survival over non-domination rank
@@ -415,7 +427,7 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db)
+                   sqnr_floor_db=sqnr_floor_db, mesh=mesh)
     pop = space.random_population(min(pop_size, budget), rng)
     F = ev.evaluate(pop)
     evals = len(pop)
@@ -458,7 +470,8 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
                        seed: int = 0, backend: str = "auto",
                        chunk_size: int = 4096, min_layers: int = 2,
                        ref_point: np.ndarray | None = None,
-                       weights=None, sqnr_floor_db=None) -> SearchResult:
+                       weights=None, sqnr_floor_db=None,
+                       mesh=None) -> SearchResult:
     """Successive halving over workload layer-prefix subsets.
 
     Rung ``r`` evaluates its population on the first ``m_r`` layers only
@@ -476,7 +489,7 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db)
+                   sqnr_floor_db=sqnr_floor_db, mesh=mesh)
     L = ev.full_subset
     sizes = [L]
     while sizes[-1] > min(min_layers, L) and len(sizes) < 4:

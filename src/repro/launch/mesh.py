@@ -39,10 +39,25 @@ def make_host_mesh(model: int = 1):
     return compat_make_mesh((n // model, model), ("data", "model"))
 
 
-def make_sweep_mesh():
-    """1-D mesh over all devices for sharding a DSE sweep's config axis
-    (:func:`repro.core.dse_batch.sweep_workload` with ``backend="jax"``)."""
-    return compat_make_mesh((jax.device_count(),), ("configs",))
+def make_sweep_mesh(max_devices: int | None = None):
+    """1-D mesh over all (or the first ``max_devices``) devices for
+    sharding a DSE sweep's config axis — :func:`repro.core.dse_batch
+    .sweep_workload` / :func:`~repro.core.dse_batch.sweep_mixed_many`
+    with ``backend="jax"`` and ``mesh=...``."""
+    n = jax.device_count()
+    if max_devices is not None:
+        n = max(1, min(n, int(max_devices)))
+    return compat_make_mesh((n,), ("configs",))
+
+
+def mesh_shards(mesh) -> int:
+    """Number of config-axis shards a ``mesh=`` argument implies:
+    ``None`` -> 1, a plain int (the numpy backend's simulated shard
+    count) -> itself, a ``jax.sharding.Mesh`` -> its device count.
+    Delegates to the sweep engine's helper so padding/splitting semantics
+    have a single source of truth."""
+    from repro.core.dse_batch import _mesh_shards
+    return _mesh_shards(mesh)
 
 
 def compat_shard_map(f, *, mesh, in_specs, out_specs):

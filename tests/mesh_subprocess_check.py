@@ -1,0 +1,84 @@
+"""Subprocess body for the forced-multi-device sharding tests.
+
+Run as ``python mesh_subprocess_check.py <n_configs>`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=K`` in the
+environment (the parent test sets it; the flag must be in place before
+jax imports, which is why this is a subprocess and not a fixture — see
+the no-leak assertion in ``tests/conftest.py``).  Prints one JSON object
+with the device count, the numpy sharded-vs-unsharded bit-equality, and
+the jax sharded-vs-(unsharded numpy / unsharded jax) max relative
+errors.  Not collected by pytest (no ``test_`` prefix).
+"""
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    assert "xla_force_host_platform_device_count" in \
+        os.environ.get("XLA_FLAGS", ""), "caller must force host devices"
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 30
+
+    import jax
+    import numpy as np
+
+    from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+    from repro.core.dse_batch import sweep_mixed_many
+    from repro.core.pe import PEType, supported_modes
+    from repro.core.workloads import get_workload
+    from repro.launch.mesh import make_sweep_mesh
+
+    types = tuple(PEType)
+    wls = (get_workload("vgg16"), get_workload("resnet34"))
+    rng = np.random.default_rng(1234)
+    space = [AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=c, glb_kb=g,
+                               dram_bw_gbps=bw)
+             for t in types
+             for (r, c, g, bw) in [(8, 8, 64, 6.4), (12, 14, 128, 12.8),
+                                   (32, 32, 512, 25.6)]]
+    configs = [space[i] for i in rng.integers(0, len(space), size=n)]
+    soa = configs_to_soa(configs)
+    assigns = []
+    for w in wls:
+        a = np.empty((n, len(w.layers)), dtype=np.int64)
+        for i, c in enumerate(configs):
+            modes = [types.index(m) for m in supported_modes(c.pe_type)]
+            a[i] = rng.choice(modes, size=len(w.layers))
+        assigns.append(a)
+
+    keys = ("latency_s", "energy_j", "perf_per_area", "throughput_gmacs")
+
+    def max_rel(a: dict, b: dict) -> float:
+        worst = 0.0
+        for k in keys:
+            x = np.asarray(a[k], dtype=np.float64)
+            y = np.asarray(b[k], dtype=np.float64)
+            both_zero = (x == 0) & (y == 0)
+            denom = np.where(x == 0, 1.0, x)
+            worst = max(worst, float(np.max(np.where(
+                both_zero, 0.0, np.abs(y / denom - 1.0)))))
+        return worst
+
+    un_np = sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                             use_cache=False)
+    sh_np = sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                             use_cache=False, mesh=jax.device_count())
+    mesh = make_sweep_mesh()
+    un_j = sweep_mixed_many(wls, soa, assigns, backend="jax",
+                            use_cache=False)
+    sh_j = sweep_mixed_many(wls, soa, assigns, backend="jax",
+                            use_cache=False, mesh=mesh)
+
+    print(json.dumps({
+        "n_configs": n,
+        "device_count": jax.device_count(),
+        "numpy_sharded_bit_exact": bool(all(
+            np.array_equal(un_np[k], sh_np[k]) for k in un_np)),
+        "jax_sharded_vs_numpy_max_rel": max_rel(un_np, sh_j),
+        "jax_sharded_vs_unsharded_max_rel": max_rel(un_j, sh_j),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""The double-buffered ``sweep_chunked`` pipeline (ISSUE 5 tentpole).
+
+The two-stage overlap (synthesize chunk i+1 on the host while the kernel
+maps chunk i) must be an invisible optimization: identical fronts,
+identical chunk/config counts, identical resume points through the
+persisted synthesis cache, and identical cache hit/miss accounting vs
+the serial per-chunk loop — on every backend.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.dse_batch import sweep_chunked
+from repro.core.pe import PEType
+from repro.core.synthesis import PersistentSynthesisCache
+from repro.core.workloads import get_workload
+
+WL = get_workload("vgg16")
+SPACE = [
+    AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=c, glb_kb=g,
+                      dram_bw_gbps=bw)
+    for t in tuple(PEType)
+    for (r, c, g, bw) in [(8, 8, 64, 6.4), (12, 14, 128, 12.8),
+                          (16, 16, 256, 12.8), (32, 32, 512, 25.6)]
+]
+
+
+def _backends(jax_usable):
+    return ("numpy", "jax") if jax_usable else ("numpy",)
+
+
+def _assert_same_sweep(a, b):
+    assert a.n_configs == b.n_configs
+    assert a.n_chunks == b.n_chunks
+    assert a.front_size == b.front_size
+    for m in a.front_metrics:
+        assert np.array_equal(a.front_metrics[m], b.front_metrics[m]), m
+    for k in a.front_soa:
+        assert np.array_equal(a.front_soa[k], b.front_soa[k]), k
+
+
+def test_overlap_matches_serial_all_backends(jax_usable):
+    feed = SPACE * 7                              # several chunks + tail
+    for backend in _backends(jax_usable):
+        serial = sweep_chunked(WL, [feed], chunk_size=11, backend=backend,
+                               overlap=False)
+        pipe = sweep_chunked(WL, [feed], chunk_size=11, backend=backend,
+                             overlap=True)
+        _assert_same_sweep(serial, pipe)
+        assert serial.timings["overlap"] is False
+        assert pipe.timings["overlap"] is True
+        for t in ("wall_s", "synth_s", "kernel_wait_s"):
+            assert pipe.timings[t] >= 0.0
+
+
+def test_overlap_with_generator_feed():
+    """A lazy flat-config generator is pulled one chunk ahead at most —
+    results must still match the serial eager evaluation."""
+    def feed():
+        for cfg in SPACE * 5:
+            yield cfg
+    serial = sweep_chunked(WL, [SPACE * 5], chunk_size=8, overlap=False,
+                           backend="numpy")
+    pipe = sweep_chunked(WL, feed(), chunk_size=8, overlap=True,
+                         backend="numpy")
+    _assert_same_sweep(serial, pipe)
+
+
+def test_persistent_cache_accounting_identical(tmp_path, jax_usable):
+    """Hit/miss accounting through the persisted cache is stream-ordered
+    and must not depend on the overlap."""
+    for backend in _backends(jax_usable):
+        caches = {}
+        for overlap in (False, True):
+            cache = PersistentSynthesisCache(
+                tmp_path / f"c_{backend}_{overlap}.npz")
+            res = sweep_chunked(WL, [SPACE * 3], chunk_size=7,
+                                backend=backend, overlap=overlap,
+                                cache=cache)
+            caches[overlap] = res.synthesis_cache
+        for attr in ("hits", "misses"):
+            assert getattr(caches[False], attr) \
+                == getattr(caches[True], attr), (backend, attr)
+        assert len(caches[False]) == len(caches[True])
+        # a second pipelined sweep over the same space hits every row
+        cache = caches[True]
+        h0, n = cache.hits, len(SPACE) * 3
+        sweep_chunked(WL, [SPACE * 3], chunk_size=7, backend=backend,
+                      overlap=True, cache=cache)
+        assert cache.hits == h0 + n
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def test_midstream_interruption_and_resume(tmp_path):
+    """A feed that dies mid-stream propagates the error (no hung worker
+    thread), keeps the synthesized rows it already processed, and a
+    resumed sweep over the remaining feed lands on the same front as the
+    unbroken stream — identical resume-point semantics to the serial
+    driver."""
+    path = tmp_path / "resume.npz"
+    chunks = [configs_to_soa(tuple(SPACE[i::4])) for i in range(4)]
+    survived = 2
+
+    def broken_feed():
+        for i, ch in enumerate(chunks):
+            if i == survived:
+                raise _Boom("feed died")
+            yield ch
+
+    cache = PersistentSynthesisCache(path)
+    with pytest.raises(_Boom):
+        sweep_chunked(WL, broken_feed(), chunk_size=4, overlap=True,
+                      cache=cache)
+    n_seen = sum(len(c["pe_rows"]) for c in chunks[:survived])
+    assert cache.misses == n_seen and cache.hits == 0
+    assert len(cache) == len({  # unique digests actually synthesized
+        k for i in range(survived)
+        for k in _digests(chunks[i])})
+
+    # resume: the interrupted run never reached save(), so persist now
+    # (mirrors a driver checkpointing before retrying) and sweep the
+    # remaining chunks through the on-disk rows
+    cache.save()
+    resumed = sweep_chunked(WL, chunks[survived:], chunk_size=4,
+                            overlap=True, cache=str(path))
+    assert resumed.synthesis_cache.hits == 0   # all-new configs
+    # merged front of (interrupted + resumed halves) == unbroken stream
+    first = sweep_chunked(WL, chunks[:survived], chunk_size=4,
+                          overlap=True, cache=str(path))
+    assert first.synthesis_cache.hits == n_seen   # re-run is all hits
+    merged = sweep_chunked(
+        WL, [configs_to_soa(tuple(first.front_configs()
+                                  + resumed.front_configs()))],
+        chunk_size=4, overlap=True, cache=str(path))
+    one_shot = sweep_chunked(WL, chunks, chunk_size=4, overlap=False)
+    assert set(merged.front_configs()) == set(one_shot.front_configs())
+
+
+def _digests(soa):
+    from repro.core.confighash import config_digests, digest_keys
+    return digest_keys(config_digests(soa))
+
+
+def test_jax_rejects_int_mesh(jax_usable):
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    with pytest.raises(ValueError, match="jax.sharding.Mesh"):
+        sweep_chunked(WL, [SPACE], backend="jax", mesh=2)
+
+
+def test_empty_feed_still_returns_empty_front():
+    res = sweep_chunked(WL, [], overlap=True, backend="numpy")
+    assert res.n_configs == 0 and res.front_size == 0
+    assert res.timings["overlap"] is True

@@ -1,0 +1,162 @@
+"""Mesh sharding of the multi-workload fused kernel (ISSUE 5 tentpole).
+
+Two layers of coverage:
+
+* in-process — the numpy backend's simulated sharding (``mesh=<int>`` or
+  a real mesh) must be **bit-identical** to the unsharded path for any
+  shard count, including shard counts that don't divide the batch size,
+  and the whole explore stack must accept ``mesh=`` without changing the
+  search trajectory;
+* subprocess — real multi-device ``shard_map`` sharding under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must
+  precede the jax import, so the check runs in a fresh interpreter; same
+  pattern as the device-count skip in ``tests/test_hlo_analysis.py``),
+  asserting ≤1e-6 relative parity vs the unsharded numpy front for both
+  a divisible and a non-divisible batch-size-vs-device-count case.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.dse_batch import sweep_mixed_many
+from repro.core.pe import PEType, supported_modes
+from repro.core.workloads import get_workload
+
+TYPES = tuple(PEType)
+SMALL_SPACE = [
+    AcceleratorConfig(pe_type=t, pe_rows=r, pe_cols=c, glb_kb=g,
+                      dram_bw_gbps=bw)
+    for t in TYPES
+    for (r, c, g, bw) in [(8, 8, 64, 6.4), (12, 14, 128, 12.8),
+                          (32, 32, 512, 25.6)]
+]
+WLS = ("vgg16", "resnet34")
+
+
+def _batch(n: int, seed: int = 7):
+    wls = tuple(get_workload(w) for w in WLS)
+    rng = np.random.default_rng(seed)
+    configs = [SMALL_SPACE[i]
+               for i in rng.integers(0, len(SMALL_SPACE), size=n)]
+    soa = configs_to_soa(configs)
+    assigns = []
+    for w in wls:
+        a = np.empty((n, len(w.layers)), dtype=np.int64)
+        for i, c in enumerate(configs):
+            modes = [TYPES.index(m) for m in supported_modes(c.pe_type)]
+            a[i] = rng.choice(modes, size=len(w.layers))
+        assigns.append(a)
+    return wls, soa, assigns
+
+
+@pytest.mark.parametrize("n,shards", [(24, 4),   # divisible
+                                      (29, 4),   # non-divisible
+                                      (3, 8)])   # more shards than rows
+def test_numpy_sharded_bit_identical(n, shards):
+    wls, soa, assigns = _batch(n)
+    un = sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                          use_cache=False)
+    sh = sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                          use_cache=False, mesh=shards)
+    assert set(un) == set(sh)
+    for k in un:
+        assert np.array_equal(un[k], sh[k]), k
+
+
+def test_numpy_mesh_object_taken_by_device_count(jax_usable):
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    from repro.launch.mesh import make_sweep_mesh
+    wls, soa, assigns = _batch(17)
+    un = sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                          use_cache=False)
+    sh = sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                          use_cache=False, mesh=make_sweep_mesh())
+    for k in un:
+        assert np.array_equal(un[k], sh[k]), k
+
+
+def test_invalid_mesh_args():
+    wls, soa, assigns = _batch(6)
+    with pytest.raises(ValueError, match="shard count"):
+        sweep_mixed_many(wls, soa, assigns, backend="numpy",
+                         use_cache=False, mesh=0)
+
+
+def test_jax_rejects_int_mesh(jax_usable):
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    wls, soa, assigns = _batch(6)
+    with pytest.raises(ValueError, match="jax.sharding.Mesh"):
+        sweep_mixed_many(wls, soa, assigns, backend="jax",
+                         use_cache=False, mesh=2)
+
+
+def test_jax_single_device_mesh_parity(jax_usable):
+    """Even a 1-device mesh goes through the shard_map code path and must
+    match the unsharded jit kernel (multi-device runs live in the
+    subprocess test below and the multi-device-smoke CI job)."""
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    from repro.launch.mesh import make_sweep_mesh
+    wls, soa, assigns = _batch(21)
+    un = sweep_mixed_many(wls, soa, assigns, backend="jax",
+                          use_cache=False)
+    sh = sweep_mixed_many(wls, soa, assigns, backend="jax",
+                          use_cache=False, mesh=make_sweep_mesh())
+    for k in ("latency_s", "energy_j", "perf_per_area",
+              "throughput_gmacs"):
+        a = np.asarray(un[k], dtype=np.float64)
+        b = np.asarray(sh[k], dtype=np.float64)
+        both_zero = (a == 0) & (b == 0)
+        denom = np.where(a == 0, 1.0, a)
+        rel = np.max(np.where(both_zero, 0.0, np.abs(b / denom - 1.0)))
+        assert rel < 1e-6, (k, rel)
+
+
+def test_evaluator_mesh_threads_through_search():
+    """coexplore_many(mesh=...) must not change the numpy search
+    trajectory (simulated shards are bit-identical), and the shard count
+    must land in the run stats."""
+    from repro.core.dse import coexplore_many
+    base = coexplore_many(WLS, preset="many-quick", budget=48, seed=5,
+                          backend="numpy")
+    sharded = coexplore_many(WLS, preset="many-quick", budget=48, seed=5,
+                             backend="numpy", mesh=3)
+    assert np.array_equal(base.genomes, sharded.genomes)
+    assert np.array_equal(base.front_objectives,
+                          sharded.front_objectives)
+    assert sharded.stats["mesh_shards"] == 3
+    assert base.stats["mesh_shards"] is None
+
+
+@pytest.mark.parametrize("n", [32, 30])   # divisible / non-divisible by 4
+def test_forced_four_device_shard_map_parity(n, jax_usable):
+    """Real shard_map over 4 forced host devices (fresh interpreter so
+    XLA_FLAGS precedes the jax import)."""
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    script = pathlib.Path(__file__).parent / "mesh_subprocess_check.py"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(script), str(n)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    r = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert r["device_count"] == 4
+    assert r["n_configs"] == n
+    assert r["numpy_sharded_bit_exact"]
+    assert r["jax_sharded_vs_numpy_max_rel"] < 1e-6
+    assert r["jax_sharded_vs_unsharded_max_rel"] < 1e-6
