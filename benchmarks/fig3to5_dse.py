@@ -13,7 +13,8 @@ import time
 
 import numpy as np
 
-from repro.core.dse import explore_many, pareto_front
+from repro.core.dse import ExploreSpec, pareto_front
+from repro.core.dse import run as run_spec
 
 
 def run():
@@ -21,7 +22,7 @@ def run():
     agg = {}
     wls = ("vgg16", "resnet34", "resnet50")
     t0 = time.perf_counter()
-    results = explore_many(wls)
+    results = run_spec(ExploreSpec.many(wls))
     dt_all = time.perf_counter() - t0
     for wl in wls:
         res = results[wl]

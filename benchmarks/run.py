@@ -9,13 +9,14 @@ def main() -> None:
     from benchmarks import (coexplore_bench, coexplore_many_bench,
                             dse_sweep_bench, fig2_ppa_accuracy,
                             fig3to5_dse, kernel_bench, quant_accuracy,
-                            roofline_bench)
+                            roofline_bench, serving_dse_bench)
     modules = [
         ("fig2", fig2_ppa_accuracy),
         ("fig3to5", fig3to5_dse),
         ("dse_sweep", dse_sweep_bench),
         ("coexplore", coexplore_bench),
         ("coexplore_many", coexplore_many_bench),
+        ("serving_dse", serving_dse_bench),
         ("kernels", kernel_bench),
         ("quant_acc", quant_accuracy),
         ("roofline", roofline_bench),

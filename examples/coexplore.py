@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core.dse import coexplore
+from repro.core.dse import ExploreSpec, run
 from repro.core.synthesis import (clear_synthesis_cache,
                                   synthesis_cache_stats)
 from repro.explore.objectives import mode_sqnr_db
@@ -48,12 +48,13 @@ def main() -> None:
 
     clear_synthesis_cache()
     t0 = time.perf_counter()
-    guided = coexplore(args.workload, preset=preset, seed=args.seed,
-                       backend=args.backend)
+    guided = run(ExploreSpec.mixed(args.workload, preset=preset,
+                                   seed=args.seed, backend=args.backend))
     t_guided = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rand = coexplore(args.workload, preset=preset, method="random",
-                     seed=args.seed, backend=args.backend)
+    rand = run(ExploreSpec.mixed(args.workload, preset=preset,
+                                 method="random", seed=args.seed,
+                                 backend=args.backend))
     t_rand = time.perf_counter() - t0
 
     # one shared reference point makes the two hypervolumes comparable

@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.core.dse import coexplore_many
+from repro.core.dse import ExploreSpec, run
 from repro.core.synthesis import (clear_synthesis_cache,
                                   synthesis_cache_stats)
 from repro.explore.pareto import hypervolume, reference_point
@@ -51,14 +51,16 @@ def main() -> None:
 
     clear_synthesis_cache()
     t0 = time.perf_counter()
-    guided = coexplore_many(args.workloads, preset=preset, seed=args.seed,
-                            backend=args.backend,
-                            sqnr_floor_db=args.sqnr_floor_db)
+    guided = run(ExploreSpec.many(args.workloads, precision="mixed",
+                                  preset=preset, seed=args.seed,
+                                  backend=args.backend,
+                                  sqnr_floor_db=args.sqnr_floor_db))
     t_guided = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rand = coexplore_many(args.workloads, preset=preset, method="random",
-                          seed=args.seed, backend=args.backend,
-                          sqnr_floor_db=args.sqnr_floor_db)
+    rand = run(ExploreSpec.many(args.workloads, precision="mixed",
+                                preset=preset, method="random",
+                                seed=args.seed, backend=args.backend,
+                                sqnr_floor_db=args.sqnr_floor_db))
     t_rand = time.perf_counter() - t0
 
     ref = reference_point(np.concatenate([guided.all_objectives,

@@ -11,7 +11,7 @@ import sys
 import time
 
 from repro.core.accelerator import design_space
-from repro.core.dse import IncrementalSweep, explore, pareto_front
+from repro.core.dse import ExploreSpec, IncrementalSweep, pareto_front, run
 from repro.core.pe import PEType
 from repro.core.synthesis import synthesis_cache_stats
 
@@ -19,7 +19,7 @@ from repro.core.synthesis import synthesis_cache_stats
 def main():
     wl = sys.argv[1] if len(sys.argv) > 1 else "vgg16"
     t0 = time.perf_counter()
-    res = explore(wl)                      # batched engine (default)
+    res = run(ExploreSpec.single(wl))      # batched engine (default)
     dt = time.perf_counter() - t0
     print(f"workload={wl}  design points={len(res.points)}  "
           f"sweep={dt * 1e3:.1f} ms (batched engine)")

@@ -13,6 +13,14 @@ names come from :data:`repro.explore.objectives.MULTI_OBJECTIVES`
 (worst-case / energy-weighted-mean across the suite), and
 ``sqnr_floor_db`` optionally turns per-workload accuracy floors into
 constraints.
+
+The ``serving-*`` presets score every genome on a serving fleet instead
+of a single inference: ``traffic`` names a
+:data:`repro.serving.traffic.TRAFFIC_PRESETS` trace that the fleet
+simulator replays per candidate over ``n_slots`` continuous-batching
+slots, and the objectives come from
+:data:`repro.explore.objectives.SERVING_OBJECTIVES` (tail latency, SLO
+attainment, throughput under load, energy per served token).
 """
 
 from __future__ import annotations
@@ -20,8 +28,10 @@ from __future__ import annotations
 import dataclasses
 
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
-                                      DEFAULT_OBJECTIVES, MULTI_OBJECTIVES,
-                                      OBJECTIVES)
+                                      DEFAULT_OBJECTIVES,
+                                      DEFAULT_SERVING_OBJECTIVES,
+                                      MULTI_OBJECTIVES, OBJECTIVES,
+                                      SERVING_OBJECTIVES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,15 +47,40 @@ class CoExplorePreset:
     eta: int = 3                     # successive-halving reduction factor
     sqnr_floor_db: float | tuple[float, ...] | None = None
     weights: tuple[float, ...] | None = None   # None = energy-weighted
+    traffic: str | None = None       # TRAFFIC_PRESETS name (serving mode)
+    n_slots: int = 8                 # fleet slots (serving mode)
 
     def __post_init__(self):
         unknown = set(self.objectives) - set(OBJECTIVES) \
-            - set(MULTI_OBJECTIVES)
+            - set(MULTI_OBJECTIVES) - set(SERVING_OBJECTIVES)
         if unknown:
             raise ValueError(
                 f"preset {self.name!r}: unknown objective(s) "
                 f"{sorted(unknown)} (choose from single-workload "
-                f"{OBJECTIVES} or multi-workload {MULTI_OBJECTIVES})")
+                f"{OBJECTIVES}, multi-workload {MULTI_OBJECTIVES}, or "
+                f"serving {SERVING_OBJECTIVES})")
+        serving = set(self.objectives) & set(SERVING_OBJECTIVES)
+        if serving and self.traffic is None:
+            raise ValueError(
+                f"preset {self.name!r}: serving objective(s) "
+                f"{sorted(serving)} need traffic= (one of "
+                f"repro.serving.traffic.TRAFFIC_PRESETS)")
+        if self.traffic is not None:
+            if not serving:
+                raise ValueError(
+                    f"preset {self.name!r}: traffic={self.traffic!r} but "
+                    f"no serving objective in {self.objectives}")
+            if set(self.objectives) & set(MULTI_OBJECTIVES):
+                raise ValueError(
+                    f"preset {self.name!r}: serving objectives are "
+                    f"single-workload only; drop the multi-workload "
+                    f"objectives or the traffic")
+            from repro.serving.traffic import get_traffic
+            get_traffic(self.traffic)          # raises on unknown name
+        if self.n_slots < 1:
+            raise ValueError(
+                f"preset {self.name!r}: n_slots must be >= 1, "
+                f"got {self.n_slots}")
 
 
 PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
@@ -66,6 +101,18 @@ PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
                                 "total_energy_j", "worst_edp",
                                 "worst_quant_noise"),
                     sqnr_floor_db=20.0),
+    # serving-fleet campaigns (traffic-aware objectives)
+    CoExplorePreset(name="serving-quick", budget=384, pop_size=24,
+                    objectives=DEFAULT_SERVING_OBJECTIVES,
+                    traffic="quick"),
+    CoExplorePreset(name="serving-default",
+                    objectives=DEFAULT_SERVING_OBJECTIVES,
+                    traffic="steady"),
+    CoExplorePreset(name="serving-thorough", budget=8192, pop_size=96,
+                    objectives=("p99_latency_s", "neg_slo_attainment",
+                                "neg_throughput_tps",
+                                "energy_per_token_j", "quant_noise"),
+                    traffic="bursty"),
 )}
 
 

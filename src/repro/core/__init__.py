@@ -4,7 +4,8 @@ and the TPU roofline re-targeting."""
 
 from repro.core.accelerator import AcceleratorConfig, design_space  # noqa
 from repro.core.dataflow import map_layer, run_workload             # noqa
-from repro.core.dse import DSEResult, explore, pareto_front         # noqa
+from repro.core.dse import (DSEResult, ExploreSpec, explore,        # noqa
+                            pareto_front, run)
 from repro.core.pe import PEType, pe_spec                           # noqa
 from repro.core.ppa_model import fit_poly_model, fit_ppa_suite      # noqa
 from repro.core.rtl import generate_rtl                             # noqa

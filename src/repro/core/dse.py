@@ -14,13 +14,17 @@ Two engines produce identical results:
 * ``engine="scalar"`` — the original O(configs x layers) Python loop, kept
   as the bit-exact reference the batched engine is tested against.
 
-``explore_many`` amortizes synthesis + SoA conversion across workloads,
+The public entry point is :func:`run` over an :class:`ExploreSpec` —
+one declarative description of a campaign built with
+``ExploreSpec.single(...)`` (uniform-precision config sweep, optionally
+chunk-streamed), ``ExploreSpec.mixed(...)`` (guided mixed-precision
+co-exploration, optionally under a serving ``traffic`` trace), or
+``ExploreSpec.many(...)`` (workload suites, uniform or mixed).  The
+pre-facade functions (``explore`` / ``explore_scalar`` /
+``explore_many`` / ``explore_chunked`` / ``coexplore`` /
+``coexplore_many``) remain as deprecated shims for one release.
 :class:`IncrementalSweep` lets a sweep be resumed/extended without
-re-evaluating known design points, :func:`coexplore` runs the guided
-mixed-precision co-exploration engine (:mod:`repro.explore`) over the
-joint (config x per-layer precision) space, and :func:`coexplore_many`
-extends it to a workload *suite* sharing one hardware config with
-per-workload precision assignments (the full QUIDAM setting).
+re-evaluating known design points.
 """
 
 from __future__ import annotations
@@ -33,8 +37,8 @@ import numpy as np
 from repro.core.accelerator import (AcceleratorConfig, configs_to_soa,
                                     design_space)
 from repro.core.dataflow import WorkloadResult, run_workload
-from repro.core.dse_batch import (ChunkedSweep, pareto_mask, sweep_chunked,
-                                  sweep_workload)
+from repro.core.dse_batch import (ChunkedSweep, _sweep_chunked,
+                                  _sweep_workload, pareto_mask)
 from repro.core.pe import PEType
 from repro.core.synthesis import (config_keys, sweep_synthesis_cache,
                                   synthesize_cached)
@@ -142,9 +146,9 @@ def _resolve(workload: Workload | str) -> Workload:
     return get_workload(workload) if isinstance(workload, str) else workload
 
 
-def explore_scalar(workload: Workload | str,
-                   configs: Iterable[AcceleratorConfig] | None = None,
-                   use_cache: bool = False) -> DSEResult:
+def _explore_scalar(workload: Workload | str,
+                    configs: Iterable[AcceleratorConfig] | None = None,
+                    *, use_cache: bool = False) -> DSEResult:
     """The original serial sweep — reference path for the batched engine."""
     workload = _resolve(workload)
     if configs is None:
@@ -157,13 +161,14 @@ def explore_scalar(workload: Workload | str,
     return DSEResult(workload=workload.name, points=points)
 
 
-def explore(workload: Workload | str,
-            configs: Iterable[AcceleratorConfig] | None = None,
-            *,
-            engine: str = "batched",
-            use_cache: bool = True,
-            backend: str = "auto",
-            mesh=None) -> DSEResult:
+def _explore(workload: Workload | str,
+             configs: Iterable[AcceleratorConfig] | None = None,
+             *,
+             engine: str = "batched",
+             use_cache: bool = True,
+             backend: str = "auto",
+             mesh=None,
+             outputs: str = "points"):
     """Sweep ``configs`` (default: the full paper design space) on a workload.
 
     ``engine="batched"`` evaluates everything as fused array ops;
@@ -175,70 +180,100 @@ def explore(workload: Workload | str,
     <= 1e-6 under jax's default x64-off config — pin ``backend="numpy"``
     when exact reproducibility across hosts matters.  With
     ``backend="jax"`` a ``mesh`` shards the config axis across devices.
+
+    ``outputs`` picks the result form: ``"points"`` (a
+    :class:`DSEResult`), ``"sweep"`` (the raw
+    :class:`repro.core.dse_batch.BatchedSweep` with per-layer columns), or
+    ``"aggregates"`` (a ``BatchedSweep`` holding per-config aggregates
+    only — the cheap form for huge spaces).
     """
     if engine == "scalar":
-        return explore_scalar(workload, configs, use_cache=use_cache)
+        if outputs != "points":
+            raise ValueError(
+                f'engine="scalar" only supports outputs="points", '
+                f'got {outputs!r}')
+        return _explore_scalar(workload, configs, use_cache=use_cache)
     if engine != "batched":
         raise ValueError(f"unknown DSE engine: {engine!r}")
     workload = _resolve(workload)
     cfgs = tuple(design_space() if configs is None else configs)
-    sweep = sweep_workload(workload, cfgs, use_cache=use_cache,
-                           backend=backend, mesh=mesh)
+    sweep = _sweep_workload(
+        workload, cfgs, use_cache=use_cache, backend=backend, mesh=mesh,
+        outputs="aggregates" if outputs == "aggregates" else "full")
+    if outputs in ("sweep", "aggregates"):
+        return sweep
+    if outputs != "points":
+        raise ValueError(
+            f"unknown outputs mode {outputs!r} "
+            f"(choose from ('points', 'sweep', 'aggregates'))")
     points = [DSEPoint(config=c, result=sweep.result_view(i))
               for i, c in enumerate(cfgs)]
     return DSEResult(workload=workload.name, points=points)
 
 
-def explore_many(workloads: Sequence[Workload | str],
-                 configs: Iterable[AcceleratorConfig] | None = None,
-                 *,
-                 use_cache: bool = True,
-                 backend: str = "auto",
-                 mesh=None) -> dict[str, DSEResult]:
+def _explore_many(workloads: Sequence[Workload | str],
+                  configs: Iterable[AcceleratorConfig] | None = None,
+                  *,
+                  use_cache: bool = True,
+                  backend: str = "auto",
+                  mesh=None,
+                  outputs: str = "points") -> dict:
     """Batched multi-workload sweep.
 
     Synthesis and the struct-of-arrays conversion run *once* for the config
     batch and are shared across all workloads — sweeping the paper's three
     models costs one synthesis pass plus three array-kernel evaluations.
+    ``outputs`` as in :func:`_explore` (applies per workload).
     """
     from repro.core.synthesis import synthesize_soa
+    if outputs not in ("points", "sweep", "aggregates"):
+        raise ValueError(
+            f"unknown outputs mode {outputs!r} "
+            f"(choose from ('points', 'sweep', 'aggregates'))")
     cfgs = tuple(design_space() if configs is None else configs)
     soa = configs_to_soa(cfgs)
     cols = (sweep_synthesis_cache().synthesize(soa) if use_cache
             else synthesize_soa(soa))
-    out: dict[str, DSEResult] = {}
+    out: dict = {}
     for wl in workloads:
         wl = _resolve(wl)
-        sweep = sweep_workload(wl, cfgs, cols, soa=soa, backend=backend,
-                               mesh=mesh)
-        out[wl.name] = DSEResult(
-            workload=wl.name,
-            points=[DSEPoint(config=c, result=sweep.result_view(i))
-                    for i, c in enumerate(cfgs)])
+        sweep = _sweep_workload(
+            wl, cfgs, cols, soa=soa, backend=backend, mesh=mesh,
+            outputs="aggregates" if outputs == "aggregates" else "full")
+        if outputs in ("sweep", "aggregates"):
+            out[wl.name] = sweep
+        else:
+            out[wl.name] = DSEResult(
+                workload=wl.name,
+                points=[DSEPoint(config=c, result=sweep.result_view(i))
+                        for i, c in enumerate(cfgs)])
     return out
 
 
-def explore_chunked(workload: Workload | str,
-                    configs,
-                    **kwargs) -> ChunkedSweep:
+def _explore_chunked(workload: Workload | str,
+                     configs,
+                     **kwargs) -> ChunkedSweep:
     """Streamed bounded-memory sweep over an arbitrary-size config feed —
-    see :func:`repro.core.dse_batch.sweep_chunked` for the knobs
+    see :func:`repro.core.dse_batch._sweep_chunked` for the knobs
     (chunk size, backend, persisted synthesis cache)."""
-    return sweep_chunked(_resolve(workload), configs, **kwargs)
+    return _sweep_chunked(_resolve(workload), configs, **kwargs)
 
 
-def coexplore(workload: Workload | str,
-              *,
-              preset: str = "default",
-              method: str | None = None,
-              budget: int | None = None,
-              seed: int | None = None,
-              backend: str = "auto",
-              objectives=None,
-              ref_point=None,
-              mesh=None,
-              space_overrides: dict | None = None,
-              **method_kwargs):
+def _coexplore(workload: Workload | str,
+               *,
+               preset: str = "default",
+               method: str | None = None,
+               budget: int | None = None,
+               seed: int | None = None,
+               backend: str = "auto",
+               objectives=None,
+               ref_point=None,
+               mesh=None,
+               space_overrides: dict | None = None,
+               traffic=None,
+               n_slots: int | None = None,
+               chunk_size: int | None = None,
+               **method_kwargs):
     """Guided co-exploration of the joint (config x per-layer precision)
     space — the QADAM/QUIDAM-direction entry point.
 
@@ -249,10 +284,21 @@ def coexplore(workload: Workload | str,
     :class:`repro.explore.search.SearchResult` whose front genomes decode
     to (AcceleratorConfig, per-layer mode) pairs.
 
+    A ``traffic`` trace (name, :class:`repro.serving.traffic.TrafficPreset`
+    or :class:`~repro.serving.traffic.TrafficTrace`) switches the search
+    to serving-fleet objectives: each genome's per-inference latency and
+    energy feed the fleet simulator
+    (:func:`repro.serving.fleet_sim.simulate_fleet`) over ``n_slots``
+    continuous-batching slots, and the objective set defaults to
+    :data:`repro.explore.objectives.DEFAULT_SERVING_OBJECTIVES` unless
+    the preset or ``objectives=`` already names serving objectives.
+
     >>> res = coexplore("vgg16", preset="quick", seed=7)
     >>> res.front_points()[0]["modes"]            # doctest: +SKIP
     """
     from repro.configs.coexplore_presets import get_preset
+    from repro.explore.objectives import (DEFAULT_SERVING_OBJECTIVES,
+                                          SERVING_OBJECTIVES)
     from repro.explore.search import SEARCH_METHODS
     from repro.explore.space import space_for_workload
 
@@ -265,11 +311,25 @@ def coexplore(workload: Workload | str,
         raise ValueError(
             f"unknown co-exploration method {method!r} "
             f"(choose from {sorted(SEARCH_METHODS)})")
+    traffic_resolved = traffic if traffic is not None else p.traffic
+    if objectives is not None:
+        objs = tuple(objectives)
+    elif (traffic is not None
+          and not set(p.objectives) & set(SERVING_OBJECTIVES)):
+        # explicit traffic over a non-serving preset: flip the default
+        # objective set to the serving ones, else the Evaluator rejects
+        # the trace as unused.
+        objs = DEFAULT_SERVING_OBJECTIVES
+    else:
+        objs = p.objectives
     kwargs = dict(
-        objectives=p.objectives if objectives is None else tuple(objectives),
+        objectives=objs,
         seed=p.seed if seed is None else seed,
-        backend=backend, chunk_size=p.chunk_size, ref_point=ref_point,
-        mesh=mesh)
+        backend=backend,
+        chunk_size=p.chunk_size if chunk_size is None else chunk_size,
+        ref_point=ref_point, mesh=mesh,
+        traffic=traffic_resolved,
+        n_slots=p.n_slots if n_slots is None else n_slots)
     if method == "nsga2":
         kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
     elif method == "successive_halving":
@@ -278,20 +338,21 @@ def coexplore(workload: Workload | str,
     return fn(space, wl, p.budget if budget is None else budget, **kwargs)
 
 
-def coexplore_many(workloads: Sequence[Workload | str],
-                   *,
-                   preset: str = "many-default",
-                   method: str | None = None,
-                   budget: int | None = None,
-                   seed: int | None = None,
-                   backend: str = "auto",
-                   objectives=None,
-                   ref_point=None,
-                   weights=None,
-                   sqnr_floor_db=None,
-                   mesh=None,
-                   space_overrides: dict | None = None,
-                   **method_kwargs):
+def _coexplore_many(workloads: Sequence[Workload | str],
+                    *,
+                    preset: str = "many-default",
+                    method: str | None = None,
+                    budget: int | None = None,
+                    seed: int | None = None,
+                    backend: str = "auto",
+                    objectives=None,
+                    ref_point=None,
+                    weights=None,
+                    sqnr_floor_db=None,
+                    mesh=None,
+                    space_overrides: dict | None = None,
+                    chunk_size: int | None = None,
+                    **method_kwargs):
     """Multi-workload co-exploration: one shared hardware config, one
     per-layer precision assignment *per workload* — the full QUIDAM
     setting.
@@ -338,8 +399,9 @@ def coexplore_many(workloads: Sequence[Workload | str],
     kwargs = dict(
         objectives=p.objectives if objectives is None else tuple(objectives),
         seed=p.seed if seed is None else seed,
-        backend=backend, chunk_size=p.chunk_size, ref_point=ref_point,
-        mesh=mesh,
+        backend=backend,
+        chunk_size=p.chunk_size if chunk_size is None else chunk_size,
+        ref_point=ref_point, mesh=mesh,
         weights=p.weights if weights is None else weights,
         sqnr_floor_db=(p.sqnr_floor_db if sqnr_floor_db is None
                        else sqnr_floor_db))
@@ -385,8 +447,8 @@ class IncrementalSweep:
             fresh.append(cfg)
             keys.append(key)
         if fresh:
-            sweep = sweep_workload(self.workload, fresh,
-                                   backend=self.backend)
+            sweep = _sweep_workload(self.workload, fresh,
+                                    backend=self.backend)
             for i, (cfg, key) in enumerate(zip(fresh, keys)):
                 self._points[key] = DSEPoint(config=cfg,
                                              result=sweep.result_view(i))
@@ -395,3 +457,325 @@ class IncrementalSweep:
     def result(self) -> DSEResult:
         return DSEResult(workload=self.workload.name,
                          points=list(self._points.values()))
+
+
+# --------------------------------------------------------------------------
+# Unified exploration facade
+# --------------------------------------------------------------------------
+
+_OUTPUT_MODES = ("points", "sweep", "aggregates")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExploreSpec:
+    """One declarative description of an exploration campaign.
+
+    ``run(spec)`` is the single public entry point that replaces the old
+    nine-function surface (``explore`` / ``explore_scalar`` /
+    ``explore_many`` / ``explore_chunked`` / ``coexplore`` /
+    ``coexplore_many`` and the ``sweep_*`` family).  Build specs with the
+    constructors rather than the raw dataclass:
+
+    * :meth:`ExploreSpec.single` — enumerate a config batch on one
+      workload at uniform per-config precision (optionally chunk-streamed
+      when ``chunk_size`` is set).
+    * :meth:`ExploreSpec.mixed` — guided mixed-precision co-exploration
+      of one workload (the QADAM direction), optionally under a serving
+      ``traffic`` trace.
+    * :meth:`ExploreSpec.many` — a workload suite: uniform precision
+      enumerates the batch per workload; ``precision="mixed"`` runs the
+      shared-hardware / per-workload-precision QUIDAM search.
+
+    Fields not meaningful for the selected mode must stay at their
+    defaults — ``__post_init__`` rejects contradictory combinations
+    early, before any evaluation work.
+    """
+
+    workloads: tuple = ()
+    precision: str = "uniform"          # "uniform" | "mixed"
+    # uniform-precision knobs
+    configs: tuple | None = None
+    engine: str = "batched"             # "batched" | "scalar"
+    outputs: str = "points"             # "points" | "sweep" | "aggregates"
+    cache: object = None                # persisted synthesis cache (chunked)
+    save_cache: bool = True
+    overlap: bool = True
+    # mixed-precision (search) knobs
+    preset: str | None = None
+    method: str | None = None
+    budget: int | None = None
+    objectives: tuple | None = None
+    traffic: object = None
+    n_slots: int | None = None
+    ref_point: tuple | None = None
+    weights: tuple | None = None
+    sqnr_floor_db: object = None
+    space_overrides: dict | None = None
+    search_kwargs: dict | None = None
+    # shared knobs
+    seed: int | None = None
+    backend: str = "auto"
+    mesh: object = None
+    use_cache: bool = True
+    chunk_size: int | None = None
+
+    def __post_init__(self):
+        if not self.workloads:
+            raise ValueError("ExploreSpec needs at least one workload")
+        object.__setattr__(self, "workloads", tuple(self.workloads))
+        if self.precision not in ("uniform", "mixed"):
+            raise ValueError(
+                f"precision must be 'uniform' or 'mixed', "
+                f"got {self.precision!r}")
+        if self.outputs not in _OUTPUT_MODES:
+            raise ValueError(
+                f"unknown outputs mode {self.outputs!r} "
+                f"(choose from {_OUTPUT_MODES})")
+        if self.engine not in ("batched", "scalar"):
+            raise ValueError(f"unknown DSE engine: {self.engine!r}")
+        if self.configs is not None and self.chunk_size is None:
+            # chunk-streamed feeds stay lazy (generators of configs or
+            # SoA chunks); everything else materializes once up front
+            object.__setattr__(self, "configs", tuple(self.configs))
+        if self.objectives is not None:
+            object.__setattr__(self, "objectives", tuple(self.objectives))
+        if self.chunk_size is not None and self.chunk_size < 1:
+            raise ValueError(
+                f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.precision == "uniform":
+            bad = [n for n, v in (
+                ("preset", self.preset), ("method", self.method),
+                ("budget", self.budget), ("objectives", self.objectives),
+                ("traffic", self.traffic), ("n_slots", self.n_slots),
+                ("ref_point", self.ref_point), ("weights", self.weights),
+                ("sqnr_floor_db", self.sqnr_floor_db),
+                ("space_overrides", self.space_overrides),
+                ("search_kwargs", self.search_kwargs)) if v is not None]
+            if bad:
+                raise ValueError(
+                    f"search knob(s) {bad} only apply to "
+                    f'precision="mixed" specs')
+            if self.chunk_size is not None and len(self.workloads) > 1:
+                raise ValueError(
+                    "chunked streaming (chunk_size=) supports a single "
+                    "workload; sweep the suite per workload instead")
+            if self.engine == "scalar" and (self.outputs != "points"
+                                            or self.chunk_size is not None):
+                raise ValueError(
+                    'engine="scalar" only supports outputs="points" '
+                    'without chunking')
+        else:
+            bad = [n for n, v in (
+                ("configs", self.configs),
+                ("cache", self.cache)) if v is not None]
+            if self.engine != "batched":
+                bad.append("engine")
+            if self.outputs != "points":
+                bad.append("outputs")
+            if bad:
+                raise ValueError(
+                    f"sweep knob(s) {bad} only apply to "
+                    f'precision="uniform" specs')
+            if (self.weights is not None or self.sqnr_floor_db is not None) \
+                    and len(self.workloads) == 1:
+                raise ValueError(
+                    "weights/sqnr_floor_db aggregate across a workload "
+                    "suite; pass >= 2 workloads")
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def single(cls, workload, configs=None, *, engine: str = "batched",
+               outputs: str = "points", chunk_size: int | None = None,
+               backend: str = "auto", mesh=None, use_cache: bool = True,
+               cache=None, save_cache: bool = True,
+               overlap: bool = True) -> "ExploreSpec":
+        """Uniform-precision sweep of one workload over a config batch
+        (the whole design space when ``configs`` is None).  A
+        ``chunk_size`` streams an arbitrary-size config feed with bounded
+        memory and returns the accumulated :class:`ChunkedSweep`."""
+        return cls(workloads=(workload,), precision="uniform",
+                   configs=configs, engine=engine, outputs=outputs,
+                   chunk_size=chunk_size, backend=backend, mesh=mesh,
+                   use_cache=use_cache, cache=cache,
+                   save_cache=save_cache, overlap=overlap)
+
+    @classmethod
+    def mixed(cls, workload, *, preset: str | None = None,
+              method: str | None = None, budget: int | None = None,
+              objectives=None, traffic=None, n_slots: int | None = None,
+              seed: int | None = None, ref_point=None,
+              space_overrides: dict | None = None,
+              chunk_size: int | None = None, backend: str = "auto",
+              mesh=None, **search_kwargs) -> "ExploreSpec":
+        """Guided mixed-precision co-exploration of one workload; a
+        ``traffic`` trace switches the objectives to the serving-fleet
+        set (tail latency / SLO attainment / throughput / energy per
+        served token)."""
+        return cls(workloads=(workload,), precision="mixed",
+                   preset=preset, method=method, budget=budget,
+                   objectives=objectives, traffic=traffic, n_slots=n_slots,
+                   seed=seed, ref_point=ref_point,
+                   space_overrides=space_overrides, chunk_size=chunk_size,
+                   backend=backend, mesh=mesh,
+                   search_kwargs=search_kwargs or None)
+
+    @classmethod
+    def many(cls, workloads, *, precision: str = "uniform",
+             configs=None, outputs: str = "points",
+             preset: str | None = None, method: str | None = None,
+             budget: int | None = None, objectives=None,
+             weights=None, sqnr_floor_db=None, seed: int | None = None,
+             ref_point=None, space_overrides: dict | None = None,
+             chunk_size: int | None = None, backend: str = "auto",
+             mesh=None, use_cache: bool = True,
+             **search_kwargs) -> "ExploreSpec":
+        """A workload suite.  ``precision="uniform"`` enumerates the
+        config batch once per workload (synthesis shared);
+        ``precision="mixed"`` searches one shared hardware config with a
+        per-workload precision assignment (the QUIDAM setting)."""
+        if precision == "uniform" and search_kwargs:
+            raise ValueError(
+                f"search kwarg(s) {sorted(search_kwargs)} only apply to "
+                f'precision="mixed" specs')
+        return cls(workloads=tuple(workloads), precision=precision,
+                   configs=None if configs is None else tuple(configs),
+                   outputs=outputs, preset=preset, method=method,
+                   budget=budget, objectives=objectives, weights=weights,
+                   sqnr_floor_db=sqnr_floor_db, seed=seed,
+                   ref_point=ref_point, space_overrides=space_overrides,
+                   chunk_size=chunk_size, backend=backend, mesh=mesh,
+                   use_cache=use_cache,
+                   search_kwargs=search_kwargs or None)
+
+
+def run(spec: ExploreSpec):
+    """Execute an :class:`ExploreSpec` — the unified exploration entry
+    point.
+
+    Returns, by mode:
+
+    * uniform, one workload — :class:`DSEResult` /
+      :class:`~repro.core.dse_batch.BatchedSweep` (per ``outputs``), or a
+      :class:`~repro.core.dse_batch.ChunkedSweep` when ``chunk_size``
+      streams the feed.
+    * uniform, many workloads — ``{workload_name: result}`` dict.
+    * mixed — a :class:`repro.explore.search.SearchResult`.
+    """
+    if not isinstance(spec, ExploreSpec):
+        raise TypeError(
+            f"run() takes an ExploreSpec, got {type(spec).__name__}; "
+            f"build one with ExploreSpec.single/.mixed/.many")
+    extra = dict(spec.search_kwargs or {})
+    if spec.precision == "mixed":
+        if len(spec.workloads) == 1:
+            return _coexplore(
+                spec.workloads[0],
+                preset="default" if spec.preset is None else spec.preset,
+                method=spec.method, budget=spec.budget, seed=spec.seed,
+                backend=spec.backend, objectives=spec.objectives,
+                ref_point=spec.ref_point, mesh=spec.mesh,
+                space_overrides=spec.space_overrides,
+                traffic=spec.traffic, n_slots=spec.n_slots,
+                chunk_size=spec.chunk_size, **extra)
+        return _coexplore_many(
+            spec.workloads,
+            preset="many-default" if spec.preset is None else spec.preset,
+            method=spec.method, budget=spec.budget, seed=spec.seed,
+            backend=spec.backend, objectives=spec.objectives,
+            ref_point=spec.ref_point, weights=spec.weights,
+            sqnr_floor_db=spec.sqnr_floor_db, mesh=spec.mesh,
+            space_overrides=spec.space_overrides,
+            chunk_size=spec.chunk_size, **extra)
+    # uniform precision
+    if len(spec.workloads) > 1:
+        return _explore_many(
+            spec.workloads, spec.configs, use_cache=spec.use_cache,
+            backend=spec.backend, mesh=spec.mesh, outputs=spec.outputs)
+    wl = spec.workloads[0]
+    if spec.chunk_size is not None:
+        if spec.configs is None:
+            raise ValueError(
+                "chunked streaming needs an explicit config feed "
+                "(configs=); the default design space fits in one batch")
+        if spec.outputs != "points":
+            raise ValueError(
+                "chunked streaming returns a ChunkedSweep (aggregates "
+                'only); leave outputs="points"')
+        return _explore_chunked(
+            wl, spec.configs, chunk_size=spec.chunk_size,
+            backend=spec.backend, use_cache=spec.use_cache,
+            cache=spec.cache, save_cache=spec.save_cache, mesh=spec.mesh,
+            overlap=spec.overlap)
+    return _explore(wl, spec.configs, engine=spec.engine,
+                    use_cache=spec.use_cache, backend=spec.backend,
+                    mesh=spec.mesh, outputs=spec.outputs)
+
+
+# --------------------------------------------------------------------------
+# Deprecated entry points (pre-ExploreSpec API), kept one release.
+# --------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    import warnings
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def explore(*args, **kwargs):
+    """Deprecated alias — use
+    ``run(ExploreSpec.single(workload, configs))``."""
+    _deprecated("repro.core.dse.explore",
+                "repro.core.dse.run(ExploreSpec.single(workload, configs))")
+    return _explore(*args, **kwargs)
+
+
+def explore_scalar(*args, **kwargs):
+    """Deprecated alias — use
+    ``run(ExploreSpec.single(workload, configs, engine="scalar"))``."""
+    _deprecated(
+        "repro.core.dse.explore_scalar",
+        'repro.core.dse.run(ExploreSpec.single(workload, configs, '
+        'engine="scalar"))')
+    return _explore_scalar(*args, **kwargs)
+
+
+def explore_many(*args, **kwargs):
+    """Deprecated alias — use
+    ``run(ExploreSpec.many(workloads, configs=...))``."""
+    _deprecated("repro.core.dse.explore_many",
+                "repro.core.dse.run(ExploreSpec.many(workloads, "
+                "configs=...))")
+    return _explore_many(*args, **kwargs)
+
+
+def explore_chunked(workload, configs, **kwargs):
+    """Deprecated alias — use
+    ``run(ExploreSpec.single(workload, configs, chunk_size=...))``."""
+    _deprecated(
+        "repro.core.dse.explore_chunked",
+        "repro.core.dse.run(ExploreSpec.single(workload, configs, "
+        "chunk_size=...))")
+    kwargs.setdefault("chunk_size", 32768)
+    kwargs.setdefault("use_cache", False)
+    return _explore_chunked(workload, configs, **kwargs)
+
+
+def coexplore(*args, **kwargs):
+    """Deprecated alias — use
+    ``run(ExploreSpec.mixed(workload, preset=...))``."""
+    _deprecated("repro.core.dse.coexplore",
+                "repro.core.dse.run(ExploreSpec.mixed(workload, "
+                "preset=...))")
+    return _coexplore(*args, **kwargs)
+
+
+def coexplore_many(*args, **kwargs):
+    """Deprecated alias — use
+    ``run(ExploreSpec.many(workloads, precision="mixed", preset=...))``."""
+    _deprecated(
+        "repro.core.dse.coexplore_many",
+        'repro.core.dse.run(ExploreSpec.many(workloads, '
+        'precision="mixed", preset=...))')
+    return _coexplore_many(*args, **kwargs)

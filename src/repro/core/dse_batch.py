@@ -619,15 +619,15 @@ def _make_cfg_lay(soa: dict, cols: dict, wb: WorkloadBatch
     return cfg, lay
 
 
-def sweep_workload(workload: Workload,
-                   configs: Sequence[AcceleratorConfig],
-                   reports: Sequence[SynthesisReport] | dict | None = None,
-                   *,
-                   use_cache: bool = True,
-                   backend: str = "auto",
-                   soa: dict[str, np.ndarray] | None = None,
-                   mesh=None,
-                   outputs: str = "full") -> BatchedSweep:
+def _sweep_workload(workload: Workload,
+                    configs: Sequence[AcceleratorConfig],
+                    reports: Sequence[SynthesisReport] | dict | None = None,
+                    *,
+                    use_cache: bool = True,
+                    backend: str = "auto",
+                    soa: dict[str, np.ndarray] | None = None,
+                    mesh=None,
+                    outputs: str = "full") -> BatchedSweep:
     """Evaluate ``workload`` on every config in one batched pass.
 
     ``reports``/``soa`` let :func:`repro.core.dse.explore_many` synthesize
@@ -716,15 +716,15 @@ def check_assignment(soa: dict, assign: np.ndarray) -> None:
             f"executable on their hardware PE type")
 
 
-def sweep_mixed(workload: Workload,
-                soa: dict[str, np.ndarray],
-                assign: np.ndarray,
-                cols: dict[str, np.ndarray] | None = None,
-                *,
-                use_cache: bool = True,
-                backend: str = "auto",
-                outputs: str = "aggregates",
-                mesh=None) -> dict[str, np.ndarray]:
+def _sweep_mixed(workload: Workload,
+                 soa: dict[str, np.ndarray],
+                 assign: np.ndarray,
+                 cols: dict[str, np.ndarray] | None = None,
+                 *,
+                 use_cache: bool = True,
+                 backend: str = "auto",
+                 outputs: str = "aggregates",
+                 mesh=None) -> dict[str, np.ndarray]:
     """Evaluate a batch of mixed-precision genomes in one fused pass.
 
     ``soa`` is the hardware half of the genome batch
@@ -906,14 +906,14 @@ def get_jax_many_kernel(bounds: tuple[tuple[int, int], ...], mesh=None):
     return fn, exact
 
 
-def sweep_mixed_many(workloads: Sequence[Workload],
-                     soa: dict[str, np.ndarray],
-                     assigns: Sequence[np.ndarray],
-                     cols: dict[str, np.ndarray] | None = None,
-                     *,
-                     use_cache: bool = True,
-                     backend: str = "auto",
-                     mesh=None) -> dict[str, np.ndarray]:
+def _sweep_mixed_many(workloads: Sequence[Workload],
+                      soa: dict[str, np.ndarray],
+                      assigns: Sequence[np.ndarray],
+                      cols: dict[str, np.ndarray] | None = None,
+                      *,
+                      use_cache: bool = True,
+                      backend: str = "auto",
+                      mesh=None) -> dict[str, np.ndarray]:
     """Evaluate one genome batch against W workloads in one fused pass.
 
     ``soa`` is the shared hardware half (N configs); ``assigns`` holds one
@@ -1105,16 +1105,16 @@ def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
     return kernel
 
 
-def sweep_chunked(workload: Workload,
-                  configs: Iterable,
-                  *,
-                  backend: str = "auto",
-                  chunk_size: int = 32768,
-                  use_cache: bool = False,
-                  cache: PersistentSynthesisCache | str | None = None,
-                  save_cache: bool = True,
-                  mesh=None,
-                  overlap: bool = True) -> ChunkedSweep:
+def _sweep_chunked(workload: Workload,
+                   configs: Iterable,
+                   *,
+                   backend: str = "auto",
+                   chunk_size: int = 32768,
+                   use_cache: bool = False,
+                   cache: PersistentSynthesisCache | str | None = None,
+                   save_cache: bool = True,
+                   mesh=None,
+                   overlap: bool = True) -> ChunkedSweep:
     """Stream an arbitrary-size config feed through the sweep engine in
     bounded memory, keeping only running aggregates + the Pareto front.
 
@@ -1298,3 +1298,60 @@ def pareto_mask(perf: np.ndarray, energy: np.ndarray,
     if perf.shape[0] <= 2048:
         return _pareto_mask_bcast(perf, energy, chunk)
     return _pareto_mask_sorted(perf, energy)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated public entry points (one-release shims)
+#
+# The kernel-level sweep API is consolidated behind
+# ``repro.core.dse.run(ExploreSpec)``: config-batch sweeps are
+# ``ExploreSpec.single(..., outputs="sweep")`` (add ``chunk_size=`` for the
+# streamed engine), and mixed-precision genome evaluation lives in
+# ``repro.explore.search.Evaluator`` (driven by ``ExploreSpec.mixed()`` /
+# ``.many()``).  These wrappers forward verbatim and warn; in-repo code
+# must call the private implementations (CI runs the test suite with
+# ``error::DeprecationWarning:repro``).
+# ---------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    import warnings
+    warnings.warn(
+        f"{old} is deprecated; use {new}",
+        DeprecationWarning, stacklevel=3)
+
+
+def sweep_workload(*args, **kwargs) -> BatchedSweep:
+    """Deprecated: use ``repro.core.dse.run`` with
+    ``ExploreSpec.single(..., outputs="sweep")``."""
+    _deprecated("repro.core.dse_batch.sweep_workload",
+                'repro.core.dse.run(ExploreSpec.single(..., '
+                'outputs="sweep"))')
+    return _sweep_workload(*args, **kwargs)
+
+
+def sweep_mixed(*args, **kwargs) -> dict[str, np.ndarray]:
+    """Deprecated: use ``repro.explore.search.Evaluator`` (driven by
+    ``repro.core.dse.run`` + ``ExploreSpec.mixed()``)."""
+    _deprecated("repro.core.dse_batch.sweep_mixed",
+                "repro.explore.search.Evaluator / "
+                "repro.core.dse.run(ExploreSpec.mixed(...))")
+    return _sweep_mixed(*args, **kwargs)
+
+
+def sweep_mixed_many(*args, **kwargs) -> dict[str, np.ndarray]:
+    """Deprecated: use ``repro.explore.search.Evaluator`` (driven by
+    ``repro.core.dse.run`` + ``ExploreSpec.many(precision="mixed")``)."""
+    _deprecated("repro.core.dse_batch.sweep_mixed_many",
+                "repro.explore.search.Evaluator / "
+                'repro.core.dse.run(ExploreSpec.many(..., '
+                'precision="mixed"))')
+    return _sweep_mixed_many(*args, **kwargs)
+
+
+def sweep_chunked(*args, **kwargs) -> ChunkedSweep:
+    """Deprecated: use ``repro.core.dse.run`` with
+    ``ExploreSpec.single(..., outputs="sweep", chunk_size=...)``."""
+    _deprecated("repro.core.dse_batch.sweep_chunked",
+                'repro.core.dse.run(ExploreSpec.single(..., '
+                'outputs="sweep", chunk_size=...))')
+    return _sweep_chunked(*args, **kwargs)

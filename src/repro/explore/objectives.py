@@ -26,6 +26,19 @@ OBJECTIVES = ("neg_perf_per_area", "energy_j", "edp", "area_mm2",
               "quant_noise")
 DEFAULT_OBJECTIVES = ("neg_perf_per_area", "energy_j", "quant_noise")
 
+# serving-fleet objectives (single-workload only): the candidate's fused
+# sweep aggregates feed the trace-driven fleet simulator
+# (repro.serving.fleet_sim) and the search optimizes what a serving
+# deployment actually pays for — tail latency under load, SLO hit rate,
+# sustained token throughput, energy per *served* token (occupancy-
+# sensitive: idle slots still burn the full batch dispatch).  All
+# minimized, so attainment/throughput are negated.
+SERVING_OBJECTIVES = ("p50_latency_s", "p99_latency_s",
+                      "neg_slo_attainment", "neg_throughput_tps",
+                      "energy_per_token_j")
+DEFAULT_SERVING_OBJECTIVES = ("p99_latency_s", "energy_per_token_j",
+                              "quant_noise")
+
 # multi-workload objectives (shared hardware, per-workload assignments):
 # worst_* is the max over the workload suite, mean_* the weighted mean
 # (default weights: each workload's share of the genome's total energy)
@@ -146,16 +159,55 @@ def quant_noise(assign: np.ndarray, layer_macs: np.ndarray) -> np.ndarray:
     return table[np.asarray(assign, dtype=np.int64)] @ wts
 
 
+def serving_metrics(agg: dict[str, np.ndarray], traffic, *,
+                    n_slots: int = 8,
+                    sim_backend: str = "numpy") -> dict[str, np.ndarray]:
+    """Fleet-simulator metrics for every candidate in a sweep aggregate.
+
+    Each candidate's ``latency_s`` is one batcher iteration and
+    ``energy_j`` one token-slot of energy; the shared ``traffic`` trace
+    is replayed on an ``n_slots`` fleet per candidate.  The simulator's
+    integer core is bit-identical across its backends, so the default
+    ``sim_backend="numpy"`` (which also avoids per-horizon jax
+    recompiles) loses nothing — parity is pinned in
+    ``tests/test_fleet_sim.py``.
+    """
+    from repro.serving.fleet_sim import simulate_fleet
+    res = simulate_fleet(np.asarray(agg["latency_s"], dtype=np.float64),
+                         np.asarray(agg["energy_j"], dtype=np.float64),
+                         traffic, n_slots=n_slots, backend=sim_backend)
+    return res.metrics()
+
+
 def objective_matrix(agg: dict[str, np.ndarray],
                      assign: np.ndarray,
                      layer_macs: np.ndarray,
-                     objectives=DEFAULT_OBJECTIVES) -> np.ndarray:
+                     objectives=DEFAULT_OBJECTIVES, *,
+                     traffic=None, n_slots: int = 8,
+                     sim_backend: str = "numpy") -> np.ndarray:
     """Assemble the ``(N, K)`` minimization matrix from sweep aggregates.
 
-    ``agg`` is :func:`repro.core.dse_batch.sweep_mixed` output (the
-    aggregate columns plus ``area_mm2``); every objective is oriented so
-    smaller is better.
+    ``agg`` is the fused mixed-precision sweep output (the aggregate
+    columns plus ``area_mm2``); every objective is oriented so smaller is
+    better.  Serving-fleet objectives (:data:`SERVING_OBJECTIVES`)
+    require ``traffic`` — a trace / preset / preset name (see
+    :func:`repro.serving.traffic.resolve_traffic`); an overloaded
+    candidate's infinite tail latency / energy-per-token is clamped to
+    :data:`FLOOR_PENALTY` so it stays comparable yet always dominated.
     """
+    need_serving = [n for n in objectives if n in SERVING_OBJECTIVES]
+    fleet = None
+    if need_serving:
+        if traffic is None:
+            raise ValueError(
+                f"objectives {need_serving} need traffic= (a TrafficTrace,"
+                f" TrafficPreset, or preset name)")
+        fleet = serving_metrics(agg, traffic, n_slots=n_slots,
+                                sim_backend=sim_backend)
+
+    def clamp(col):
+        return np.minimum(np.asarray(col, dtype=np.float64), FLOOR_PENALTY)
+
     cols = []
     for name in objectives:
         if name == "neg_perf_per_area":
@@ -169,9 +221,20 @@ def objective_matrix(agg: dict[str, np.ndarray],
             cols.append(np.asarray(agg["area_mm2"], dtype=np.float64))
         elif name == "quant_noise":
             cols.append(quant_noise(assign, layer_macs))
+        elif name in ("p50_latency_s", "p99_latency_s"):
+            cols.append(clamp(fleet[name]))
+        elif name == "neg_slo_attainment":
+            cols.append(-np.asarray(fleet["slo_attainment"],
+                                    dtype=np.float64))
+        elif name == "neg_throughput_tps":
+            cols.append(-np.asarray(fleet["throughput_tps"],
+                                    dtype=np.float64))
+        elif name == "energy_per_token_j":
+            cols.append(clamp(fleet["energy_per_token_j"]))
         else:
             raise ValueError(
-                f"unknown objective {name!r} (choose from {OBJECTIVES})")
+                f"unknown objective {name!r} (choose from "
+                f"{OBJECTIVES + SERVING_OBJECTIVES})")
     return np.stack(cols, axis=-1)
 
 

@@ -29,11 +29,13 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.dse_batch import (_mesh_shards, resolve_backend,
-                                  sweep_mixed, sweep_mixed_many)
+from repro.core.dse_batch import (_mesh_shards, _sweep_mixed,
+                                  _sweep_mixed_many, resolve_backend)
 from repro.core.workloads import Workload, get_workload
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       DEFAULT_OBJECTIVES,
+                                      DEFAULT_SERVING_OBJECTIVES,
+                                      SERVING_OBJECTIVES,
                                       multi_objective_matrix,
                                       objective_matrix)
 from repro.explore.pareto import (crowding_distance, hypervolume,
@@ -142,7 +144,8 @@ class Evaluator:
                  objectives: Sequence[str] | None = None,
                  *, backend: str = "auto", chunk_size: int = 4096,
                  use_cache: bool = True, weights=None,
-                 sqnr_floor_db=None, mesh=None):
+                 sqnr_floor_db=None, mesh=None, traffic=None,
+                 n_slots: int = 8):
         self.space = space
         self.multi = isinstance(workload, (list, tuple))
         if self.multi:
@@ -168,9 +171,38 @@ class Evaluator:
                     f"{wl.name!r} has {len(wl.layers)} layers")
             self.workloads = (wl,)
             self.workload = wl
-        self.objectives = tuple(
-            (DEFAULT_MULTI_OBJECTIVES if self.multi else DEFAULT_OBJECTIVES)
-            if objectives is None else objectives)
+        # traffic= switches the default objective set to the serving
+        # triple; explicit serving objectives without a trace are an
+        # error (the fleet simulator needs a workload to replay), as is
+        # serving in multi-workload mode (one trace drives one fleet)
+        if objectives is None:
+            if traffic is not None and not self.multi:
+                objectives = DEFAULT_SERVING_OBJECTIVES
+            else:
+                objectives = (DEFAULT_MULTI_OBJECTIVES if self.multi
+                              else DEFAULT_OBJECTIVES)
+        self.objectives = tuple(objectives)
+        serving = [o for o in self.objectives if o in SERVING_OBJECTIVES]
+        if serving and self.multi:
+            raise ValueError(
+                f"serving objectives {serving} are single-workload only "
+                f"(one traffic trace drives one fleet)")
+        if serving and traffic is None:
+            raise ValueError(
+                f"objectives {serving} need traffic= (a TrafficTrace, "
+                f"TrafficPreset, or preset name)")
+        if traffic is not None and not serving:
+            raise ValueError(
+                f"traffic= given but no serving objective in "
+                f"{self.objectives}; add one of {SERVING_OBJECTIVES} or "
+                f"drop traffic=")
+        if traffic is not None:
+            from repro.serving.traffic import resolve_traffic
+            traffic = resolve_traffic(traffic)
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.traffic = traffic
+        self.n_slots = int(n_slots)
         self.backend = resolve_backend(backend)
         self.chunk_size = int(chunk_size)
         self.use_cache = use_cache
@@ -234,9 +266,9 @@ class Evaluator:
             bounds = self.space.segment_bounds
             assigns = [assign[:, s:e][:, :len(w.layers)]
                        for (s, e), w in zip(bounds, wls)]
-            agg = sweep_mixed_many(wls, soa, assigns,
-                                   use_cache=self.use_cache,
-                                   backend=self.backend, mesh=self.mesh)
+            agg = _sweep_mixed_many(wls, soa, assigns,
+                                    use_cache=self.use_cache,
+                                    backend=self.backend, mesh=self.mesh)
             agg = {k: np.asarray(v)[:, :n_real]
                    for k, v in agg.items() if np.ndim(v) == 2}
             return multi_objective_matrix(
@@ -244,14 +276,16 @@ class Evaluator:
                 self.objectives, weights=self.weights,
                 sqnr_floor_db=self.sqnr_floor_db)
         wl, = wls
-        agg = sweep_mixed(wl, soa, assign[:, :len(wl.layers)],
-                          use_cache=self.use_cache,
-                          backend=self.backend, outputs="aggregates",
-                          mesh=self.mesh)
+        agg = _sweep_mixed(wl, soa, assign[:, :len(wl.layers)],
+                           use_cache=self.use_cache,
+                           backend=self.backend, outputs="aggregates",
+                           mesh=self.mesh)
         return objective_matrix({k: np.asarray(v)[:n_real]
                                  for k, v in agg.items()},
                                 assign[:n_real, :len(wl.layers)],
-                                macs[0], self.objectives)
+                                macs[0], self.objectives,
+                                traffic=self.traffic,
+                                n_slots=self.n_slots)
 
     def evaluate(self, genomes: np.ndarray,
                  subset: int | None = None) -> np.ndarray:
@@ -307,6 +341,9 @@ class Evaluator:
             "n_workloads": len(self.workloads),
             "mesh_shards": (None if self.mesh is None else
                             _mesh_shards(self.mesh)),
+            "traffic": (None if self.traffic is None
+                        else self.traffic.name),
+            "n_slots": (None if self.traffic is None else self.n_slots),
         }
 
 
@@ -332,10 +369,11 @@ def _result(method: str, ev: Evaluator, seed: int, genomes, F,
 def random_search(space: CoExploreSpace, workload, budget: int, *,
                   objectives: Sequence[str] | None = None,
                   seed: int = 0, backend: str = "auto",
-                  chunk_size: int = 4096, batch: int | None = None,
+                  chunk_size: int = 4096, batch_size: int | None = None,
                   ref_point: np.ndarray | None = None,
                   weights=None, sqnr_floor_db=None,
-                  mesh=None) -> SearchResult:
+                  mesh=None, traffic=None, n_slots: int = 8,
+                  batch: int | None = None) -> SearchResult:
     """Uniform-random baseline: ``budget`` independent genomes, running
     non-dominated reduction, hypervolume recorded per batch.
 
@@ -343,17 +381,28 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
     co-exploration — then ``space`` must be a
     :class:`~repro.explore.space.CoExploreManySpace`; ``weights`` and
     ``sqnr_floor_db`` configure the suite objectives, see
-    :class:`Evaluator`).  Same for the other engines.
+    :class:`Evaluator`).  ``traffic=`` switches to serving-fleet
+    objectives over an ``n_slots`` fleet.  Same for the other engines.
+    ``batch=`` is the deprecated spelling of ``batch_size=``.
     """
+    if batch is not None:
+        import warnings
+        warnings.warn(
+            "random_search(batch=...) is deprecated; use batch_size=",
+            DeprecationWarning, stacklevel=2)
+        if batch_size is None:
+            batch_size = batch
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, mesh=mesh)
+                   sqnr_floor_db=sqnr_floor_db, mesh=mesh,
+                   traffic=traffic, n_slots=n_slots)
     if budget < 1:
         raise ValueError("budget must be >= 1")
-    if batch is not None and batch < 1:
-        raise ValueError("batch must be >= 1")
-    batch = min(budget, 256) if batch is None else min(batch, budget)
+    if batch_size is not None and batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    batch_size = (min(budget, 256) if batch_size is None
+                  else min(batch_size, budget))
     front_g = np.empty((0, space.genome_width), dtype=np.int64)
     front_F = np.empty((0, len(ev.objectives)), dtype=np.float64)
     history: list[tuple[int, float]] = []
@@ -361,7 +410,7 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
     ref = ref_point
     evals = 0
     while evals < budget:
-        n = min(batch, budget - evals)
+        n = min(batch_size, budget - evals)
         g = space.random_population(n, rng)
         F = ev.evaluate(g)
         evals += n
@@ -402,7 +451,8 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
           seed: int = 0, backend: str = "auto", chunk_size: int = 4096,
           mutation_rate: float = 0.08,
           ref_point: np.ndarray | None = None,
-          weights=None, sqnr_floor_db=None, mesh=None) -> SearchResult:
+          weights=None, sqnr_floor_db=None, mesh=None,
+          traffic=None, n_slots: int = 8) -> SearchResult:
     """NSGA-II-style evolutionary multi-objective search.
 
     Classic loop: elitist (mu + lambda) survival over non-domination rank
@@ -427,7 +477,8 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, mesh=mesh)
+                   sqnr_floor_db=sqnr_floor_db, mesh=mesh,
+                   traffic=traffic, n_slots=n_slots)
     pop = space.random_population(min(pop_size, budget), rng)
     F = ev.evaluate(pop)
     evals = len(pop)
@@ -471,7 +522,8 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
                        chunk_size: int = 4096, min_layers: int = 2,
                        ref_point: np.ndarray | None = None,
                        weights=None, sqnr_floor_db=None,
-                       mesh=None) -> SearchResult:
+                       mesh=None, traffic=None,
+                       n_slots: int = 8) -> SearchResult:
     """Successive halving over workload layer-prefix subsets.
 
     Rung ``r`` evaluates its population on the first ``m_r`` layers only
@@ -489,7 +541,8 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, mesh=mesh)
+                   sqnr_floor_db=sqnr_floor_db, mesh=mesh,
+                   traffic=traffic, n_slots=n_slots)
     L = ev.full_subset
     sizes = [L]
     while sizes[-1] > min(min_layers, L) and len(sizes) < 4:

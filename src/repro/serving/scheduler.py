@@ -30,6 +30,13 @@ class Request:
     # filled by the batcher
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # iteration stamps: admitted at the start of iteration `submit_iter`,
+    # done by the end of iteration `complete_iter - 1`.  A request with P
+    # prompt and G new tokens completes at submit_iter + P + G - 1 —
+    # the contract the fleet simulator (serving/fleet_sim.py) reproduces,
+    # with this batcher as the golden latency reference.
+    submit_iter: int = -1
+    complete_iter: int = 0
 
 
 class ContinuousBatcher:
@@ -50,6 +57,7 @@ class ContinuousBatcher:
         self.next_tok = np.zeros(n_slots, np.int32)
         self._step = jax.jit(model.decode_step)
         self.completed: list[Request] = []
+        self.it = 0                       # iteration counter (wall clock)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -59,6 +67,7 @@ class ContinuousBatcher:
             if self.state[s] == self.FREE and self.queue:
                 req = self.queue.popleft()
                 self.slot_req[s] = req
+                req.submit_iter = self.it
                 self.state[s] = self.PREFILL
                 self.pos[s] = 0
                 self.cursor[s] = 0
@@ -69,9 +78,16 @@ class ContinuousBatcher:
         return bool(self.queue) or bool((self.state != self.FREE).any())
 
     def step(self):
-        """One iteration: every non-free slot advances one token."""
+        """One iteration: every non-free slot advances one token.
+
+        The iteration counter advances even when every slot is idle, so
+        a caller pacing submissions against wall-clock arrival times can
+        model idle gaps (this is what makes the batcher usable as the
+        fleet-sim golden reference).
+        """
         self._admit()
         if not (self.state != self.FREE).any():
+            self.it += 1
             return
         tokens = jnp.asarray(self.next_tok)[:, None]
         pos = jnp.asarray(self.pos)
@@ -100,13 +116,27 @@ class ContinuousBatcher:
                     len(req.generated) >= req.max_new
                     or self.pos[s] >= self.max_seq - 1):
                 req.done = True
+                req.complete_iter = self.it + 1
                 self.completed.append(req)
                 self.state[s] = self.FREE
                 self.slot_req[s] = None
+        self.it += 1
 
     def run(self, max_iters: int = 10000):
+        """Iterate until drained; raise if ``max_iters`` cuts serving short.
+
+        Previously a hit ``max_iters`` silently returned partial results;
+        in-flight and queued requests vanished without a trace.
+        """
         it = 0
         while self.busy and it < max_iters:
             self.step()
             it += 1
+        if self.busy:
+            in_flight = sum(1 for r in self.slot_req if r is not None)
+            raise RuntimeError(
+                f"ContinuousBatcher.run hit max_iters={max_iters} while "
+                f"busy: {len(self.completed)} completed, {in_flight} "
+                f"in flight, {len(self.queue)} queued — raise max_iters "
+                f"or drain incrementally with step()")
         return self.completed

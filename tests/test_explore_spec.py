@@ -1,0 +1,274 @@
+"""ExploreSpec / dse.run() facade: parity against every legacy entry
+point (bit-identical under numpy, <=1e-6 under jax), deprecation shims,
+spec validation, and the serving-objective plumbing (ISSUE 6 satellites
+1-3)."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core.accelerator import design_space
+from repro.core.dse import ExploreSpec, run
+from repro.core.workloads import get_workload
+
+CFGS = tuple(design_space())[:24]
+
+
+def _silently(fn, *args, **kwargs):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kwargs)
+
+
+def _points_equal(a, b):
+    assert len(a.points) == len(b.points)
+    for pa, pb in zip(a.points, b.points):
+        assert pa.config == pb.config
+        assert pa.result.energy_j == pb.result.energy_j
+        assert pa.result.perf_per_area == pb.result.perf_per_area
+
+
+# ---------------------------------------------------------------------------
+# every legacy entry point warns, and its run() equivalent is bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("call", [
+    lambda: dse.explore("vgg16", CFGS[:4], backend="numpy"),
+    lambda: dse.explore_scalar("vgg16", CFGS[:2]),
+    lambda: dse.explore_many(["vgg16"], CFGS[:4], backend="numpy"),
+    lambda: dse.explore_chunked("vgg16", CFGS[:8], chunk_size=4,
+                                backend="numpy"),
+])
+def test_legacy_dse_names_warn(call):
+    with pytest.warns(DeprecationWarning, match="deprecated.*ExploreSpec"):
+        call()
+
+
+def test_legacy_sweep_names_warn():
+    from repro.core import dse_batch
+    wl = get_workload("vgg16")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        dse_batch.sweep_workload(wl, CFGS[:4], backend="numpy")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        dse_batch.sweep_chunked(wl, CFGS[:8], chunk_size=4,
+                                backend="numpy")
+
+
+def test_single_parity_with_explore():
+    old = _silently(dse.explore, "vgg16", CFGS, backend="numpy")
+    new = run(ExploreSpec.single("vgg16", CFGS, backend="numpy"))
+    _points_equal(old, new)
+
+
+def test_single_scalar_engine_parity():
+    old = _silently(dse.explore_scalar, "vgg16", CFGS[:4])
+    new = run(ExploreSpec.single("vgg16", CFGS[:4], engine="scalar",
+                                 use_cache=False))
+    _points_equal(old, new)
+
+
+def test_single_outputs_modes():
+    sw = run(ExploreSpec.single("vgg16", CFGS, backend="numpy",
+                                outputs="sweep"))
+    ag = run(ExploreSpec.single("vgg16", CFGS, backend="numpy",
+                                outputs="aggregates"))
+    pts = run(ExploreSpec.single("vgg16", CFGS, backend="numpy"))
+    assert np.array_equal(sw.arrays["energy_j"], ag.arrays["energy_j"])
+    assert ag.arrays["energy_j"][0] == pts.points[0].result.energy_j
+
+
+def test_many_parity_with_explore_many():
+    old = _silently(dse.explore_many, ["vgg16", "resnet34"], CFGS,
+                    backend="numpy")
+    new = run(ExploreSpec.many(["vgg16", "resnet34"], configs=CFGS,
+                               backend="numpy"))
+    assert sorted(old) == sorted(new)
+    for k in old:
+        _points_equal(old[k], new[k])
+
+
+def test_chunked_parity_with_explore_chunked():
+    old = _silently(dse.explore_chunked, "vgg16", CFGS, chunk_size=8,
+                    backend="numpy")
+    new = run(ExploreSpec.single("vgg16", CFGS, chunk_size=8,
+                                 backend="numpy", use_cache=False))
+    assert old.n_configs == new.n_configs
+    assert np.array_equal(np.sort(old.front_metrics["energy_j"]),
+                          np.sort(new.front_metrics["energy_j"]))
+
+
+def test_mixed_parity_with_coexplore():
+    old = _silently(dse.coexplore, "vgg16", preset="quick", seed=7,
+                    backend="numpy", budget=64)
+    new = run(ExploreSpec.mixed("vgg16", preset="quick", seed=7,
+                                backend="numpy", budget=64))
+    assert np.array_equal(old.front_objectives, new.front_objectives)
+    assert np.array_equal(old.genomes, new.genomes)
+    assert old.objectives == new.objectives
+
+
+def test_many_mixed_parity_with_coexplore_many():
+    old = _silently(dse.coexplore_many, ["vgg16", "resnet34"],
+                    preset="many-quick", seed=3, backend="numpy",
+                    budget=64)
+    new = run(ExploreSpec.many(["vgg16", "resnet34"], precision="mixed",
+                               preset="many-quick", seed=3,
+                               backend="numpy", budget=64))
+    assert np.array_equal(old.front_objectives, new.front_objectives)
+    assert np.array_equal(old.genomes, new.genomes)
+
+
+def test_jax_front_parity(jax_usable):
+    """Facade under jax matches numpy to the backend contract (<=1e-6)."""
+    if not jax_usable:
+        pytest.skip("jax backend unusable")
+    a = run(ExploreSpec.mixed("vgg16", preset="quick", seed=7,
+                              backend="numpy", budget=64))
+    b = run(ExploreSpec.mixed("vgg16", preset="quick", seed=7,
+                              backend="jax", budget=64))
+    # identical search trajectory -> same genome set; objectives to 1e-6
+    assert np.array_equal(a.genomes, b.genomes)
+    denom = np.where(a.front_objectives == 0, 1.0, a.front_objectives)
+    rel = np.abs(b.front_objectives / denom - 1.0)
+    assert rel.max() < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_contradictions():
+    with pytest.raises(ValueError, match="at least one workload"):
+        ExploreSpec(workloads=())
+    with pytest.raises(ValueError, match="precision"):
+        ExploreSpec(workloads=("vgg16",), precision="both")
+    with pytest.raises(ValueError, match="outputs"):
+        ExploreSpec.single("vgg16", outputs="everything")
+    with pytest.raises(ValueError, match="engine"):
+        ExploreSpec.single("vgg16", engine="warp")
+    with pytest.raises(ValueError, match="search knob"):
+        ExploreSpec(workloads=("vgg16",), precision="uniform",
+                    budget=128)
+    with pytest.raises(ValueError, match="sweep knob"):
+        ExploreSpec(workloads=("vgg16",), precision="mixed",
+                    configs=CFGS[:2])
+    with pytest.raises(ValueError, match="single"):
+        ExploreSpec.many(["vgg16", "resnet34"], chunk_size=8)
+    with pytest.raises(ValueError, match="scalar"):
+        ExploreSpec.single("vgg16", engine="scalar", outputs="sweep")
+    with pytest.raises(ValueError, match="search kwarg"):
+        ExploreSpec.many(["vgg16", "resnet34"], pop_size=8)
+    with pytest.raises(ValueError, match=">= 2 workloads"):
+        ExploreSpec.mixed("vgg16").__class__(
+            workloads=("vgg16",), precision="mixed", weights=(1.0,))
+    with pytest.raises(TypeError, match="ExploreSpec"):
+        run("vgg16")
+
+
+def test_spec_chunked_needs_explicit_feed():
+    with pytest.raises(ValueError, match="explicit config feed"):
+        run(ExploreSpec.single("vgg16", chunk_size=8))
+
+
+def test_spec_chunked_feed_stays_lazy():
+    """A chunk-streamed generator feed must not be materialized at spec
+    construction — bounded memory is the whole point."""
+    pulled = []
+
+    def feed():
+        for c in CFGS:
+            pulled.append(c)
+            yield c
+
+    spec = ExploreSpec.single("vgg16", feed(), chunk_size=8,
+                              backend="numpy", use_cache=False)
+    assert pulled == []                    # untouched until run()
+    res = run(spec)
+    assert res.n_configs == len(CFGS) and len(pulled) == len(CFGS)
+
+
+# ---------------------------------------------------------------------------
+# serving objectives plumbing (traffic=)
+# ---------------------------------------------------------------------------
+
+def test_serving_objectives_via_facade():
+    res = run(ExploreSpec.mixed("vgg16", preset="quick", seed=7,
+                                backend="numpy", budget=64,
+                                traffic="quick"))
+    from repro.explore.objectives import DEFAULT_SERVING_OBJECTIVES
+    assert res.objectives == DEFAULT_SERVING_OBJECTIVES
+    assert res.stats["traffic"] == "quick"
+    assert res.stats["n_slots"] == 8
+    assert np.isfinite(res.front_objectives).all()
+
+
+def test_serving_preset_equals_explicit_traffic():
+    a = run(ExploreSpec.mixed("vgg16", preset="serving-quick", seed=2,
+                              backend="numpy", budget=64))
+    b = run(ExploreSpec.mixed("vgg16", preset="quick", seed=2,
+                              backend="numpy", budget=64,
+                              traffic="quick"))
+    assert a.objectives == b.objectives
+    assert np.array_equal(a.front_objectives, b.front_objectives)
+
+
+def test_serving_front_differs_from_edp_front():
+    """The acceptance claim in miniature: traffic-aware objectives select
+    a different front than per-inference EDP objectives."""
+    base = run(ExploreSpec.mixed("vgg16", preset="quick", seed=7,
+                                 backend="numpy", budget=96))
+    serv = run(ExploreSpec.mixed("vgg16", preset="quick", seed=7,
+                                 backend="numpy", budget=96,
+                                 traffic="steady"))
+    ga = {g.tobytes() for g in base.genomes}
+    gb = {g.tobytes() for g in serv.genomes}
+    assert ga != gb
+
+
+def test_evaluator_serving_validation():
+    from repro.explore.search import Evaluator
+    from repro.explore.space import space_for_workload, space_for_workloads
+    wl = get_workload("vgg16")
+    space = space_for_workload(wl)
+    with pytest.raises(ValueError, match="need traffic="):
+        Evaluator(space, wl, objectives=("p99_latency_s",))
+    with pytest.raises(ValueError, match="no serving objective"):
+        Evaluator(space, wl, objectives=("edp",), traffic="quick")
+    wls = (wl, get_workload("resnet34"))
+    mspace = space_for_workloads(wls)
+    with pytest.raises(ValueError, match="single-workload only"):
+        Evaluator(mspace, wls, objectives=("p99_latency_s",),
+                  traffic="quick")
+
+
+def test_objective_matrix_serving_floor_penalty():
+    """Overloaded candidates land on the finite floor penalty, keeping
+    hypervolume/nsga2 arithmetic finite."""
+    from repro.explore.objectives import FLOOR_PENALTY, objective_matrix
+    agg = {"latency_s": np.array([0.5]), "energy_j": np.array([1.0]),
+           "perf_per_area": np.array([1.0]), "area_mm2": np.array([1.0]),
+           "quant_noise": np.array([0.0])}
+    from repro.serving.traffic import resolve_traffic
+    f = objective_matrix(
+        agg, None, None,
+        objectives=("p99_latency_s", "energy_per_token_j"),
+        traffic=resolve_traffic("interactive"), n_slots=1)
+    assert np.isfinite(f).all()
+    assert (f <= FLOOR_PENALTY).all()
+    with pytest.raises(ValueError, match="traffic"):
+        objective_matrix(agg, None, None, objectives=("p99_latency_s",))
+
+
+def test_random_search_batch_kwarg_deprecated():
+    from repro.explore.search import random_search
+    from repro.explore.space import space_for_workload
+    wl = get_workload("vgg16")
+    space = space_for_workload(wl)
+    with pytest.warns(DeprecationWarning, match="batch_size"):
+        a = random_search(space, wl, 32, batch=16, seed=1,
+                          backend="numpy")
+    b = random_search(space, wl, 32, batch_size=16, seed=1,
+                      backend="numpy")
+    assert np.array_equal(a.front_objectives, b.front_objectives)

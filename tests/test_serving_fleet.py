@@ -1,0 +1,266 @@
+"""Serving-fleet simulator: scalar/numpy/jax equivalence, traffic traces,
+overload behavior, and the ContinuousBatcher as the golden latency
+reference (ISSUE 6 tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.serving.fleet_sim import (FleetResult, simulate_fleet,
+                                     simulate_fleet_scalar)
+from repro.serving.traffic import (TRAFFIC_PRESETS, TrafficPreset,
+                                   TrafficTrace, get_traffic, make_trace,
+                                   resolve_traffic)
+
+# a latency spread matching the paper design space (~0.02-0.9 s/iter)
+STEPS = np.array([0.02, 0.05, 0.11, 0.23, 0.45, 0.88])
+ETOK = np.array([0.4, 0.55, 0.8, 1.1, 1.9, 3.2])
+
+
+# ---------------------------------------------------------------------------
+# traffic traces
+# ---------------------------------------------------------------------------
+
+def test_presets_materialize_and_are_deterministic():
+    for name, preset in TRAFFIC_PRESETS.items():
+        t1 = make_trace(preset)
+        t2 = make_trace(name)
+        assert t1.n_requests == preset.n_requests
+        assert np.array_equal(t1.arrival_s, t2.arrival_s)
+        assert np.array_equal(t1.prompt_tokens, t2.prompt_tokens)
+        assert np.array_equal(t1.decode_tokens, t2.decode_tokens)
+        assert (np.diff(t1.arrival_s) >= 0).all()
+        assert (t1.prompt_tokens >= 1).all() and (t1.decode_tokens >= 1).all()
+        # seed actually matters
+        t3 = make_trace(preset, seed=preset.seed + 1)
+        assert not np.array_equal(t1.arrival_s, t3.arrival_s)
+        assert t3.name != t1.name          # derived name records override
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="sorted"):
+        TrafficTrace("bad", np.array([1.0, 0.5]), np.array([2, 2]),
+                     np.array([2, 2]))
+    with pytest.raises(ValueError, match=">= 1"):
+        TrafficTrace("bad", np.array([0.0]), np.array([0]), np.array([2]))
+    with pytest.raises(ValueError, match="lengths disagree"):
+        TrafficTrace("bad", np.array([0.0]), np.array([1, 2]),
+                     np.array([2]))
+    with pytest.raises(ValueError, match="slo_s"):
+        TrafficTrace("bad", np.array([0.0]), np.array([1]), np.array([2]),
+                     slo_s=0.0)
+    with pytest.raises(ValueError, match="unknown traffic kind"):
+        TrafficPreset(name="x", kind="weird")
+    with pytest.raises(ValueError, match="unknown traffic preset"):
+        get_traffic("nope")
+
+
+def test_resolve_traffic_accepts_all_spellings():
+    t = resolve_traffic("quick")
+    assert resolve_traffic(t) is t
+    assert np.array_equal(
+        resolve_traffic(get_traffic("quick")).arrival_s, t.arrival_s)
+    with pytest.raises(TypeError, match="TrafficTrace"):
+        resolve_traffic(42)
+
+
+# ---------------------------------------------------------------------------
+# scalar event-driven reference == vectorized fixed-step sim (bit-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(TRAFFIC_PRESETS))
+@pytest.mark.parametrize("n_slots", [1, 3, 8])
+def test_scalar_reference_bit_exact(preset, n_slots):
+    res = simulate_fleet(STEPS, ETOK, preset, n_slots=n_slots,
+                         backend="numpy")
+    for i, (s, e) in enumerate(zip(STEPS, ETOK)):
+        ref = simulate_fleet_scalar(s, e, preset, n_slots=n_slots)
+        assert np.array_equal(res.submit_iter[i], ref.submit_iter[0])
+        assert np.array_equal(res.comp_iter[i], ref.comp_iter[0])
+        assert res.active_iters[i] == ref.active_iters[0]
+
+
+@pytest.mark.parametrize("max_iters", [1, 7, 30, 100])
+def test_scalar_reference_bit_exact_truncated(max_iters):
+    res = simulate_fleet(STEPS, ETOK, "steady", n_slots=2,
+                         max_iters=max_iters, backend="numpy")
+    for i, (s, e) in enumerate(zip(STEPS, ETOK)):
+        ref = simulate_fleet_scalar(s, e, "steady", n_slots=2,
+                                    max_iters=max_iters)
+        assert np.array_equal(res.comp_iter[i], ref.comp_iter[0])
+        assert res.active_iters[i] == ref.active_iters[0]
+
+
+def test_jax_parity_bit_exact(jax_usable):
+    """The sim core is pure integer arithmetic — jax must match numpy
+    *bit-exactly*, stronger than the 1e-6 backend contract."""
+    if not jax_usable:
+        pytest.skip("jax backend unusable")
+    for preset in sorted(TRAFFIC_PRESETS):
+        a = simulate_fleet(STEPS, ETOK, preset, n_slots=4,
+                           backend="numpy")
+        b = simulate_fleet(STEPS, ETOK, preset, n_slots=4, backend="jax")
+        assert np.array_equal(a.submit_iter, b.submit_iter)
+        assert np.array_equal(a.comp_iter, b.comp_iter)
+        assert np.array_equal(a.active_iters, b.active_iters)
+        ma, mb = a.metrics(), b.metrics()
+        for k in ma:
+            assert np.array_equal(ma[k], mb[k]), k
+
+
+# ---------------------------------------------------------------------------
+# edge cases: empty, ragged, overload
+# ---------------------------------------------------------------------------
+
+def test_empty_trace_and_no_candidates():
+    empty = TrafficTrace("empty", np.zeros(0), np.zeros(0, np.int64),
+                         np.zeros(0, np.int64))
+    res = simulate_fleet(STEPS, ETOK, empty, backend="numpy")
+    m = res.metrics()
+    assert (m["slo_attainment"] == 1.0).all()
+    assert (m["throughput_tps"] == 0.0).all()
+    assert (m["p99_latency_s"] == 0.0).all()
+    none = simulate_fleet(np.zeros(0), np.zeros(0), "quick",
+                          backend="numpy")
+    assert none.n_candidates == 0 and none.submit_iter.shape == (0, 16)
+
+
+def test_ragged_trace_bit_exact():
+    rng = np.random.default_rng(11)
+    n = 20
+    trace = TrafficTrace(
+        "ragged",
+        np.sort(rng.uniform(0, 3.0, n)),
+        np.concatenate([rng.integers(1, 3, n // 2),
+                        rng.integers(40, 90, n - n // 2)]).astype(np.int64),
+        np.concatenate([rng.integers(1, 2, n // 2),
+                        rng.integers(30, 60, n - n // 2)]).astype(np.int64))
+    res = simulate_fleet(STEPS, ETOK, trace, n_slots=3, backend="numpy")
+    for i, (s, e) in enumerate(zip(STEPS, ETOK)):
+        ref = simulate_fleet_scalar(s, e, trace, n_slots=3)
+        assert np.array_equal(res.comp_iter[i], ref.comp_iter[0])
+        assert np.array_equal(res.submit_iter[i], ref.submit_iter[0])
+        assert res.active_iters[i] == ref.active_iters[0]
+
+
+def test_overload_poisons_percentiles():
+    """A hard serving window leaves stragglers unserved: latency
+    percentiles go to +inf and attainment drops — overload is penalized,
+    never silently excused."""
+    res = simulate_fleet(np.array([0.5]), np.array([1.0]), "interactive",
+                         n_slots=1, max_iters=10, backend="numpy")
+    m = res.metrics()
+    assert m["served_frac"][0] < 1.0
+    assert np.isinf(m["p99_latency_s"][0])
+    assert m["slo_attainment"][0] < 1.0
+    assert np.isfinite(m["throughput_tps"][0])
+    # scalar reference agrees on the truncated horizon too
+    ref = simulate_fleet_scalar(0.5, 1.0, "interactive", n_slots=1,
+                                max_iters=10)
+    assert np.array_equal(res.comp_iter, ref.comp_iter)
+
+
+def test_drain_horizon_serves_everything():
+    res = simulate_fleet(STEPS, ETOK, "steady", n_slots=8,
+                         backend="numpy")
+    assert res.served.all()
+    m = res.metrics()
+    assert np.isfinite(m["p99_latency_s"]).all()
+    # slower steps mean strictly more wall-clock latency at equal stamps
+    assert (np.diff(m["p50_latency_s"]) >= 0).any()
+
+
+def test_hand_computed_tiny_example():
+    """2 requests, 2 slots, step=1s: stamps and metrics by hand."""
+    trace = TrafficTrace("tiny", np.array([0.0, 0.0]),
+                         np.array([1, 2], np.int64),
+                         np.array([2, 2], np.int64), slo_s=2.5)
+    res = simulate_fleet(np.array([1.0]), np.array([2.0]), trace,
+                         n_slots=2, backend="numpy")
+    # svc = P+G-1 = [2, 3]; both admitted at k=0
+    assert np.array_equal(res.submit_iter[0], [0, 0])
+    assert np.array_equal(res.comp_iter[0], [2, 3])
+    assert res.active_iters[0] == 3
+    m = res.metrics()
+    assert np.array_equal(res.latency_s[0], [2.0, 3.0])
+    assert m["slo_attainment"][0] == 0.5
+    assert m["throughput_tps"][0] == pytest.approx(5 / 3)
+    # 3 active iters x 2 slots x 2 J / 5 served tokens
+    assert m["energy_per_token_j"][0] == pytest.approx(12 / 5)
+
+
+def test_input_validation():
+    with pytest.raises(ValueError, match="matching 1-D"):
+        simulate_fleet(np.array([0.1, 0.2]), np.array([1.0]), "quick")
+    with pytest.raises(ValueError, match="finite and > 0"):
+        simulate_fleet(np.array([0.0]), np.array([1.0]), "quick")
+    with pytest.raises(ValueError, match="n_slots"):
+        simulate_fleet(np.array([0.1]), np.array([1.0]), "quick",
+                       n_slots=0)
+
+
+# ---------------------------------------------------------------------------
+# ContinuousBatcher is the golden reference for the iteration contract
+# ---------------------------------------------------------------------------
+
+def test_batcher_reproduces_fleet_sim_stamps():
+    """Pace real batcher submissions by arrival iteration: its per-request
+    submit/complete stamps must equal the fleet sim's bit-exactly."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models.model import Model
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    rng = np.random.default_rng(5)
+    n_req, n_slots, step_s = 7, 2, 1.0
+    trace = TrafficTrace(
+        "golden",
+        np.sort(rng.uniform(0, 6.0, n_req)),
+        rng.integers(1, 4, n_req).astype(np.int64),
+        rng.integers(1, 4, n_req).astype(np.int64))
+    sim = simulate_fleet(np.array([step_s]), np.array([1.0]), trace,
+                         n_slots=n_slots, backend="numpy")
+
+    cfg = reduced(get_config("starcoder2-7b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    bat = ContinuousBatcher(model, params, n_slots=n_slots, max_seq=16)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(0, cfg.vocab,
+                                             trace.prompt_tokens[i])),
+                    max_new=int(trace.decode_tokens[i]))
+            for i in range(n_req)]
+    arrive = np.ceil(trace.arrival_s / step_s).astype(int)
+    submitted = 0
+    for _ in range(10000):
+        while submitted < n_req and arrive[submitted] <= bat.it:
+            bat.submit(reqs[submitted])
+            submitted += 1
+        if submitted == n_req and not bat.busy:
+            break
+        bat.step()
+    assert len(bat.completed) == n_req
+    got_submit = np.array([r.submit_iter for r in reqs])
+    got_comp = np.array([r.complete_iter for r in reqs])
+    assert np.array_equal(got_submit, sim.submit_iter[0])
+    assert np.array_equal(got_comp, sim.comp_iter[0])
+
+
+def test_batcher_run_raises_when_cut_short():
+    """run() must not silently drop in-flight/queued work at max_iters."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models.model import Model
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    cfg = reduced(get_config("starcoder2-7b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    bat = ContinuousBatcher(model, params, n_slots=1, max_seq=16)
+    bat.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+    bat.submit(Request(rid=1, prompt=[4, 5], max_new=3))
+    with pytest.raises(RuntimeError, match="max_iters=2.*queued"):
+        bat.run(max_iters=2)
