@@ -1,0 +1,169 @@
+"""Preempt/resume smoke: a real SIGKILL mid-stream, then a resume that
+must reproduce the uninterrupted Pareto front bit for bit (the
+`preempt-resume-smoke` CI job).
+
+The parent process
+
+* computes the uninterrupted reference front in-process (numpy);
+* spawns this script with ``--child``: a chunked sweep of the same feed,
+  throttled so it checkpoints every chunk, and SIGKILLs it once enough
+  snapshots exist on disk — a genuine preemption, not an injected
+  exception (the in-exception restart path is covered by
+  tests/test_dse_checkpoint.py);
+* resumes the dead run via :func:`repro.runtime.dse_checkpoint
+  .resume_sweep` on the same checkpoint directory and verifies the
+  resumed front, config count, and chunk count are identical to the
+  reference.
+
+Writes one JSON report (``--out``, uploaded as a CI artifact alongside
+the checkpoint directory on failure) and exits non-zero on any mismatch.
+
+  PYTHONPATH=src python benchmarks/preempt_resume_smoke.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from dse_sweep_bench import provenance  # noqa: E402  (shared helper)
+
+CHUNK = 16
+# a bandwidth-rich grid so the reference front has real extent (a trivial
+# one-point front would make the bit-identity gate vacuous)
+GRID = dict(glb_kbs=(64, 128, 256, 512),
+            bws=tuple(float(b) for b in np.linspace(2.0, 64.0, 16)))
+
+
+def _space():
+    from repro.core.accelerator import design_space_soa
+    return design_space_soa(chunk_size=CHUNK, **GRID)
+
+
+def _throttled_space(delay_s: float):
+    """The same feed, slowed down so the parent can preempt mid-stream."""
+    for soa in _space():
+        time.sleep(delay_s)
+        yield soa
+
+
+def run_child(ckpt_dir: str, delay_s: float) -> None:
+    from repro.core.dse_batch import _sweep_chunked
+    from repro.core.workloads import get_workload
+    from repro.runtime.dse_checkpoint import SweepCheckpointer
+
+    ck = SweepCheckpointer(ckpt_dir, every=1)
+    _sweep_chunked(get_workload("vgg16"), _throttled_space(delay_s),
+                   chunk_size=CHUNK, backend="numpy", checkpoint=ck)
+    # the parent kills us long before the stream drains; reaching the end
+    # means the kill never landed
+    print("child finished unexpectedly", file=sys.stderr)
+    raise SystemExit(3)
+
+
+def _snapshots(ckpt_dir: pathlib.Path) -> list[str]:
+    if not ckpt_dir.is_dir():
+        return []
+    return sorted(d for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/preempt_resume_ckpt")
+    ap.add_argument("--delay-s", type=float, default=0.2,
+                    help="child per-chunk throttle")
+    ap.add_argument("--kill-after", type=int, default=3,
+                    help="SIGKILL the child once this many snapshots exist")
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=pathlib.Path("/tmp/bench_preempt_resume.json"))
+    args = ap.parse_args()
+
+    if args.child:
+        run_child(args.ckpt, args.delay_s)
+        return
+
+    from repro.core.dse_batch import _sweep_chunked
+    from repro.core.workloads import get_workload
+    from repro.runtime.dse_checkpoint import resume_sweep
+
+    wl = get_workload("vgg16")
+    ref = _sweep_chunked(wl, _space(), chunk_size=CHUNK, backend="numpy")
+
+    ckpt_dir = pathlib.Path(args.ckpt)
+    if ckpt_dir.exists():
+        import shutil
+        shutil.rmtree(ckpt_dir)
+
+    child = subprocess.Popen(
+        [sys.executable, __file__, "--child", "--ckpt", str(ckpt_dir),
+         "--delay-s", str(args.delay_s)],
+        env={**os.environ,
+             "PYTHONPATH": str(pathlib.Path(__file__).resolve()
+                               .parent.parent / "src")})
+    deadline = time.monotonic() + 120.0
+    try:
+        while len(_snapshots(ckpt_dir)) < args.kill_after:
+            if child.poll() is not None:
+                raise SystemExit(
+                    f"child exited early (rc={child.returncode}) with "
+                    f"{len(_snapshots(ckpt_dir))} snapshots")
+            if time.monotonic() > deadline:
+                raise SystemExit("timed out waiting for child snapshots")
+            time.sleep(0.02)
+    finally:
+        if child.poll() is None:
+            child.send_signal(signal.SIGKILL)
+        child.wait()
+
+    killed_at = _snapshots(ckpt_dir)
+    res = resume_sweep(wl, _space, checkpoint_dir=str(ckpt_dir),
+                       checkpoint_every=4, chunk_size=CHUNK,
+                       backend="numpy")
+
+    failures: list[str] = []
+    if res.n_configs != ref.n_configs:
+        failures.append(f"n_configs {res.n_configs} != {ref.n_configs}")
+    if res.n_chunks != ref.n_chunks:
+        failures.append(f"n_chunks {res.n_chunks} != {ref.n_chunks}")
+    front_identical = res.front_size == ref.front_size and all(
+        np.array_equal(res.front_metrics[m], ref.front_metrics[m])
+        for m in ref.front_metrics) and all(
+        np.array_equal(res.front_soa[k], ref.front_soa[k])
+        for k in ref.front_soa)
+    if not front_identical:
+        failures.append("resumed front differs from uninterrupted run")
+
+    r = {
+        "provenance": provenance(),
+        "n_configs": ref.n_configs,
+        "n_chunks": ref.n_chunks,
+        "child_killed_with_snapshots": len(killed_at),
+        "child_returncode": child.returncode,
+        "resumed_front_size": res.front_size,
+        "reference_front_size": ref.front_size,
+        "front_identical_after_sigkill_resume": front_identical,
+    }
+    for k, v in sorted(r.items()):
+        if k != "provenance":
+            print(f"{k}: {v}")
+    args.out.write_text(json.dumps(r, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit("preempt/resume smoke FAILED:\n  "
+                         + "\n  ".join(failures))
+    print("preempt/resume smoke OK: SIGKILL mid-stream, front bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,9 @@ class CoExplorePreset:
     weights: tuple[float, ...] | None = None   # None = energy-weighted
     traffic: str | None = None       # TRAFFIC_PRESETS name (serving mode)
     n_slots: int = 8                 # fleet slots (serving mode)
+    # nsga2 external-archive bound: relative epsilon-dominance grid
+    # resolution (fraction of each objective's span), None = unbounded
+    archive_epsilon: float | None = None
 
     def __post_init__(self):
         unknown = set(self.objectives) - set(OBJECTIVES) \
@@ -81,6 +84,16 @@ class CoExplorePreset:
             raise ValueError(
                 f"preset {self.name!r}: n_slots must be >= 1, "
                 f"got {self.n_slots}")
+        if self.archive_epsilon is not None:
+            if self.method != "nsga2":
+                raise ValueError(
+                    f"preset {self.name!r}: archive_epsilon bounds the "
+                    f"nsga2 external archive; method is {self.method!r}")
+            if not (0.0 < self.archive_epsilon < 1.0):
+                raise ValueError(
+                    f"preset {self.name!r}: archive_epsilon must be a "
+                    f"relative resolution in (0, 1), "
+                    f"got {self.archive_epsilon}")
 
 
 PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
@@ -88,6 +101,10 @@ PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
     CoExplorePreset(name="default"),
     CoExplorePreset(name="thorough", budget=8192, pop_size=96,
                     objectives=OBJECTIVES),
+    # week-long-horizon setting: epsilon-bounded archive holds memory
+    # constant; pair with ExploreSpec(checkpoint_dir=...) for resumability
+    CoExplorePreset(name="marathon", budget=16384, pop_size=96,
+                    objectives=OBJECTIVES, archive_epsilon=0.01),
     CoExplorePreset(name="random-baseline", method="random"),
     CoExplorePreset(name="halving", method="successive_halving",
                     budget=4096),

@@ -273,6 +273,8 @@ def _coexplore(workload: Workload | str,
                traffic=None,
                n_slots: int | None = None,
                chunk_size: int | None = None,
+               checkpoint_dir: str | None = None,
+               checkpoint_every: int | None = None,
                **method_kwargs):
     """Guided co-exploration of the joint (config x per-layer precision)
     space — the QADAM/QUIDAM-direction entry point.
@@ -332,10 +334,31 @@ def _coexplore(workload: Workload | str,
         n_slots=p.n_slots if n_slots is None else n_slots)
     if method == "nsga2":
         kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
+        if p.archive_epsilon is not None:
+            kwargs.setdefault("archive_epsilon", p.archive_epsilon)
     elif method == "successive_halving":
         kwargs.update(eta=p.eta)
+    _apply_checkpointing(kwargs, method, checkpoint_dir, checkpoint_every)
     kwargs.update(method_kwargs)
     return fn(space, wl, p.budget if budget is None else budget, **kwargs)
+
+
+def _apply_checkpointing(kwargs: dict, method: str,
+                         checkpoint_dir: str | None,
+                         checkpoint_every: int | None) -> None:
+    """Thread search checkpointing knobs through to the engine — only
+    nsga2 carries resumable generation state."""
+    if checkpoint_dir is None:
+        if checkpoint_every is not None:
+            raise ValueError("checkpoint_every needs checkpoint_dir")
+        return
+    if method != "nsga2":
+        raise ValueError(
+            f"checkpoint_dir requires method='nsga2' (generation "
+            f"snapshots); got method={method!r}")
+    kwargs["checkpoint_dir"] = checkpoint_dir
+    if checkpoint_every is not None:
+        kwargs["checkpoint_every"] = checkpoint_every
 
 
 def _coexplore_many(workloads: Sequence[Workload | str],
@@ -352,6 +375,8 @@ def _coexplore_many(workloads: Sequence[Workload | str],
                     mesh=None,
                     space_overrides: dict | None = None,
                     chunk_size: int | None = None,
+                    checkpoint_dir: str | None = None,
+                    checkpoint_every: int | None = None,
                     **method_kwargs):
     """Multi-workload co-exploration: one shared hardware config, one
     per-layer precision assignment *per workload* — the full QUIDAM
@@ -407,8 +432,11 @@ def _coexplore_many(workloads: Sequence[Workload | str],
                        else sqnr_floor_db))
     if method == "nsga2":
         kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
+        if p.archive_epsilon is not None:
+            kwargs.setdefault("archive_epsilon", p.archive_epsilon)
     elif method == "successive_halving":
         kwargs.update(eta=p.eta)
+    _apply_checkpointing(kwargs, method, checkpoint_dir, checkpoint_every)
     kwargs.update(method_kwargs)
     return fn(space, wls, p.budget if budget is None else budget, **kwargs)
 
@@ -518,6 +546,13 @@ class ExploreSpec:
     mesh: object = None
     use_cache: bool = True
     chunk_size: int | None = None
+    # fault tolerance: periodic snapshots + resume (preemption safety).
+    # Valid for chunked uniform sweeps (checkpointed stream cursor /
+    # front / cache accounting, resumed via
+    # repro.runtime.dse_checkpoint.resume_sweep) and mixed-precision
+    # nsga2 searches (generation snapshots incl. RNG stream).
+    checkpoint_dir: str | None = None
+    checkpoint_every: int | None = None
 
     def __post_init__(self):
         if not self.workloads:
@@ -542,6 +577,20 @@ class ExploreSpec:
         if self.chunk_size is not None and self.chunk_size < 1:
             raise ValueError(
                 f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.checkpoint_every is not None:
+            if self.checkpoint_dir is None:
+                raise ValueError(
+                    "checkpoint_every needs checkpoint_dir")
+            if self.checkpoint_every < 1:
+                raise ValueError(
+                    f"checkpoint_every must be >= 1, "
+                    f"got {self.checkpoint_every}")
+        if self.checkpoint_dir is not None \
+                and self.precision == "uniform" and self.chunk_size is None:
+            raise ValueError(
+                "checkpoint_dir applies to chunked uniform sweeps "
+                "(chunk_size=) or mixed-precision searches; a one-batch "
+                "sweep has no resumable stream")
         if self.precision == "uniform":
             bad = [n for n, v in (
                 ("preset", self.preset), ("method", self.method),
@@ -589,16 +638,22 @@ class ExploreSpec:
                outputs: str = "points", chunk_size: int | None = None,
                backend: str = "auto", mesh=None, use_cache: bool = True,
                cache=None, save_cache: bool = True,
-               overlap: bool = True) -> "ExploreSpec":
+               overlap: bool = True, checkpoint_dir: str | None = None,
+               checkpoint_every: int | None = None) -> "ExploreSpec":
         """Uniform-precision sweep of one workload over a config batch
         (the whole design space when ``configs`` is None).  A
         ``chunk_size`` streams an arbitrary-size config feed with bounded
-        memory and returns the accumulated :class:`ChunkedSweep`."""
+        memory and returns the accumulated :class:`ChunkedSweep`; a
+        ``checkpoint_dir`` makes the stream preemption-safe (periodic
+        snapshots, resumed automatically — ``configs`` should then be a
+        re-iterable feed or a zero-arg factory)."""
         return cls(workloads=(workload,), precision="uniform",
                    configs=configs, engine=engine, outputs=outputs,
                    chunk_size=chunk_size, backend=backend, mesh=mesh,
                    use_cache=use_cache, cache=cache,
-                   save_cache=save_cache, overlap=overlap)
+                   save_cache=save_cache, overlap=overlap,
+                   checkpoint_dir=checkpoint_dir,
+                   checkpoint_every=checkpoint_every)
 
     @classmethod
     def mixed(cls, workload, *, preset: str | None = None,
@@ -607,17 +662,23 @@ class ExploreSpec:
               seed: int | None = None, ref_point=None,
               space_overrides: dict | None = None,
               chunk_size: int | None = None, backend: str = "auto",
-              mesh=None, **search_kwargs) -> "ExploreSpec":
+              mesh=None, checkpoint_dir: str | None = None,
+              checkpoint_every: int | None = None,
+              **search_kwargs) -> "ExploreSpec":
         """Guided mixed-precision co-exploration of one workload; a
         ``traffic`` trace switches the objectives to the serving-fleet
         set (tail latency / SLO attainment / throughput / energy per
-        served token)."""
+        served token).  A ``checkpoint_dir`` snapshots the search each
+        ``checkpoint_every`` generations and resumes bit-identically
+        (nsga2 only)."""
         return cls(workloads=(workload,), precision="mixed",
                    preset=preset, method=method, budget=budget,
                    objectives=objectives, traffic=traffic, n_slots=n_slots,
                    seed=seed, ref_point=ref_point,
                    space_overrides=space_overrides, chunk_size=chunk_size,
                    backend=backend, mesh=mesh,
+                   checkpoint_dir=checkpoint_dir,
+                   checkpoint_every=checkpoint_every,
                    search_kwargs=search_kwargs or None)
 
     @classmethod
@@ -629,6 +690,8 @@ class ExploreSpec:
              ref_point=None, space_overrides: dict | None = None,
              chunk_size: int | None = None, backend: str = "auto",
              mesh=None, use_cache: bool = True,
+             checkpoint_dir: str | None = None,
+             checkpoint_every: int | None = None,
              **search_kwargs) -> "ExploreSpec":
         """A workload suite.  ``precision="uniform"`` enumerates the
         config batch once per workload (synthesis shared);
@@ -645,7 +708,8 @@ class ExploreSpec:
                    sqnr_floor_db=sqnr_floor_db, seed=seed,
                    ref_point=ref_point, space_overrides=space_overrides,
                    chunk_size=chunk_size, backend=backend, mesh=mesh,
-                   use_cache=use_cache,
+                   use_cache=use_cache, checkpoint_dir=checkpoint_dir,
+                   checkpoint_every=checkpoint_every,
                    search_kwargs=search_kwargs or None)
 
 
@@ -677,7 +741,9 @@ def run(spec: ExploreSpec):
                 ref_point=spec.ref_point, mesh=spec.mesh,
                 space_overrides=spec.space_overrides,
                 traffic=spec.traffic, n_slots=spec.n_slots,
-                chunk_size=spec.chunk_size, **extra)
+                chunk_size=spec.chunk_size,
+                checkpoint_dir=spec.checkpoint_dir,
+                checkpoint_every=spec.checkpoint_every, **extra)
         return _coexplore_many(
             spec.workloads,
             preset="many-default" if spec.preset is None else spec.preset,
@@ -686,7 +752,9 @@ def run(spec: ExploreSpec):
             ref_point=spec.ref_point, weights=spec.weights,
             sqnr_floor_db=spec.sqnr_floor_db, mesh=spec.mesh,
             space_overrides=spec.space_overrides,
-            chunk_size=spec.chunk_size, **extra)
+            chunk_size=spec.chunk_size,
+            checkpoint_dir=spec.checkpoint_dir,
+            checkpoint_every=spec.checkpoint_every, **extra)
     # uniform precision
     if len(spec.workloads) > 1:
         return _explore_many(
@@ -702,6 +770,17 @@ def run(spec: ExploreSpec):
             raise ValueError(
                 "chunked streaming returns a ChunkedSweep (aggregates "
                 'only); leave outputs="points"')
+        if spec.checkpoint_dir is not None:
+            from repro.runtime.dse_checkpoint import resume_sweep
+            kwargs = {} if spec.checkpoint_every is None \
+                else {"checkpoint_every": spec.checkpoint_every}
+            return resume_sweep(
+                _resolve(wl), spec.configs,
+                checkpoint_dir=spec.checkpoint_dir,
+                chunk_size=spec.chunk_size, backend=spec.backend,
+                use_cache=spec.use_cache, cache=spec.cache,
+                save_cache=spec.save_cache, mesh=spec.mesh,
+                overlap=spec.overlap, **kwargs)
         return _explore_chunked(
             wl, spec.configs, chunk_size=spec.chunk_size,
             backend=spec.backend, use_cache=spec.use_cache,

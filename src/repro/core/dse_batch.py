@@ -1077,15 +1077,27 @@ def _as_soa_chunks(chunks, chunk_size: int) -> Iterator[dict]:
         yield configs_to_soa(tuple(pending))
 
 
+class ChunkDeadlineExceeded(RuntimeError):
+    """A dispatched chunk failed to produce results within the watchdog
+    deadline (``chunk_deadline_s``); the stream cancels it and recomputes
+    the chunk serially on the exact numpy kernel."""
+
+
 def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
                     chunk_size: int, n: int, executor):
     """Launch the aggregates kernel for one chunk without blocking.
 
-    Returns a zero-arg ``finalize()`` producing the host-side ``(n,)``
+    Returns a ``finalize(timeout=None)`` producing the host-side ``(n,)``
     aggregate columns.  Under jax the jit call dispatches asynchronously
     and ``finalize`` materializes the device buffers; under numpy with an
     ``executor`` the kernel runs on a worker thread (numpy ufuncs release
     the GIL) so the caller can synthesize the next chunk meanwhile.
+
+    ``timeout`` (seconds) bounds the wait and raises
+    :class:`ChunkDeadlineExceeded` on expiry — the watchdog hook of the
+    streamed driver.  The plain numpy path (no executor) runs
+    synchronously on call, so a deadline cannot preempt it; that path *is*
+    the serial fallback the watchdog re-dispatches onto.
     """
     if backend == "jax":
         # pad the tail chunk to the steady-state shape: one jit trace
@@ -1097,12 +1109,51 @@ def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
             jcfg = _pad_rows(jcfg,
                              -len(jcfg["pe_rows"]) % _mesh_shards(mesh))
         out = fn(jcfg, jlay)                       # async dispatch
-        return lambda: {k: np.asarray(v)[:n] for k, v in out.items()}
+
+        def finalize(timeout: float | None = None):
+            if timeout is None:
+                return {k: np.asarray(v)[:n] for k, v in out.items()}
+            # jax materialization has no native timeout: bound it with a
+            # daemon-thread join so a wedged device cannot hang the stream
+            import threading
+            box: dict = {}
+
+            def _materialize():
+                try:
+                    box["out"] = {k: np.asarray(v)[:n]
+                                  for k, v in out.items()}
+                except BaseException as exc:   # surfaced to the caller
+                    box["exc"] = exc
+
+            th = threading.Thread(target=_materialize, daemon=True)
+            th.start()
+            th.join(timeout)
+            if th.is_alive():
+                raise ChunkDeadlineExceeded(
+                    f"jax chunk did not materialize within {timeout}s")
+            if "exc" in box:
+                raise box["exc"]
+            return box["out"]
+
+        return finalize
     kernel = functools.partial(_sweep_kernel, np, cfg, lay,
                                outputs="aggregates")
     if executor is not None:
-        return executor.submit(kernel).result
-    return kernel
+        fut = executor.submit(kernel)
+
+        def finalize(timeout: float | None = None):
+            from concurrent.futures import TimeoutError as _FutTimeout
+            try:
+                return fut.result(timeout)
+            except _FutTimeout:
+                fut.cancel()   # a running kernel cannot be interrupted,
+                #                but a still-queued one is dropped
+                raise ChunkDeadlineExceeded(
+                    f"chunk kernel still running after {timeout}s"
+                ) from None
+
+        return finalize
+    return lambda timeout=None: kernel()
 
 
 def _sweep_chunked(workload: Workload,
@@ -1114,7 +1165,11 @@ def _sweep_chunked(workload: Workload,
                    cache: PersistentSynthesisCache | str | None = None,
                    save_cache: bool = True,
                    mesh=None,
-                   overlap: bool = True) -> ChunkedSweep:
+                   overlap: bool = True,
+                   checkpoint=None,
+                   fail_at: dict[int, int] | None = None,
+                   chunk_deadline_s: float | None = None,
+                   degrade_on_failure: bool = True) -> ChunkedSweep:
     """Stream an arbitrary-size config feed through the sweep engine in
     bounded memory, keeping only running aggregates + the Pareto front.
 
@@ -1138,22 +1193,60 @@ def _sweep_chunked(workload: Workload,
     accounting are identical (asserted in
     ``tests/test_chunked_pipeline.py``); ``overlap=False`` keeps the
     fully serial per-chunk loop.
+
+    Fault tolerance (``tests/test_dse_checkpoint.py``):
+
+    * ``checkpoint`` — a duck-typed snapshotter (see
+      :class:`repro.runtime.dse_checkpoint.SweepCheckpointer`) with
+      ``restore() -> snap | None``, ``should_save(cursor) -> bool`` and
+      ``save(cursor, n_total, front_soa, front_metrics, cache_state)``.
+      On entry the newest valid snapshot restores the stream cursor,
+      running front, and cache accounting; already-reduced chunks are
+      pulled from the feed but not synthesized, so a resumed run's front
+      and hit/miss counters are bit-identical to an uninterrupted one.
+    * ``fail_at`` — ``{chunk_index: n_times}`` deterministic
+      :class:`~repro.runtime.fault_tolerance.InjectedFailure` injection at
+      chunk boundaries (decremented in place so a shared dict fails each
+      boundary only ``n_times`` across restarts).
+    * ``chunk_deadline_s`` — watchdog: a dispatched chunk exceeding the
+      deadline is cancelled and recomputed serially on the exact numpy
+      kernel (counted in ``timings["watchdog_redispatches"]``).
+    * ``degrade_on_failure`` — a jax failure mid-stream (dispatch or
+      materialization) degrades the remaining stream to numpy with a
+      warning instead of losing the run; stream order and cache
+      accounting are preserved (``timings["degraded"]``).
     """
     import time
+    import warnings
     backend = resolve_backend(backend)
     if backend == "jax":
         _require_jax_mesh(mesh)
     if isinstance(cache, (str, bytes)) or hasattr(cache, "__fspath__"):
         cache = PersistentSynthesisCache(cache)
     wb = _workload_batch(workload)
+    fail_at = fail_at if fail_at is not None else {}
 
     front_soa: dict[str, np.ndarray] | None = None
     front_metrics: dict[str, np.ndarray] | None = None
     n_total = 0
     n_chunks = 0
+    resume_cursor = 0
+    if checkpoint is not None:
+        snap = checkpoint.restore()
+        if snap is not None:
+            resume_cursor = int(snap["cursor"])
+            if resume_cursor > 0:
+                n_total = int(snap["n_total"])
+                n_chunks = resume_cursor
+                front_soa = snap["front_soa"]
+                front_metrics = snap["front_metrics"]
+                if cache is not None \
+                        and snap.get("cache_state") is not None:
+                    cache.import_state(snap["cache_state"])
     t_wall = time.perf_counter()
     timings = {"overlap": bool(overlap), "wall_s": 0.0, "synth_s": 0.0,
-               "kernel_wait_s": 0.0}
+               "kernel_wait_s": 0.0, "watchdog_redispatches": 0,
+               "degraded": False}
 
     def reduce_chunk(soa: dict, n: int, out: dict) -> None:
         nonlocal front_soa, front_metrics
@@ -1179,12 +1272,68 @@ def _sweep_chunked(workload: Workload,
         front_metrics = {m: v[keep] for m, v in front_metrics.items()}
 
     executor = None
-    if overlap and backend == "numpy":
-        from concurrent.futures import ThreadPoolExecutor
-        executor = ThreadPoolExecutor(max_workers=1)
-    pending: tuple[dict, int, object] | None = None   # (soa, n, finalize)
+
+    def _ensure_executor() -> None:
+        nonlocal executor
+        if overlap and backend == "numpy" and executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            executor = ThreadPoolExecutor(max_workers=1)
+
+    _ensure_executor()
+
+    def _degrade(dcfg: dict, dlay: dict, exc: BaseException,
+                 what: str) -> dict:
+        # jax died mid-stream: warn, recompute this chunk on the exact
+        # numpy kernel, and switch the remaining stream to numpy — the
+        # run survives instead of losing hours of reduced front
+        nonlocal backend
+        warnings.warn(
+            f"jax backend failed during chunk {what} "
+            f"({type(exc).__name__}: {exc}); degrading stream to numpy "
+            f"for this and all remaining chunks", RuntimeWarning,
+            stacklevel=3)
+        backend = "numpy"
+        timings["degraded"] = True
+        _ensure_executor()
+        return _sweep_kernel(np, dcfg, dlay, outputs="aggregates")
+
+    # (soa, n, cfg, lay, finalize, backend_at_dispatch, save_info,
+    #  cache_state)
+    pending: tuple | None = None
+
+    def drain() -> None:
+        nonlocal pending
+        if pending is None:
+            return
+        psoa, pn, pcfg, play, pfin, pbackend, psave, pcache = pending
+        pending = None
+        t0 = time.perf_counter()
+        try:
+            out = pfin(timeout=chunk_deadline_s)
+        except ChunkDeadlineExceeded:
+            warnings.warn(
+                f"chunk kernel exceeded the {chunk_deadline_s:.3g}s "
+                f"watchdog deadline; cancelled and re-dispatched "
+                f"serially on the numpy kernel", RuntimeWarning,
+                stacklevel=3)
+            timings["watchdog_redispatches"] += 1
+            out = _sweep_kernel(np, pcfg, play, outputs="aggregates")
+        except Exception as exc:
+            if pbackend != "jax" or not degrade_on_failure:
+                raise
+            out = _degrade(pcfg, play, exc, "materialization")
+        timings["kernel_wait_s"] += time.perf_counter() - t0
+        reduce_chunk(psoa, pn, out)
+        if psave is not None:
+            checkpoint.save(cursor=psave[0], n_total=psave[1],
+                            front_soa=front_soa,
+                            front_metrics=front_metrics,
+                            cache_state=pcache)
+
     try:
         feed = _as_soa_chunks(configs, chunk_size)
+        ci = -1                 # absolute index of the chunk being pulled
+        fresh: tuple | None = None
         while True:
             t0 = time.perf_counter()
             soa = next(feed, None)
@@ -1192,6 +1341,19 @@ def _sweep_chunked(workload: Workload,
                 n = len(soa["pe_rows"])
                 if n == 0:
                     continue
+                ci += 1
+                if ci < resume_cursor:
+                    # reduced before the restart: advance the feed without
+                    # synthesizing — the snapshot already carries this
+                    # chunk's rows, front contribution, and cache
+                    # accounting
+                    continue
+                if fail_at.get(ci, 0) > 0:
+                    fail_at[ci] -= 1
+                    from repro.runtime.fault_tolerance import \
+                        InjectedFailure
+                    raise InjectedFailure(
+                        f"injected failure at chunk boundary {ci}")
                 n_total += n
                 n_chunks += 1
                 # stage 1 (host): synthesis — in stream order, so cache
@@ -1204,25 +1366,35 @@ def _sweep_chunked(workload: Workload,
                     cols = synthesize_soa(soa)
                 cfg, lay = _make_cfg_lay(soa, cols, wb)
                 timings["synth_s"] += time.perf_counter() - t0
+                save_info = cache_state = None
+                if checkpoint is not None \
+                        and checkpoint.should_save(ci + 1):
+                    # capture the cache *now*, while its rows and counters
+                    # cover exactly chunks 0..ci — under the overlapped
+                    # pipeline chunk ci+1 is synthesized before chunk ci's
+                    # snapshot is written, and letting its rows leak into
+                    # the snapshot would turn its re-synthesis after a
+                    # resume into cache hits (accounting drift)
+                    save_info = (ci + 1, n_total)
+                    if cache is not None:
+                        cache_state = cache.export_state()
                 # stage 2 (device / worker thread): dispatch the kernel
-                finalize = _dispatch_chunk(cfg, lay, backend, mesh,
-                                           chunk_size, n, executor)
-            if pending is not None:
-                psoa, pn, pfin = pending
-                t0 = time.perf_counter()
-                out = pfin()
-                timings["kernel_wait_s"] += time.perf_counter() - t0
-                reduce_chunk(psoa, pn, out)
-                pending = None
+                try:
+                    finalize = _dispatch_chunk(cfg, lay, backend, mesh,
+                                               chunk_size, n, executor)
+                except Exception as exc:
+                    if backend != "jax" or not degrade_on_failure:
+                        raise
+                    out_now = _degrade(cfg, lay, exc, "dispatch")
+                    finalize = lambda timeout=None, o=out_now: o  # noqa: E731
+                fresh = (soa, n, cfg, lay, finalize, backend,
+                         save_info, cache_state)
+            drain()             # finalize + reduce the previous chunk
             if soa is None:
                 break
-            if overlap:
-                pending = (soa, n, finalize)
-            else:
-                t0 = time.perf_counter()
-                out = finalize()
-                timings["kernel_wait_s"] += time.perf_counter() - t0
-                reduce_chunk(soa, n, out)
+            pending = fresh
+            if not overlap:
+                drain()
     finally:
         if executor is not None:
             executor.shutdown(wait=True)
@@ -1232,6 +1404,14 @@ def _sweep_chunked(workload: Workload,
                      for k in _SOA_ID_FIELDS}
         front_metrics = {m: np.empty(0, dtype=np.float64)
                          for m in _FRONT_METRICS}
+    if checkpoint is not None:
+        # terminal snapshot: resuming a completed run restores the full
+        # front and skips the whole feed (idempotent)
+        checkpoint.save(
+            cursor=n_chunks, n_total=n_total, front_soa=front_soa,
+            front_metrics=front_metrics,
+            cache_state=cache.export_state() if cache is not None
+            else None)
     if cache is not None and save_cache and cache.path is not None:
         cache.save()
     timings["wall_s"] = time.perf_counter() - t_wall

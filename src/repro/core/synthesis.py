@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import pathlib
 from typing import Sequence
 
@@ -357,18 +358,68 @@ class PersistentSynthesisCache:
         return len(self._index) - before
 
     def save(self, path: str | pathlib.Path | None = None) -> int:
-        """Write all rows to ``path`` (default: the constructor path)."""
+        """Write all rows to ``path`` (default: the constructor path).
+
+        Atomic: the npz goes to a sibling temp file first and is
+        ``os.replace``d over the target, so a crash mid-save leaves the
+        previous cache intact instead of a truncated file the constructor
+        would have to discard and rebuild.
+        """
         path = pathlib.Path(path) if path is not None else self.path
         if path is None:
             raise ValueError("PersistentSynthesisCache.save: no path")
         # write through a handle: np.savez would append ".npz" to a
         # suffix-less path and orphan the cache on the next load
-        with open(path, "wb") as fh:
-            np.savez_compressed(
-                fh, keys=self._keys[:self._n],
-                **{c: self._vals[:self._n, j]
-                   for j, c in enumerate(REPORT_COLUMNS)})
+        tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+        try:
+            with open(tmp, "wb") as fh:
+                np.savez_compressed(
+                    fh, keys=self._keys[:self._n],
+                    **{c: self._vals[:self._n, j]
+                       for j, c in enumerate(REPORT_COLUMNS)})
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
+        finally:
+            if tmp.exists():
+                tmp.unlink()
         return self._n
+
+    def export_state(self) -> dict:
+        """Rows + accounting as a plain dict of arrays/scalars — the
+        synthesis-cache slice of an exploration checkpoint
+        (:mod:`repro.runtime.dse_checkpoint`).  Counters ride along so a
+        resumed run's hit/miss accounting matches the uninterrupted run
+        exactly."""
+        return {
+            "keys": self._keys[:self._n].copy(),
+            "vals": self._vals[:self._n].copy(),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+    def import_state(self, state: dict) -> None:
+        """Replace rows and counters with an :meth:`export_state`
+        snapshot (the inverse: existing contents are dropped, not
+        merged)."""
+        keys = np.ascontiguousarray(state["keys"], dtype=np.uint64)
+        vals = np.asarray(state["vals"], dtype=np.float64)
+        if keys.ndim != 2 or keys.shape[1] != 2 \
+                or vals.shape != (len(keys), len(REPORT_COLUMNS)):
+            raise ValueError(
+                f"cache snapshot shapes {keys.shape} / {vals.shape} are "
+                f"not (N, 2) / (N, {len(REPORT_COLUMNS)})")
+        self._keys = keys.copy()
+        self._vals = vals.copy()
+        self._n = len(keys)
+        buf = keys.tobytes()
+        self._index = {buf[16 * i:16 * (i + 1)]: i
+                       for i in range(self._n)}
+        self.hits = int(state["hits"])
+        self.misses = int(state["misses"])
+        self.evictions = int(state["evictions"])
+        self._compact()
 
     def load(self, path: str | pathlib.Path) -> int:
         """Merge rows from an npz file; returns how many were new.

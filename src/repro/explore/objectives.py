@@ -156,7 +156,11 @@ def quant_noise(assign: np.ndarray, layer_macs: np.ndarray) -> np.ndarray:
     table = mode_noise_table()
     macs = np.asarray(layer_macs, dtype=np.float64)
     wts = macs / macs.sum()
-    return table[np.asarray(assign, dtype=np.int64)] @ wts
+    # row-local axis-1 reduction, NOT `@` (BLAS gemv): gemv blocking
+    # depends on the batch size N, so the same genome scored in two
+    # different batch compositions drifts by ~1 ulp — which would break
+    # the bit-identical resume contract of the exploration checkpoints
+    return (table[np.asarray(assign, dtype=np.int64)] * wts).sum(axis=1)
 
 
 def serving_metrics(agg: dict[str, np.ndarray], traffic, *,

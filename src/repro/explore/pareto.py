@@ -143,6 +143,139 @@ def hypervolume(F: np.ndarray, ref: np.ndarray) -> float:
     return float(_hv_recursive(F, ref))
 
 
+# ---------------------------------------------------------------------------
+# Epsilon-dominance archive (Laumanns et al. 2002): the external archive of
+# a long-horizon search bounded by a grid instead of growing without limit
+# ---------------------------------------------------------------------------
+
+class EpsilonDominanceArchive:
+    """Grid-bounded external archive under epsilon-dominance
+    (minimization).
+
+    Every point maps to a grid box ``floor(F / epsilon)``.  The archive
+    keeps one representative per non-dominated box: a candidate is
+    rejected if any archived box dominates its box (componentwise <=,
+    somewhere <); an accepted candidate evicts every archived point whose
+    box it dominates; within one box the point closest to the box's lower
+    corner wins (squared distance in epsilon units, ties broken stably by
+    insertion order).  The number of boxes a mutually non-dominated set
+    can occupy is bounded by the grid resolution, so a week-long run's
+    archive holds **constant memory** regardless of evaluation count,
+    while every archived point is within one grid cell of some true
+    non-dominated point — hypervolume is preserved up to grid resolution
+    (asserted in tests/test_epsilon_archive.py).
+
+    Deterministic: the final contents depend only on the sequence of
+    ``add`` batches, and re-inserting the archived points into a fresh
+    archive reproduces it exactly (the checkpoint/resume path,
+    :mod:`repro.runtime.dse_checkpoint`).
+    """
+
+    def __init__(self, epsilon, n_objectives: int | None = None):
+        eps = np.atleast_1d(np.asarray(epsilon, dtype=np.float64))
+        if n_objectives is not None and len(eps) == 1:
+            eps = np.repeat(eps, n_objectives)
+        if (eps <= 0).any() or not np.isfinite(eps).all():
+            raise ValueError(
+                f"epsilon must be positive and finite, got {eps}")
+        self.epsilon = eps
+        self._genomes: np.ndarray | None = None
+        self._F = np.empty((0, len(eps)), dtype=np.float64)
+        self._boxes = np.empty((0, len(eps)), dtype=np.int64)
+
+    def __len__(self) -> int:
+        return len(self._F)
+
+    @property
+    def genomes(self) -> np.ndarray:
+        if self._genomes is None:
+            return np.empty((0, 0), dtype=np.int64)
+        return self._genomes
+
+    @property
+    def objectives(self) -> np.ndarray:
+        return self._F
+
+    def _box(self, F: np.ndarray) -> np.ndarray:
+        return np.floor(F / self.epsilon[None, :]).astype(np.int64)
+
+    def add(self, genomes: np.ndarray, F: np.ndarray) -> int:
+        """Offer a batch; returns how many points the archive now holds.
+
+        The batch is folded in insertion order so resume-time replay is
+        bit-identical to the original pass.
+        """
+        genomes = np.asarray(genomes)
+        F = np.asarray(F, dtype=np.float64)
+        if F.ndim != 2 or F.shape[1] != len(self.epsilon):
+            raise ValueError(
+                f"objective matrix {F.shape} does not match epsilon of "
+                f"dimension {len(self.epsilon)}")
+        if len(genomes) != len(F):
+            raise ValueError(
+                f"{len(genomes)} genomes vs {len(F)} objective rows")
+        if self._genomes is None and len(genomes):
+            self._genomes = np.empty((0,) + genomes.shape[1:],
+                                     dtype=genomes.dtype)
+        boxes = self._box(F)
+        for i in range(len(F)):
+            self._offer(genomes[i], F[i], boxes[i])
+        return len(self._F)
+
+    def _offer(self, g, f, b) -> None:
+        if len(self._boxes):
+            no_worse = (self._boxes <= b[None, :]).all(axis=1)
+            better = (self._boxes < b[None, :]).any(axis=1)
+            if (no_worse & better).any():
+                return                      # box-dominated: reject
+            same = (self._boxes == b[None, :]).all(axis=1)
+            if same.any():
+                j = int(np.nonzero(same)[0][0])   # one rep per box
+                # closer to the box's lower corner wins; incumbent keeps
+                # ties (stable under replay)
+                corner = b * self.epsilon
+                d_new = float(np.sum(((f - corner) / self.epsilon) ** 2))
+                d_old = float(np.sum(
+                    ((self._F[j] - corner) / self.epsilon) ** 2))
+                if d_new < d_old:
+                    self._genomes[j] = g
+                    self._F[j] = f
+                    self._boxes[j] = b
+                return
+            # accepted: evict every box the new box dominates
+            dominated = ((b[None, :] <= self._boxes).all(axis=1)
+                         & (b[None, :] < self._boxes).any(axis=1))
+            if dominated.any():
+                keep = ~dominated
+                self._genomes = self._genomes[keep]
+                self._F = self._F[keep]
+                self._boxes = self._boxes[keep]
+        self._genomes = np.concatenate([self._genomes, g[None]])
+        self._F = np.concatenate([self._F, f[None]])
+        self._boxes = np.concatenate([self._boxes, b[None]])
+
+    def front(self) -> tuple[np.ndarray, np.ndarray]:
+        """The archive's own non-dominated (genomes, objectives) — box
+        representatives can still dominate each other within resolution."""
+        keep = pareto_mask_k(self._F)
+        return self.genomes[keep], self._F[keep]
+
+
+def epsilon_from_reference(ref: np.ndarray, ideal: np.ndarray,
+                           rel: float) -> np.ndarray:
+    """An absolute per-objective epsilon vector from a relative grid
+    resolution: ``rel`` of the (ideal, reference) span per objective —
+    the convention :func:`repro.explore.search.nsga2` uses to interpret a
+    scalar ``archive_epsilon``."""
+    if not (0.0 < rel < 1.0):
+        raise ValueError(f"relative epsilon must be in (0, 1), got {rel}")
+    ref = np.asarray(ref, dtype=np.float64)
+    ideal = np.asarray(ideal, dtype=np.float64)
+    span = np.abs(ref - ideal)
+    span = np.where(span > 0, span, np.maximum(np.abs(ref), 1.0))
+    return rel * span
+
+
 def reference_point(F: np.ndarray, margin: float = 0.05) -> np.ndarray:
     """A reference point slightly worse than every observed objective —
     the convention used to seed a search's hypervolume history."""

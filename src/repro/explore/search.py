@@ -38,9 +38,10 @@ from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       SERVING_OBJECTIVES,
                                       multi_objective_matrix,
                                       objective_matrix)
-from repro.explore.pareto import (crowding_distance, hypervolume,
-                                  nondominated_sort, pareto_mask_k,
-                                  reference_point)
+from repro.explore.pareto import (EpsilonDominanceArchive,
+                                  crowding_distance, epsilon_from_reference,
+                                  hypervolume, nondominated_sort,
+                                  pareto_mask_k, reference_point)
 from repro.explore.space import CoExploreManySpace, CoExploreSpace
 
 
@@ -452,7 +453,12 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
           mutation_rate: float = 0.08,
           ref_point: np.ndarray | None = None,
           weights=None, sqnr_floor_db=None, mesh=None,
-          traffic=None, n_slots: int = 8) -> SearchResult:
+          traffic=None, n_slots: int = 8,
+          archive_epsilon=None,
+          checkpoint_dir: str | None = None,
+          checkpoint_every: int = 5,
+          fail_at_generation: dict[int, int] | None = None
+          ) -> SearchResult:
     """NSGA-II-style evolutionary multi-objective search.
 
     Classic loop: elitist (mu + lambda) survival over non-domination rank
@@ -461,32 +467,113 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
     requested genome evaluations (initial population included), so runs
     compare 1:1 with :func:`random_search` at the same budget.
 
-    Every evaluated genome also flows through an **unbounded external
-    archive** — a running non-dominated reduction over the whole search
-    trajectory, like random search's running front — so a non-dominated
-    genome that crowding truncation drops from the population is never
-    lost.  The returned front *is* the archive (a superset of the final
-    population's own non-dominated set, which is also returned via
+    Every evaluated genome also flows through an **external archive** — a
+    running non-dominated reduction over the whole search trajectory,
+    like random search's running front — so a non-dominated genome that
+    crowding truncation drops from the population is never lost.  The
+    returned front *is* the archive's non-dominated set (a superset of
+    the final population's own front, which is also returned via
     ``population`` / ``population_objectives``); the hypervolume history
-    tracks the archive, and is therefore monotone.
+    tracks the archive, and with the default unbounded archive is
+    therefore monotone.
+
+    ``archive_epsilon`` bounds the archive with an epsilon-dominance grid
+    (:class:`~repro.explore.pareto.EpsilonDominanceArchive`) so week-long
+    runs hold memory constant: a scalar is a *relative* grid resolution
+    (fraction of each objective's (ideal, reference) span,
+    :func:`~repro.explore.pareto.epsilon_from_reference`); a sequence is
+    an absolute per-objective epsilon.  Hypervolume stays within grid
+    resolution of the unbounded archive
+    (``tests/test_epsilon_archive.py``); the grid size lands in
+    ``stats["archive_epsilon"]`` / ``stats["archive_size"]``.
+
+    ``checkpoint_dir`` snapshots the full search state — generation
+    index, population, archive, hypervolume history, and the threaded
+    RNG stream — every ``checkpoint_every`` generations
+    (:class:`repro.runtime.dse_checkpoint.SearchCheckpointer`); on entry
+    the newest valid snapshot is restored and the run continues
+    bit-identically.  ``fail_at_generation`` injects deterministic
+    :class:`~repro.runtime.fault_tolerance.InjectedFailure`\\ s at
+    generation boundaries to exercise that path (decremented in place so
+    a dict shared across restarts fails each boundary ``n`` times).
     """
     if budget < 1:
         raise ValueError("budget must be >= 1")
     if pop_size < 4:
         raise ValueError("pop_size must be >= 4")
+    fail_at_generation = (fail_at_generation
+                          if fail_at_generation is not None else {})
+
+    def maybe_fail(gen: int) -> None:
+        if fail_at_generation.get(gen, 0) > 0:
+            fail_at_generation[gen] -= 1
+            from repro.runtime.fault_tolerance import InjectedFailure
+            raise InjectedFailure(
+                f"injected failure at generation boundary {gen}")
+
+    ckpt = None
+    if checkpoint_dir is not None:
+        from repro.runtime.dse_checkpoint import SearchCheckpointer
+        ckpt = SearchCheckpointer(checkpoint_dir, every=checkpoint_every)
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
                    sqnr_floor_db=sqnr_floor_db, mesh=mesh,
                    traffic=traffic, n_slots=n_slots)
-    pop = space.random_population(min(pop_size, budget), rng)
-    F = ev.evaluate(pop)
-    evals = len(pop)
-    ref = reference_point(F) if ref_point is None else ref_point
-    arch_g, arch_F = _front(pop, F)
-    history = [(evals, hypervolume(arch_F, ref))]
-    all_F = [F]
+
+    def eps_vector(ref, F0) -> np.ndarray | None:
+        if archive_epsilon is None:
+            return None
+        if np.ndim(archive_epsilon) == 0:
+            return epsilon_from_reference(ref, F0.min(axis=0),
+                                          float(archive_epsilon))
+        return np.asarray(archive_epsilon, dtype=np.float64)
+
+    def rebuild_archive(eps, arch_g, arch_F):
+        # deterministic reconstruction: re-offering the surviving
+        # representatives in stored order reproduces the grid exactly
+        archive = EpsilonDominanceArchive(eps)
+        archive.add(arch_g, arch_F)
+        return archive
+
+    eps_archive = None
+    eps_vec = None
+    snap = ckpt.restore() if ckpt is not None else None
+    if snap is not None:
+        gen = snap["gen"]
+        evals = snap["evals"]
+        pop, F = snap["pop"], snap["F"]
+        arch_g, arch_F = snap["arch_g"], snap["arch_F"]
+        ref = snap["ref"]
+        history = snap["history"]
+        all_F = snap["all_F"]
+        rng.bit_generator.state = snap["rng_state"]
+        eps_vec = snap["eps_vec"]
+        if eps_vec is not None:
+            eps_archive = rebuild_archive(eps_vec, arch_g, arch_F)
+    else:
+        maybe_fail(0)
+        pop = space.random_population(min(pop_size, budget), rng)
+        F = ev.evaluate(pop)
+        evals = len(pop)
+        gen = 0
+        ref = reference_point(F) if ref_point is None else ref_point
+        eps_vec = eps_vector(ref, F)
+        if eps_vec is not None:
+            eps_archive = EpsilonDominanceArchive(eps_vec)
+            eps_archive.add(pop, F)
+            arch_g, arch_F = eps_archive.genomes, eps_archive.objectives
+        else:
+            arch_g, arch_F = _front(pop, F)
+        history = [(evals, hypervolume(arch_F, ref))]
+        all_F = [F]
+        if ckpt is not None and ckpt.should_save(0, done=evals >= budget):
+            ckpt.save(gen=0, evals=evals, pop=pop, F=F, arch_g=arch_g,
+                      arch_F=arch_F, ref=ref, history=history,
+                      all_F=all_F, rng_state=rng.bit_generator.state,
+                      eps_vec=eps_vec)
     while evals < budget:
+        maybe_fail(gen + 1)
         n_off = min(pop_size, budget - evals)
         ranks, crowd = _ranks_and_crowding(F)
         p1 = _tournament(rng, n_off, ranks, crowd)
@@ -495,15 +582,20 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
         children = space.mutate(children, rng, mutation_rate)
         Fc = ev.evaluate(children)
         evals += n_off
+        gen += 1
         all_F.append(Fc)
-        comb_g = np.concatenate([arch_g, children])
-        comb_F = np.concatenate([arch_F, Fc])
-        # a genome re-visited across generations has an identical memoized
-        # objective row; keep one copy (first occurrence) so the archive
-        # stays the *set* of non-dominated genomes found
-        _, uidx = np.unique(comb_g, axis=0, return_index=True)
-        uidx.sort()
-        arch_g, arch_F = _front(comb_g[uidx], comb_F[uidx])
+        if eps_archive is not None:
+            eps_archive.add(children, Fc)
+            arch_g, arch_F = eps_archive.genomes, eps_archive.objectives
+        else:
+            comb_g = np.concatenate([arch_g, children])
+            comb_F = np.concatenate([arch_F, Fc])
+            # a genome re-visited across generations has an identical
+            # memoized objective row; keep one copy (first occurrence) so
+            # the archive stays the *set* of non-dominated genomes found
+            _, uidx = np.unique(comb_g, axis=0, return_index=True)
+            uidx.sort()
+            arch_g, arch_F = _front(comb_g[uidx], comb_F[uidx])
         comb = np.concatenate([pop, children])
         Fcomb = np.concatenate([F, Fc])
         ranks2, crowd2 = _ranks_and_crowding(Fcomb)
@@ -511,8 +603,18 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
         sel = order[:pop_size]
         pop, F = comb[sel], Fcomb[sel]
         history.append((evals, hypervolume(arch_F, ref)))
-    return _result("nsga2", ev, seed, arch_g, arch_F, ref, history, all_F,
-                   evals, population=pop, population_objectives=F)
+        if ckpt is not None and ckpt.should_save(gen,
+                                                 done=evals >= budget):
+            ckpt.save(gen=gen, evals=evals, pop=pop, F=F, arch_g=arch_g,
+                      arch_F=arch_F, ref=ref, history=history,
+                      all_F=all_F, rng_state=rng.bit_generator.state,
+                      eps_vec=eps_vec)
+    res = _result("nsga2", ev, seed, arch_g, arch_F, ref, history, all_F,
+                  evals, population=pop, population_objectives=F)
+    res.stats["archive_size"] = int(len(arch_F))
+    if eps_vec is not None:
+        res.stats["archive_epsilon"] = [float(e) for e in eps_vec]
+    return res
 
 
 def successive_halving(space: CoExploreSpace, workload, budget: int, *,

@@ -1,5 +1,5 @@
-"""Fault-tolerant training runtime: restart loop, failure injection,
-straggler detection.
+"""Fault-tolerant runtime: restart loop, failure injection, straggler
+detection.
 
 On a real fleet these hooks bind to the cluster scheduler; the logic here
 is the part that must be correct regardless of fleet plumbing:
@@ -10,30 +10,44 @@ is the part that must be correct regardless of fleet plumbing:
 * failure injection kills the step loop at a chosen step to exercise that
   path deterministically;
 * the straggler detector keeps an EWMA + variance of step wall-times and
-  flags outliers (on a fleet this feeds re-sharding / hot-sparing).
+  flags outliers (on a fleet this feeds re-sharding / hot-sparing), and
+  re-baselines after a run of consecutive flags so a *permanent*
+  distribution shift (slower hardware after resume, a migrated host) is
+  adopted as the new normal instead of flagging every step forever.
+
+:func:`restart_loop` is the generic retry driver shared by the training
+loop here and the exploration runtime
+(:mod:`repro.runtime.dse_checkpoint`): a configurable retryable-exception
+set with exponential backoff between restarts.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, TypeVar
 
 from repro.checkpoint import checkpoint as ckpt_lib
 
+T = TypeVar("T")
+
 
 class InjectedFailure(RuntimeError):
-    pass
+    """Deterministic fault injection — raised at a chosen step / chunk /
+    generation boundary to exercise the restart path."""
 
 
 @dataclasses.dataclass
 class StragglerDetector:
     alpha: float = 0.1
     threshold: float = 3.0        # flag if step > mean + threshold * std
+    rebaseline_after: int = 8     # K consecutive flags => adopt new regime
     mean: float = 0.0
     var: float = 0.0
     n: int = 0
     flagged: int = 0
+    consecutive_flags: int = 0
+    rebaselines: int = 0
 
     def observe(self, dt: float) -> bool:
         self.n += 1
@@ -50,8 +64,56 @@ class StragglerDetector:
             self.mean += self.alpha * delta
             self.var = (1 - self.alpha) * (self.var
                                            + self.alpha * delta ** 2)
-        self.flagged += int(is_straggler)
+            self.consecutive_flags = 0
+        else:
+            self.flagged += 1
+            self.consecutive_flags += 1
+            if self.consecutive_flags >= self.rebaseline_after:
+                # K flags in a row is not K independent outliers — the
+                # distribution shifted (e.g. slower hardware after a
+                # resume).  Adopt the new level as the baseline and
+                # restart the warm-up so flagging resumes only against
+                # the new regime.
+                self.mean = dt
+                self.var = 0.0
+                self.n = 1
+                self.consecutive_flags = 0
+                self.rebaselines += 1
         return is_straggler
+
+
+def restart_loop(attempt: Callable[[], T], *,
+                 max_restarts: int = 10,
+                 retryable: tuple = (InjectedFailure,),
+                 backoff_s: float = 0.0,
+                 backoff_factor: float = 2.0,
+                 max_backoff_s: float = 30.0,
+                 on_restart: Callable[[int, BaseException], None]
+                 | None = None) -> tuple[int, T]:
+    """Run ``attempt()`` until it returns, restarting on ``retryable``
+    exceptions with exponential backoff.
+
+    Returns ``(restarts, result)``.  Exceptions outside ``retryable``
+    propagate immediately; more than ``max_restarts`` retryable failures
+    re-raise the last one.  ``backoff_s`` is the first sleep (0 disables
+    sleeping entirely — the default, so tests and in-process resume stay
+    instant); each restart multiplies it by ``backoff_factor`` up to
+    ``max_backoff_s``.
+    """
+    retryable = tuple(retryable)
+    restarts = 0
+    while True:
+        try:
+            return restarts, attempt()
+        except retryable as exc:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts, exc)
+            if backoff_s > 0:
+                time.sleep(min(backoff_s * backoff_factor ** (restarts - 1),
+                               max_backoff_s))
 
 
 @dataclasses.dataclass
@@ -72,14 +134,23 @@ def run_with_restarts(
     ckpt_every: int = 10,
     fail_at: dict[int, int] | None = None,       # {step: n_times_to_fail}
     max_restarts: int = 10,
+    retryable: tuple = (InjectedFailure,),
+    backoff_s: float = 0.0,
+    backoff_factor: float = 2.0,
+    max_backoff_s: float = 30.0,
 ) -> TrainLoopResult:
-    """Checkpoint/restart driver.  ``state`` must contain a 'step' entry."""
+    """Checkpoint/restart driver.  ``state`` must contain a 'step' entry.
+
+    ``retryable`` configures which exceptions trigger a restart-from-
+    checkpoint (anything else propagates), and ``backoff_s`` /
+    ``backoff_factor`` / ``max_backoff_s`` add exponential backoff between
+    restarts — on a real fleet a crash loop must not hammer the scheduler.
+    """
     fail_at = dict(fail_at or {})
-    restarts = 0
     losses: list = []
     detector = StragglerDetector()
 
-    while True:
+    def attempt() -> int:
         state = init_state()
         step, restored = ckpt_lib.restore_latest(ckpt_dir, state)
         if restored is not None:
@@ -87,21 +158,22 @@ def run_with_restarts(
             start = int(step) + 1
         else:
             start = 0
-        try:
-            for s in range(start, total_steps):
-                if fail_at.get(s, 0) > 0:
-                    fail_at[s] -= 1
-                    raise InjectedFailure(f"injected failure at step {s}")
-                t0 = time.monotonic()
-                state, loss = train_step(state, data_batch(s))
-                detector.observe(time.monotonic() - t0)
-                losses.append((s, float(loss)))
-                if (s + 1) % ckpt_every == 0 or s == total_steps - 1:
-                    ckpt_lib.save(ckpt_dir, s, state)
-            return TrainLoopResult(final_step=total_steps - 1,
-                                   restarts=restarts, losses=losses,
-                                   straggler_flags=detector.flagged)
-        except InjectedFailure:
-            restarts += 1
-            if restarts > max_restarts:
-                raise
+        for s in range(start, total_steps):
+            if fail_at.get(s, 0) > 0:
+                fail_at[s] -= 1
+                raise InjectedFailure(f"injected failure at step {s}")
+            t0 = time.monotonic()
+            state, loss = train_step(state, data_batch(s))
+            detector.observe(time.monotonic() - t0)
+            losses.append((s, float(loss)))
+            if (s + 1) % ckpt_every == 0 or s == total_steps - 1:
+                ckpt_lib.save(ckpt_dir, s, state)
+        return total_steps - 1
+
+    restarts, final_step = restart_loop(
+        attempt, max_restarts=max_restarts, retryable=retryable,
+        backoff_s=backoff_s, backoff_factor=backoff_factor,
+        max_backoff_s=max_backoff_s)
+    return TrainLoopResult(final_step=final_step, restarts=restarts,
+                           losses=losses,
+                           straggler_flags=detector.flagged)

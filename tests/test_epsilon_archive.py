@@ -1,0 +1,152 @@
+"""Epsilon-dominance archive (ISSUE 7): grid semantics, deterministic
+replay, and the bounded-memory / hypervolume-preservation contract on a
+long NSGA-II run."""
+
+import numpy as np
+import pytest
+
+from repro.core.workloads import ConvLayer, Workload
+from repro.explore import CoExploreSpace, hypervolume, nsga2
+from repro.explore.pareto import (EpsilonDominanceArchive,
+                                  epsilon_from_reference)
+
+
+# ---------------------------------------------------------------------------
+# grid semantics
+# ---------------------------------------------------------------------------
+
+def test_box_dominated_candidate_rejected():
+    a = EpsilonDominanceArchive(1.0, n_objectives=2)
+    a.add(np.array([[0]]), np.array([[0.5, 0.5]]))      # box (0, 0)
+    # box (1, 1) is dominated by (0, 0) -> rejected even though the point
+    # itself is non-dominated at full resolution in neither objective
+    n = a.add(np.array([[1]]), np.array([[1.5, 1.5]]))
+    assert n == 1
+    assert a.objectives.tolist() == [[0.5, 0.5]]
+
+
+def test_accepted_candidate_evicts_dominated_boxes():
+    a = EpsilonDominanceArchive(1.0, n_objectives=2)
+    a.add(np.array([[0], [1]]),
+          np.array([[2.5, 0.5], [0.5, 2.5]]))           # boxes (2,0), (0,2)
+    assert len(a) == 2
+    a.add(np.array([[2]]), np.array([[0.2, 0.2]]))      # box (0,0) beats both
+    assert len(a) == 1
+    assert a.objectives.tolist() == [[0.2, 0.2]]
+    assert a.genomes.tolist() == [[2]]
+
+
+def test_same_box_keeps_point_nearest_lower_corner():
+    a = EpsilonDominanceArchive(1.0, n_objectives=2)
+    a.add(np.array([[0]]), np.array([[0.9, 0.9]]))
+    a.add(np.array([[1]]), np.array([[0.1, 0.1]]))      # closer to corner
+    assert len(a) == 1
+    assert a.genomes.tolist() == [[1]]
+    # incumbent keeps ties and farther points
+    a.add(np.array([[2]]), np.array([[0.1, 0.1]]))
+    a.add(np.array([[3]]), np.array([[0.5, 0.5]]))
+    assert a.genomes.tolist() == [[1]]
+
+
+def test_incomparable_boxes_accumulate():
+    a = EpsilonDominanceArchive(np.array([1.0, 2.0]))
+    F = np.array([[0.5, 9.0], [1.5, 5.0], [2.5, 1.0]])
+    a.add(np.arange(3)[:, None], F)
+    assert len(a) == 3
+    g, f = a.front()
+    assert len(g) == 3                          # mutually non-dominated
+
+
+def test_replay_reproduces_archive_exactly():
+    """Re-offering the archived representatives in stored order rebuilds
+    the grid bit for bit — the checkpoint/resume reconstruction path."""
+    rng = np.random.default_rng(7)
+    a = EpsilonDominanceArchive(0.05, n_objectives=3)
+    for _ in range(20):
+        a.add(rng.integers(0, 100, size=(16, 4)), rng.random((16, 3)))
+    b = EpsilonDominanceArchive(0.05, n_objectives=3)
+    b.add(a.genomes, a.objectives)
+    assert np.array_equal(a.genomes, b.genomes)
+    assert np.array_equal(a.objectives, b.objectives)
+
+
+def test_archive_validation():
+    with pytest.raises(ValueError, match="positive"):
+        EpsilonDominanceArchive(0.0, n_objectives=2)
+    with pytest.raises(ValueError, match="positive"):
+        EpsilonDominanceArchive([0.1, -0.1])
+    a = EpsilonDominanceArchive(0.1, n_objectives=2)
+    with pytest.raises(ValueError, match="does not match epsilon"):
+        a.add(np.zeros((1, 2)), np.zeros((1, 3)))
+    with pytest.raises(ValueError, match="genomes vs"):
+        a.add(np.zeros((2, 2)), np.zeros((1, 2)))
+    assert a.genomes.shape == (0, 0)            # still empty, still usable
+
+
+def test_epsilon_from_reference():
+    eps = epsilon_from_reference(np.array([10.0, 1.0]),
+                                 np.array([0.0, 1.0]), 0.1)
+    np.testing.assert_allclose(eps[0], 1.0)     # 10% of the span
+    np.testing.assert_allclose(eps[1], 0.1)     # zero span -> |ref| floor
+    with pytest.raises(ValueError, match=r"in \(0, 1\)"):
+        epsilon_from_reference(np.ones(2), np.zeros(2), 1.5)
+
+
+# ---------------------------------------------------------------------------
+# bounded archive on a long search run (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+TINY_WL = Workload("tiny", (
+    ConvLayer("c1", 58, 58, 64, 64),
+    ConvLayer("c2", 30, 30, 64, 128, 3, 3, 2),
+    ConvLayer("fc", 1, 1, 512, 1000, 1, 1),
+))
+SEARCH_SPACE = CoExploreSpace(n_layers=len(TINY_WL.layers))
+
+
+def test_bounded_archive_memory_and_hypervolume():
+    """3072 evaluations: the epsilon archive stays bounded (far below the
+    unbounded archive) while its hypervolume stays within the grid
+    resolution of the unbounded one."""
+    rel_eps = 0.02
+    kw = dict(pop_size=64, seed=11, backend="numpy")
+    unbounded = nsga2(SEARCH_SPACE, TINY_WL, 3072, **kw)
+    bounded = nsga2(SEARCH_SPACE, TINY_WL, 3072, archive_epsilon=rel_eps,
+                    **kw)
+
+    # the evolution itself is archive-independent: same trajectory
+    assert np.array_equal(bounded.population, unbounded.population)
+    assert np.array_equal(bounded.all_objectives, unbounded.all_objectives)
+
+    nb, nu = bounded.stats["archive_size"], unbounded.stats["archive_size"]
+    assert nb < nu / 3                          # genuinely bounded
+    assert nb <= 64                             # constant-memory regime
+
+    # hv(unbounded) - hv(bounded) <= sum_k eps_k * prod_{j != k} span_j:
+    # each archived box representative is within one grid cell of a true
+    # non-dominated point, so the lost hypervolume is at most a one-cell-
+    # thick shell of the dominated region
+    eps = np.asarray(bounded.stats["archive_epsilon"])
+    ref = unbounded.ref_point
+    span = ref - unbounded.all_objectives.min(axis=0)
+    k = len(eps)
+    shell = sum(eps[i] * np.prod([span[j] for j in range(k) if j != i])
+                for i in range(k))
+    hv_u = unbounded.history[-1][1]
+    hv_b = bounded.history[-1][1]
+    assert hv_u >= hv_b                         # bounding never adds hv
+    assert hv_u - hv_b <= shell, (hv_u, hv_b, shell)
+
+    # the bounded front is a genuine non-dominated set over its archive
+    assert len(bounded.genomes) == len(bounded.front_objectives)
+    recomputed = hypervolume(bounded.front_objectives, ref)
+    np.testing.assert_allclose(recomputed, hv_b, rtol=1e-12)
+
+
+def test_marathon_preset_carries_archive_epsilon():
+    from repro.configs.coexplore_presets import get_preset
+    p = get_preset("marathon")
+    assert p.archive_epsilon == 0.01 and p.method == "nsga2"
+    with pytest.raises(ValueError, match="archive_epsilon"):
+        from repro.configs.coexplore_presets import CoExplorePreset
+        CoExplorePreset(name="bad", method="random", archive_epsilon=0.1)

@@ -4,6 +4,7 @@ elastic re-meshing, gradient compression error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.parallel import compression
 from repro.runtime.elastic import reshard, survivable_mesh
@@ -91,3 +92,93 @@ def test_grad_compression_single_step_error_bounded():
     # residual == what was lost
     np.testing.assert_allclose(np.asarray(err2["w"]),
                                np.asarray(g["w"] - dq["w"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# straggler re-baselining + generic restart loop (ISSUE 7 satellites)
+# ---------------------------------------------------------------------------
+
+def test_straggler_rebaseline_adopts_permanent_shift():
+    """A permanent slowdown (e.g. migrated to slower hardware after a
+    resume) is flagged only rebaseline_after times, then adopted as the
+    new normal instead of flagging every step forever."""
+    det = StragglerDetector(alpha=0.3, threshold=3.0, rebaseline_after=8)
+    for _ in range(20):
+        det.observe(0.10)
+    flags = sum(det.observe(1.5) for _ in range(30))
+    assert det.rebaselines == 1
+    assert flags == det.rebaseline_after        # then silence
+    assert det.consecutive_flags == 0
+    # and the *new* regime's outliers are flagged again after warm-up
+    for _ in range(10):
+        det.observe(1.5)
+    assert det.observe(15.0) is True
+
+
+def test_restart_loop_retryable_set_and_counts():
+    from repro.runtime.fault_tolerance import restart_loop
+
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] <= 2:
+            raise TimeoutError("transient")
+        return "done"
+
+    restarts, out = restart_loop(flaky, retryable=(TimeoutError,))
+    assert (restarts, out) == (2, "done")
+
+    def poisoned():
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError):             # outside the retryable set
+        restart_loop(poisoned, retryable=(TimeoutError,))
+    with pytest.raises(TimeoutError):           # budget exhausted
+        restart_loop(lambda: (_ for _ in ()).throw(TimeoutError()),
+                     max_restarts=3, retryable=(TimeoutError,))
+
+
+def test_restart_loop_exponential_backoff(monkeypatch):
+    from repro.runtime import fault_tolerance as ft
+
+    sleeps = []
+    monkeypatch.setattr(ft.time, "sleep", sleeps.append)
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] <= 4:
+            raise TimeoutError
+        return attempts["n"]
+
+    restarts, _ = ft.restart_loop(flaky, retryable=(TimeoutError,),
+                                  backoff_s=0.1, backoff_factor=2.0,
+                                  max_backoff_s=0.3)
+    assert restarts == 4
+    np.testing.assert_allclose(sleeps, [0.1, 0.2, 0.3, 0.3])  # capped
+
+
+def test_run_with_restarts_custom_retryable(tmp_path):
+    """The training driver restarts from checkpoint on a user-chosen
+    exception class, not just InjectedFailure."""
+    init_state, step_fn, data = _toy_problem()
+    tripped = {"done": False}
+
+    def step_with_io_error(state, batch):
+        if int(state["step"]) == 12 and not tripped["done"]:
+            tripped["done"] = True
+            raise OSError("nfs hiccup")
+        return step_fn(state, batch)
+
+    clean = run_with_restarts(
+        init_state=init_state, train_step=step_fn, data_batch=data,
+        total_steps=30, ckpt_dir=str(tmp_path / "clean"), ckpt_every=5)
+    faulty = run_with_restarts(
+        init_state=init_state, train_step=step_with_io_error,
+        data_batch=data, total_steps=30,
+        ckpt_dir=str(tmp_path / "faulty"), ckpt_every=5,
+        retryable=(OSError,))
+    assert faulty.restarts == 1
+    assert np.isclose(clean.losses[-1][1], faulty.losses[-1][1],
+                      rtol=0, atol=0)

@@ -176,3 +176,67 @@ def test_clear_keeps_cap_and_path(tmp_path):
     cache.clear()
     assert len(cache) == 0 and cache.hits == 0 and cache.misses == 0
     assert cache.max_rows == 16 and cache.path == path
+
+
+# ---------------------------------------------------------------------------
+# atomic persistence + state export/import (ISSUE 7 satellites)
+# ---------------------------------------------------------------------------
+
+def test_save_is_atomic_under_write_failure(tmp_path, monkeypatch):
+    """A crash mid-save must leave the previous on-disk cache intact and
+    no temp litter — save() writes a sibling temp file and renames."""
+    path = tmp_path / "synth.npz"
+    cache = PersistentSynthesisCache(path)
+    soa = _small_soa(32)
+    cache.synthesize(soa)
+    assert cache.save() == 32
+
+    cache.synthesize(_small_soa(64))            # 32 new rows pending
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez_compressed", boom)
+    with pytest.raises(OSError):
+        cache.save()
+    monkeypatch.undo()
+
+    leftovers = [p for p in tmp_path.iterdir() if p.name != "synth.npz"]
+    assert leftovers == []                      # temp file cleaned up
+    survivor = PersistentSynthesisCache(path)   # old file still valid
+    assert len(survivor) == 32
+    mask, cols = survivor.lookup(config_digests(soa))
+    assert mask.all()
+
+
+def test_export_import_state_roundtrip(tmp_path):
+    src = PersistentSynthesisCache(tmp_path / "a.npz")
+    soa = _small_soa(48)
+    src.synthesize(soa)
+    src.synthesize(soa)                         # 48 hits
+    state = src.export_state()
+
+    dst = PersistentSynthesisCache(tmp_path / "b.npz")
+    dst.synthesize(_small_soa(8))               # overwritten by import
+    dst.import_state(state)
+    assert len(dst) == len(src) == 48
+    assert (dst.hits, dst.misses, dst.evictions) == (48, 48, 0)
+    mask, cols = dst.lookup(config_digests(soa))
+    assert mask.all()
+    fresh = synthesize_soa(soa)
+    for c in REPORT_COLUMNS:
+        assert np.array_equal(cols[c], fresh[c]), c
+
+    # the exported dict is a snapshot: mutating the source afterwards
+    # must not retroactively change an already-captured state
+    src.synthesize(_small_soa(64))
+    assert len(state["keys"]) == 48
+
+
+def test_import_state_validates_shapes(tmp_path):
+    cache = PersistentSynthesisCache(tmp_path / "c.npz")
+    state = {"keys": np.zeros((4, 2), dtype=np.uint64),
+             "vals": np.zeros((3, len(REPORT_COLUMNS))),
+             "hits": 0, "misses": 0, "evictions": 0}
+    with pytest.raises(ValueError):
+        cache.import_state(state)
