@@ -80,6 +80,7 @@ def provenance() -> dict:
         jax_version = None
         n_devices = None
     import os
+    from repro.obs import snapshot as obs_snapshot
     return {
         "python": platform.python_version(),
         "numpy": np.__version__,
@@ -88,6 +89,10 @@ def provenance() -> dict:
         "platform": platform.platform(),
         "cpu_count": os.cpu_count(),
         "git_sha": sha,
+        # process-wide telemetry counters at provenance time: cache
+        # hits/misses, chunks/configs streamed, evals/s inputs — lands in
+        # every BENCH_*.json that embeds provenance()
+        "metrics": obs_snapshot(),
     }
 
 

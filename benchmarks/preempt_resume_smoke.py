@@ -57,10 +57,15 @@ def _throttled_space(delay_s: float):
 
 
 def run_child(ckpt_dir: str, delay_s: float) -> None:
+    from repro import obs
     from repro.core.dse_batch import _sweep_chunked
     from repro.core.workloads import get_workload
     from repro.runtime.dse_checkpoint import SweepCheckpointer
 
+    # the JSONL event log lives next to the checkpoints and must survive
+    # the SIGKILL the same way they do (flushed per closed span)
+    obs.configure(enabled=True,
+                  jsonl_path=os.path.join(ckpt_dir, "trace.jsonl"))
     ck = SweepCheckpointer(ckpt_dir, every=1)
     _sweep_chunked(get_workload("vgg16"), _throttled_space(delay_s),
                    chunk_size=CHUNK, backend="numpy", checkpoint=ck)
@@ -144,6 +149,26 @@ def main() -> None:
     if not front_identical:
         failures.append("resumed front differs from uninterrupted run")
 
+    # the killed child's JSONL event log must replay: every complete line
+    # parses (a torn final line is tolerated) and carries the sweep's
+    # stage spans up to the kill point
+    from repro.obs import load_jsonl
+    jsonl_path = ckpt_dir / "trace.jsonl"
+    replayed: list[dict] = []
+    if not jsonl_path.is_file():
+        failures.append("killed child left no trace.jsonl")
+    else:
+        replayed = load_jsonl(jsonl_path)
+        names = {s.get("name") for s in replayed}
+        if "sweep.synthesize" not in names or "sweep.reduce" not in names:
+            failures.append(
+                f"replayed JSONL lacks sweep stage spans (got {names})")
+        bad = [s for s in replayed
+               if not isinstance(s.get("dur_s"), (int, float))]
+        if bad:
+            failures.append(
+                f"{len(bad)} replayed spans missing numeric dur_s")
+
     r = {
         "provenance": provenance(),
         "n_configs": ref.n_configs,
@@ -153,6 +178,7 @@ def main() -> None:
         "resumed_front_size": res.front_size,
         "reference_front_size": ref.front_size,
         "front_identical_after_sigkill_resume": front_identical,
+        "jsonl_spans_replayed_after_sigkill": len(replayed),
     }
     for k, v in sorted(r.items()):
         if k != "provenance":

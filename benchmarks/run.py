@@ -31,6 +31,11 @@ def main() -> None:
             failures += 1
             print(f"{tag}/EXCEPTION,0.00,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    # end-of-run telemetry: accumulated registry counters across every
+    # bench above (cache hit rates, configs/s, evals/s) — stderr so the
+    # CSV on stdout stays machine-parseable
+    from repro.obs import render_text
+    print(render_text(), file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -553,6 +553,11 @@ class ExploreSpec:
     # nsga2 searches (generation snapshots incl. RNG stream).
     checkpoint_dir: str | None = None
     checkpoint_every: int | None = None
+    # telemetry: None leaves the process-wide repro.obs switch untouched;
+    # True/False flips span tracing for the duration of run(); a dict is
+    # passed to repro.obs.configure() (e.g. {"jsonl_path": ...,
+    # "jax_annotations": True}).  The metrics registry is always on.
+    telemetry: object = None
 
     def __post_init__(self):
         if not self.workloads:
@@ -591,6 +596,12 @@ class ExploreSpec:
                 "checkpoint_dir applies to chunked uniform sweeps "
                 "(chunk_size=) or mixed-precision searches; a one-batch "
                 "sweep has no resumable stream")
+        if self.telemetry is not None \
+                and not isinstance(self.telemetry, (bool, dict)):
+            raise ValueError(
+                "telemetry must be None, a bool, or a dict of "
+                "repro.obs.configure() kwargs, got "
+                f"{type(self.telemetry).__name__}")
         if self.precision == "uniform":
             bad = [n for n, v in (
                 ("preset", self.preset), ("method", self.method),
@@ -639,7 +650,8 @@ class ExploreSpec:
                backend: str = "auto", mesh=None, use_cache: bool = True,
                cache=None, save_cache: bool = True,
                overlap: bool = True, checkpoint_dir: str | None = None,
-               checkpoint_every: int | None = None) -> "ExploreSpec":
+               checkpoint_every: int | None = None,
+               telemetry=None) -> "ExploreSpec":
         """Uniform-precision sweep of one workload over a config batch
         (the whole design space when ``configs`` is None).  A
         ``chunk_size`` streams an arbitrary-size config feed with bounded
@@ -653,7 +665,8 @@ class ExploreSpec:
                    use_cache=use_cache, cache=cache,
                    save_cache=save_cache, overlap=overlap,
                    checkpoint_dir=checkpoint_dir,
-                   checkpoint_every=checkpoint_every)
+                   checkpoint_every=checkpoint_every,
+                   telemetry=telemetry)
 
     @classmethod
     def mixed(cls, workload, *, preset: str | None = None,
@@ -663,7 +676,7 @@ class ExploreSpec:
               space_overrides: dict | None = None,
               chunk_size: int | None = None, backend: str = "auto",
               mesh=None, checkpoint_dir: str | None = None,
-              checkpoint_every: int | None = None,
+              checkpoint_every: int | None = None, telemetry=None,
               **search_kwargs) -> "ExploreSpec":
         """Guided mixed-precision co-exploration of one workload; a
         ``traffic`` trace switches the objectives to the serving-fleet
@@ -678,7 +691,7 @@ class ExploreSpec:
                    space_overrides=space_overrides, chunk_size=chunk_size,
                    backend=backend, mesh=mesh,
                    checkpoint_dir=checkpoint_dir,
-                   checkpoint_every=checkpoint_every,
+                   checkpoint_every=checkpoint_every, telemetry=telemetry,
                    search_kwargs=search_kwargs or None)
 
     @classmethod
@@ -691,7 +704,7 @@ class ExploreSpec:
              chunk_size: int | None = None, backend: str = "auto",
              mesh=None, use_cache: bool = True,
              checkpoint_dir: str | None = None,
-             checkpoint_every: int | None = None,
+             checkpoint_every: int | None = None, telemetry=None,
              **search_kwargs) -> "ExploreSpec":
         """A workload suite.  ``precision="uniform"`` enumerates the
         config batch once per workload (synthesis shared);
@@ -709,7 +722,7 @@ class ExploreSpec:
                    ref_point=ref_point, space_overrides=space_overrides,
                    chunk_size=chunk_size, backend=backend, mesh=mesh,
                    use_cache=use_cache, checkpoint_dir=checkpoint_dir,
-                   checkpoint_every=checkpoint_every,
+                   checkpoint_every=checkpoint_every, telemetry=telemetry,
                    search_kwargs=search_kwargs or None)
 
 
@@ -730,6 +743,12 @@ def run(spec: ExploreSpec):
         raise TypeError(
             f"run() takes an ExploreSpec, got {type(spec).__name__}; "
             f"build one with ExploreSpec.single/.mixed/.many")
+    from repro.obs import trace as obs_trace
+    with obs_trace.configured(spec.telemetry):
+        return _run_dispatch(spec)
+
+
+def _run_dispatch(spec: ExploreSpec):
     extra = dict(spec.search_kwargs or {})
     if spec.precision == "mixed":
         if len(spec.workloads) == 1:

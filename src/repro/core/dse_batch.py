@@ -49,6 +49,8 @@ from repro.core.pe import rf_access_energy_pj, sram_access_energy_pj
 from repro.core.synthesis import (PersistentSynthesisCache, SynthesisReport,
                                   sweep_synthesis_cache, synthesize_soa)
 from repro.core.workloads import Workload
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def _ceil_div(a, b):
@@ -1216,6 +1218,7 @@ def _sweep_chunked(workload: Workload,
       warning instead of losing the run; stream order and cache
       accounting are preserved (``timings["degraded"]``).
     """
+    import sys
     import time
     import warnings
     backend = resolve_backend(backend)
@@ -1247,6 +1250,39 @@ def _sweep_chunked(workload: Workload,
     timings = {"overlap": bool(overlap), "wall_s": 0.0, "synth_s": 0.0,
                "kernel_wait_s": 0.0, "watchdog_redispatches": 0,
                "degraded": False}
+    _reg = obs_metrics.get_registry()
+    root_span = obs_trace.span_start(
+        "sweep_chunked", workload=workload.name, backend=backend,
+        chunk_size=int(chunk_size), overlap=bool(overlap),
+        resume_cursor=resume_cursor)
+    n_total0, n_chunks0 = n_total, n_chunks   # restored-from-snapshot base
+    telemetry_flushed = False
+
+    def _flush_telemetry(status: str) -> None:
+        # Finalize wall_s + registry totals exactly once per attempt —
+        # on the success path after the terminal saves (pre-telemetry
+        # semantics), and from the error path's finally so an
+        # InjectedFailure / crashed attempt still reports its time and
+        # the registry sums stay consistent across resumed runs (only
+        # work done *this* attempt is counted, not restored totals).
+        nonlocal telemetry_flushed
+        if telemetry_flushed:
+            return
+        telemetry_flushed = True
+        timings["wall_s"] = time.perf_counter() - t_wall
+        _reg.inc("sweep.chunks", n_chunks - n_chunks0)
+        _reg.inc("sweep.configs", n_total - n_total0)
+        _reg.inc("sweep.wall_s", timings["wall_s"])
+        _reg.inc("sweep.synth_s", timings["synth_s"])
+        _reg.inc("sweep.kernel_wait_s", timings["kernel_wait_s"])
+        if status != "ok":
+            _reg.inc("sweep.failures")
+        if timings["wall_s"] > 0:
+            _reg.set("sweep.configs_per_s",
+                     (n_total - n_total0) / timings["wall_s"])
+        obs_trace.span_end(root_span, status=status,
+                           configs=n_total, chunks=n_chunks,
+                           wall_s=timings["wall_s"])
 
     def reduce_chunk(soa: dict, n: int, out: dict) -> None:
         nonlocal front_soa, front_metrics
@@ -1294,20 +1330,23 @@ def _sweep_chunked(workload: Workload,
             stacklevel=3)
         backend = "numpy"
         timings["degraded"] = True
+        _reg.inc("sweep.degraded")
         _ensure_executor()
         return _sweep_kernel(np, dcfg, dlay, outputs="aggregates")
 
     # (soa, n, cfg, lay, finalize, backend_at_dispatch, save_info,
-    #  cache_state)
+    #  cache_state, chunk_index, kernel_span)
     pending: tuple | None = None
 
     def drain() -> None:
         nonlocal pending
         if pending is None:
             return
-        psoa, pn, pcfg, play, pfin, pbackend, psave, pcache = pending
+        (psoa, pn, pcfg, play, pfin, pbackend, psave, pcache,
+         pci, kspan) = pending
         pending = None
         t0 = time.perf_counter()
+        kstatus = "ok"
         try:
             out = pfin(timeout=chunk_deadline_s)
         except ChunkDeadlineExceeded:
@@ -1317,18 +1356,26 @@ def _sweep_chunked(workload: Workload,
                 f"serially on the numpy kernel", RuntimeWarning,
                 stacklevel=3)
             timings["watchdog_redispatches"] += 1
-            out = _sweep_kernel(np, pcfg, play, outputs="aggregates")
+            _reg.inc("sweep.watchdog_redispatches")
+            kstatus = "watchdog"
+            with obs_trace.span("sweep.watchdog_recompute", chunk=pci):
+                out = _sweep_kernel(np, pcfg, play, outputs="aggregates")
         except Exception as exc:
             if pbackend != "jax" or not degrade_on_failure:
+                obs_trace.span_end(kspan, status="error")
                 raise
+            kstatus = "degraded"
             out = _degrade(pcfg, play, exc, "materialization")
         timings["kernel_wait_s"] += time.perf_counter() - t0
-        reduce_chunk(psoa, pn, out)
+        obs_trace.span_end(kspan, status=kstatus)
+        with obs_trace.span("sweep.reduce", chunk=pci, n=pn):
+            reduce_chunk(psoa, pn, out)
         if psave is not None:
-            checkpoint.save(cursor=psave[0], n_total=psave[1],
-                            front_soa=front_soa,
-                            front_metrics=front_metrics,
-                            cache_state=pcache)
+            with obs_trace.span("sweep.checkpoint", cursor=psave[0]):
+                checkpoint.save(cursor=psave[0], n_total=psave[1],
+                                front_soa=front_soa,
+                                front_metrics=front_metrics,
+                                cache_state=pcache)
 
     try:
         feed = _as_soa_chunks(configs, chunk_size)
@@ -1336,7 +1383,8 @@ def _sweep_chunked(workload: Workload,
         fresh: tuple | None = None
         while True:
             t0 = time.perf_counter()
-            soa = next(feed, None)
+            with obs_trace.span("sweep.pull"):
+                soa = next(feed, None)
             if soa is not None:
                 n = len(soa["pe_rows"])
                 if n == 0:
@@ -1358,13 +1406,16 @@ def _sweep_chunked(workload: Workload,
                 n_chunks += 1
                 # stage 1 (host): synthesis — in stream order, so cache
                 # lookups/inserts match the serial path row for row
-                if cache is not None:
-                    cols = cache.synthesize(soa)
-                elif use_cache:
-                    cols = sweep_synthesis_cache().synthesize(soa)
-                else:
-                    cols = synthesize_soa(soa)
-                cfg, lay = _make_cfg_lay(soa, cols, wb)
+                with obs_trace.span("sweep.synthesize", chunk=ci, n=n):
+                    if cache is not None:
+                        cols = cache.synthesize(soa)
+                    elif use_cache:
+                        cols = sweep_synthesis_cache().synthesize(soa)
+                    else:
+                        cols = synthesize_soa(soa)
+                    cfg, lay = _make_cfg_lay(soa, cols, wb)
+                # synth_s keeps its pre-telemetry meaning: host stage-1
+                # time including the feed pull (t0 is read before next())
                 timings["synth_s"] += time.perf_counter() - t0
                 save_info = cache_state = None
                 if checkpoint is not None \
@@ -1379,16 +1430,21 @@ def _sweep_chunked(workload: Workload,
                     if cache is not None:
                         cache_state = cache.export_state()
                 # stage 2 (device / worker thread): dispatch the kernel
+                kspan = obs_trace.span_start("sweep.kernel", chunk=ci,
+                                             n=n, backend=backend)
                 try:
-                    finalize = _dispatch_chunk(cfg, lay, backend, mesh,
-                                               chunk_size, n, executor)
+                    with obs_trace.span("sweep.dispatch", chunk=ci):
+                        finalize = _dispatch_chunk(cfg, lay, backend,
+                                                   mesh, chunk_size, n,
+                                                   executor)
                 except Exception as exc:
                     if backend != "jax" or not degrade_on_failure:
+                        obs_trace.span_end(kspan, status="error")
                         raise
                     out_now = _degrade(cfg, lay, exc, "dispatch")
                     finalize = lambda timeout=None, o=out_now: o  # noqa: E731
                 fresh = (soa, n, cfg, lay, finalize, backend,
-                         save_info, cache_state)
+                         save_info, cache_state, ci, kspan)
             drain()             # finalize + reduce the previous chunk
             if soa is None:
                 break
@@ -1398,6 +1454,8 @@ def _sweep_chunked(workload: Workload,
     finally:
         if executor is not None:
             executor.shutdown(wait=True)
+        if sys.exc_info()[0] is not None:
+            _flush_telemetry("error")
 
     if front_soa is None:
         front_soa = {k: np.empty(0, dtype=np.int64)
@@ -1407,14 +1465,16 @@ def _sweep_chunked(workload: Workload,
     if checkpoint is not None:
         # terminal snapshot: resuming a completed run restores the full
         # front and skips the whole feed (idempotent)
-        checkpoint.save(
-            cursor=n_chunks, n_total=n_total, front_soa=front_soa,
-            front_metrics=front_metrics,
-            cache_state=cache.export_state() if cache is not None
-            else None)
+        with obs_trace.span("sweep.checkpoint", cursor=n_chunks,
+                            terminal=True):
+            checkpoint.save(
+                cursor=n_chunks, n_total=n_total, front_soa=front_soa,
+                front_metrics=front_metrics,
+                cache_state=cache.export_state() if cache is not None
+                else None)
     if cache is not None and save_cache and cache.path is not None:
         cache.save()
-    timings["wall_s"] = time.perf_counter() - t_wall
+    _flush_telemetry("ok")
     return ChunkedSweep(workload=workload.name, backend=backend,
                         n_configs=n_total, n_chunks=n_chunks,
                         front_soa=front_soa, front_metrics=front_metrics,

@@ -33,6 +33,7 @@ from repro.core.confighash import (config_digests, digest_keys,
 from repro.core.dataflow import leakage_mw_soa
 from repro.core.pe import (rf_access_energy_pj, sram_access_energy_pj,
                            sram_area_um2)
+from repro.obs import metrics as obs_metrics
 
 @dataclasses.dataclass(frozen=True)
 class SynthesisReport:
@@ -322,8 +323,13 @@ class PersistentSynthesisCache:
         vals = np.zeros((len(keys), len(REPORT_COLUMNS)), dtype=np.float64)
         if mask.any():
             vals[mask] = self._vals[rows[mask]]
-        self.hits += int(mask.sum())
-        self.misses += int((~mask).sum())
+        nh = int(mask.sum())
+        nm = len(keys) - nh
+        self.hits += nh
+        self.misses += nm
+        reg = obs_metrics.get_registry()
+        reg.inc("synth_cache.hits", nh)
+        reg.inc("synth_cache.misses", nm)
         return mask, {c: vals[:, j] for j, c in enumerate(REPORT_COLUMNS)}
 
     def insert(self, digests, cols: dict[str, np.ndarray],

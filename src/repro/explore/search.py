@@ -43,6 +43,8 @@ from repro.explore.pareto import (EpsilonDominanceArchive,
                                   hypervolume, nondominated_sort,
                                   pareto_mask_k, reference_point)
 from repro.explore.space import CoExploreManySpace, CoExploreSpace
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -297,40 +299,64 @@ class Evaluator:
         rows are float64 regardless of backend.
         """
         t0 = time.perf_counter()
-        g = self.space.validate(genomes, raise_on_invalid=True)
-        m = self.full_subset if subset is None else min(int(subset),
-                                                       self.full_subset)
-        self.n_requested += len(g)
-        keys = self.space.genome_keys(g)
-        out = np.empty((len(g), len(self.objectives)), dtype=np.float64)
-        todo: list[int] = []
-        for i, key in enumerate(keys):
-            row = self._memo.get((key, m))
-            if row is None:
-                todo.append(i)
-            else:
-                self.n_memo_hits += 1
-                out[i] = row
-        wls, macs = self._subset(m)
-        for s in range(0, len(todo), self.chunk_size):
-            idx = np.asarray(todo[s:s + self.chunk_size], dtype=np.intp)
-            # rows were validated above; skip the per-chunk repeat
-            soa, assign = self.space.decode(g[idx], skip_validation=True)
-            pad = self._pad(len(idx)) - len(idx)
-            if pad > 0:
-                soa = {k: np.concatenate([v, v[-1:].repeat(pad, axis=0)])
-                       for k, v in soa.items()}
-                assign = np.concatenate(
-                    [assign, assign[-1:].repeat(pad, axis=0)])
-            out[idx] = self._objective_rows(wls, macs, soa, assign,
-                                            len(idx))
-            self.n_kernel += len(idx)
-            for j, i in enumerate(idx):
-                # copy: the caller owns `out`, and an in-place edit of the
-                # returned matrix must not poison the memo
-                self._memo[(keys[i], m)] = out[i].copy()
-        self.eval_seconds += time.perf_counter() - t0
+        with obs_trace.span("explore.evaluate", n=len(genomes),
+                            subset=subset) as esp:
+            g = self.space.validate(genomes, raise_on_invalid=True)
+            m = self.full_subset if subset is None else min(
+                int(subset), self.full_subset)
+            self.n_requested += len(g)
+            keys = self.space.genome_keys(g)
+            out = np.empty((len(g), len(self.objectives)),
+                           dtype=np.float64)
+            todo: list[int] = []
+            for i, key in enumerate(keys):
+                row = self._memo.get((key, m))
+                if row is None:
+                    todo.append(i)
+                else:
+                    self.n_memo_hits += 1
+                    out[i] = row
+            wls, macs = self._subset(m)
+            for s in range(0, len(todo), self.chunk_size):
+                idx = np.asarray(todo[s:s + self.chunk_size],
+                                 dtype=np.intp)
+                # rows were validated above; skip the per-chunk repeat
+                soa, assign = self.space.decode(g[idx],
+                                                skip_validation=True)
+                pad = self._pad(len(idx)) - len(idx)
+                if pad > 0:
+                    soa = {k: np.concatenate([v,
+                                              v[-1:].repeat(pad, axis=0)])
+                           for k, v in soa.items()}
+                    assign = np.concatenate(
+                        [assign, assign[-1:].repeat(pad, axis=0)])
+                out[idx] = self._objective_rows(wls, macs, soa, assign,
+                                                len(idx))
+                self.n_kernel += len(idx)
+                for j, i in enumerate(idx):
+                    # copy: the caller owns `out`, and an in-place edit of
+                    # the returned matrix must not poison the memo
+                    self._memo[(keys[i], m)] = out[i].copy()
+            esp.set(kernel=len(todo), memo_hits=len(g) - len(todo))
+        dt = time.perf_counter() - t0
+        self.eval_seconds += dt
+        reg = obs_metrics.get_registry()
+        reg.inc("explore.requested_evals", len(g))
+        reg.inc("explore.kernel_evals", len(todo))
+        reg.inc("explore.memo_hits", len(g) - len(todo))
+        reg.inc("explore.eval_seconds", dt)
         return out
+
+    def reset_stats(self) -> None:
+        """Zero the per-search counters so a reused evaluator attributes
+        ``stats()`` (and ``SearchResult.stats``) to one search instead of
+        accumulating across every search it ever served.  The memo and
+        subset caches are deliberately kept — resetting accounting must
+        not change evaluation behavior."""
+        self.n_requested = 0
+        self.n_kernel = 0
+        self.n_memo_hits = 0
+        self.eval_seconds = 0.0
 
     def stats(self) -> dict:
         return {
@@ -412,15 +438,16 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
     evals = 0
     while evals < budget:
         n = min(batch_size, budget - evals)
-        g = space.random_population(n, rng)
-        F = ev.evaluate(g)
-        evals += n
-        all_F.append(F)
-        if ref is None:
-            ref = reference_point(F)
-        front_g, front_F = _front(np.concatenate([front_g, g]),
-                                  np.concatenate([front_F, F]))
-        history.append((evals, hypervolume(front_F, ref)))
+        with obs_trace.span("random_search.batch", n=n, evals=evals):
+            g = space.random_population(n, rng)
+            F = ev.evaluate(g)
+            evals += n
+            all_F.append(F)
+            if ref is None:
+                ref = reference_point(F)
+            front_g, front_F = _front(np.concatenate([front_g, g]),
+                                      np.concatenate([front_F, F]))
+            history.append((evals, hypervolume(front_F, ref)))
     return _result("random", ev, seed, front_g, front_F, ref, history,
                    all_F, evals)
 
@@ -572,37 +599,44 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
                       arch_F=arch_F, ref=ref, history=history,
                       all_F=all_F, rng_state=rng.bit_generator.state,
                       eps_vec=eps_vec)
+    reg = obs_metrics.get_registry()
     while evals < budget:
         maybe_fail(gen + 1)
         n_off = min(pop_size, budget - evals)
-        ranks, crowd = _ranks_and_crowding(F)
-        p1 = _tournament(rng, n_off, ranks, crowd)
-        p2 = _tournament(rng, n_off, ranks, crowd)
-        children = space.crossover(pop[p1], pop[p2], rng)
-        children = space.mutate(children, rng, mutation_rate)
-        Fc = ev.evaluate(children)
-        evals += n_off
-        gen += 1
-        all_F.append(Fc)
-        if eps_archive is not None:
-            eps_archive.add(children, Fc)
-            arch_g, arch_F = eps_archive.genomes, eps_archive.objectives
-        else:
-            comb_g = np.concatenate([arch_g, children])
-            comb_F = np.concatenate([arch_F, Fc])
-            # a genome re-visited across generations has an identical
-            # memoized objective row; keep one copy (first occurrence) so
-            # the archive stays the *set* of non-dominated genomes found
-            _, uidx = np.unique(comb_g, axis=0, return_index=True)
-            uidx.sort()
-            arch_g, arch_F = _front(comb_g[uidx], comb_F[uidx])
-        comb = np.concatenate([pop, children])
-        Fcomb = np.concatenate([F, Fc])
-        ranks2, crowd2 = _ranks_and_crowding(Fcomb)
-        order = np.lexsort((np.arange(len(comb)), -crowd2, ranks2))
-        sel = order[:pop_size]
-        pop, F = comb[sel], Fcomb[sel]
-        history.append((evals, hypervolume(arch_F, ref)))
+        with obs_trace.span("nsga2.generation", gen=gen + 1,
+                            evals=evals, n_off=n_off):
+            ranks, crowd = _ranks_and_crowding(F)
+            p1 = _tournament(rng, n_off, ranks, crowd)
+            p2 = _tournament(rng, n_off, ranks, crowd)
+            children = space.crossover(pop[p1], pop[p2], rng)
+            children = space.mutate(children, rng, mutation_rate)
+            Fc = ev.evaluate(children)
+            evals += n_off
+            gen += 1
+            all_F.append(Fc)
+            if eps_archive is not None:
+                eps_archive.add(children, Fc)
+                arch_g = eps_archive.genomes
+                arch_F = eps_archive.objectives
+            else:
+                comb_g = np.concatenate([arch_g, children])
+                comb_F = np.concatenate([arch_F, Fc])
+                # a genome re-visited across generations has an identical
+                # memoized objective row; keep one copy (first occurrence)
+                # so the archive stays the *set* of non-dominated genomes
+                # found
+                _, uidx = np.unique(comb_g, axis=0, return_index=True)
+                uidx.sort()
+                arch_g, arch_F = _front(comb_g[uidx], comb_F[uidx])
+            comb = np.concatenate([pop, children])
+            Fcomb = np.concatenate([F, Fc])
+            ranks2, crowd2 = _ranks_and_crowding(Fcomb)
+            order = np.lexsort((np.arange(len(comb)), -crowd2, ranks2))
+            sel = order[:pop_size]
+            pop, F = comb[sel], Fcomb[sel]
+            history.append((evals, hypervolume(arch_F, ref)))
+        reg.inc("nsga2.generations")
+        reg.set("nsga2.archive_size", int(len(arch_F)))
         if ckpt is not None and ckpt.should_save(gen,
                                                  done=evals >= budget):
             ckpt.save(gen=gen, evals=evals, pop=pop, F=F, arch_g=arch_g,
@@ -667,18 +701,21 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
     history: list[tuple[int, float]] = []
     F = None
     for r, (m, n_r) in enumerate(zip(sizes, pops)):
-        pop = pop[:n_r]
-        F = ev.evaluate(pop, subset=None if m == L else m)
-        evals += len(pop)
-        if m == L:
-            # only full-workload rows are comparable across runs;
-            # subset-rung objectives live on a different scale and must
-            # not leak into all_objectives / shared reference points
-            all_F.append(F)
-        if r < r_count - 1:
-            ranks, crowd = _ranks_and_crowding(F)
-            order = np.lexsort((np.arange(len(pop)), -crowd, ranks))
-            pop = pop[order]
+        with obs_trace.span("successive_halving.rung", rung=r,
+                            subset=m, n=n_r):
+            pop = pop[:n_r]
+            F = ev.evaluate(pop, subset=None if m == L else m)
+            evals += len(pop)
+            if m == L:
+                # only full-workload rows are comparable across runs;
+                # subset-rung objectives live on a different scale and
+                # must not leak into all_objectives / shared reference
+                # points
+                all_F.append(F)
+            if r < r_count - 1:
+                ranks, crowd = _ranks_and_crowding(F)
+                order = np.lexsort((np.arange(len(pop)), -crowd, ranks))
+                pop = pop[order]
     # the last rung ran on the full workload: its objectives are the
     # comparable ones
     ref = reference_point(F) if ref_point is None else ref_point

@@ -38,6 +38,8 @@ import numpy as np
 from repro.checkpoint.checkpoint import restore_latest_state, save_state
 from repro.core.dse_batch import ChunkedSweep, _sweep_chunked
 from repro.core.synthesis import PersistentSynthesisCache
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.fault_tolerance import InjectedFailure, restart_loop
 
 
@@ -75,14 +77,20 @@ class SweepCheckpointer:
         }
         if cache_state is not None:
             state["cache"] = cache_state
-        path = save_state(self.ckpt_dir, cursor, state, keep=self.keep)
+        with obs_trace.span("checkpoint.save", kind="sweep",
+                            cursor=int(cursor)):
+            path = save_state(self.ckpt_dir, cursor, state,
+                              keep=self.keep)
         self.saves += 1
+        obs_metrics.get_registry().inc("checkpoint.saves")
         return path
 
     def restore(self) -> dict | None:
-        _, state = restore_latest_state(self.ckpt_dir)
+        with obs_trace.span("checkpoint.restore", kind="sweep"):
+            _, state = restore_latest_state(self.ckpt_dir)
         if state is None or state.get("kind") != "sweep":
             return None
+        obs_metrics.get_registry().inc("checkpoint.restores")
         return {
             "cursor": int(state["cursor"]),
             "n_total": int(state["n_total"]),
@@ -134,14 +142,19 @@ class SearchCheckpointer:
         }
         if eps_vec is not None:
             state["eps_vec"] = np.asarray(eps_vec, dtype=np.float64)
-        path = save_state(self.ckpt_dir, gen, state, keep=self.keep)
+        with obs_trace.span("checkpoint.save", kind="search",
+                            gen=int(gen)):
+            path = save_state(self.ckpt_dir, gen, state, keep=self.keep)
         self.saves += 1
+        obs_metrics.get_registry().inc("checkpoint.saves")
         return path
 
     def restore(self) -> dict | None:
-        _, state = restore_latest_state(self.ckpt_dir)
+        with obs_trace.span("checkpoint.restore", kind="search"):
+            _, state = restore_latest_state(self.ckpt_dir)
         if state is None or state.get("kind") != "search":
             return None
+        obs_metrics.get_registry().inc("checkpoint.restores")
         lens = state["all_F_lens"].tolist()
         offs = np.cumsum([0] + lens)
         all_F = [state["all_F"][offs[i]:offs[i + 1]]
@@ -218,6 +231,8 @@ def resume_sweep(workload, configs, *,
         max_backoff_s=max_backoff_s)
     if sweep.timings is not None:
         sweep.timings["restarts"] = restarts
+    if restarts:
+        obs_metrics.get_registry().inc("sweep.restarts", restarts)
     return sweep
 
 
@@ -258,4 +273,6 @@ def resume_search(space, workload, budget: int, *,
         backoff_s=backoff_s, backoff_factor=backoff_factor,
         max_backoff_s=max_backoff_s)
     res.stats["restarts"] = restarts
+    if restarts:
+        obs_metrics.get_registry().inc("search.restarts", restarts)
     return res

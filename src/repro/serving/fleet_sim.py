@@ -42,6 +42,8 @@ import dataclasses
 import numpy as np
 
 from repro.core.dse_batch import resolve_backend
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.traffic import TrafficTrace, resolve_traffic
 
 _INT32_MAX = np.iinfo(np.int32).max
@@ -302,16 +304,30 @@ def simulate_fleet(step_s, e_token_j, traffic, *, n_slots: int = 8,
     if n_iters >= _INT32_MAX:
         raise ValueError(
             f"simulation horizon {n_iters} overflows int32; cap max_iters")
-    if bk == "jax":
-        submit, comp, active = _simulate_jax(arrive, svc, n_slots,
-                                             n_iters)
-    else:
-        submit, comp, active = _simulate_numpy(arrive, svc, n_slots,
-                                               n_iters)
-    return FleetResult(trace=trace, n_slots=n_slots, n_iters=n_iters,
-                       backend=bk, step_s=step, e_token_j=e_tok,
-                       submit_iter=submit, comp_iter=comp,
-                       active_iters=active)
+    with obs_trace.span("fleet.simulate", n=n, requests=r,
+                        n_iters=n_iters, n_slots=n_slots, backend=bk):
+        if bk == "jax":
+            submit, comp, active = _simulate_jax(arrive, svc, n_slots,
+                                                 n_iters)
+        else:
+            submit, comp, active = _simulate_numpy(arrive, svc, n_slots,
+                                                   n_iters)
+    res = FleetResult(trace=trace, n_slots=n_slots, n_iters=n_iters,
+                      backend=bk, step_s=step, e_token_j=e_tok,
+                      submit_iter=submit, comp_iter=comp,
+                      active_iters=active)
+    reg = obs_metrics.get_registry()
+    reg.inc("fleet.simulations")
+    reg.inc("fleet.candidates", n)
+    served = res.served
+    if served.size:
+        reg.set("fleet.served_frac", float(served.mean()))
+        if obs_trace.is_enabled():
+            # percentile math over (N, R) is not free — only pay for the
+            # SLO gauge when telemetry is actually on
+            reg.set("fleet.slo_attainment",
+                    float(res.metrics()["slo_attainment"].mean()))
+    return res
 
 
 def simulate_fleet_scalar(step_s: float, e_token_j: float, traffic, *,
