@@ -141,9 +141,40 @@ def bench_chunked(workload: str, quick: bool) -> dict:
             out[f"chunked_{backend}_{mode}_kernel_wait_s"] = \
                 best_res.timings["kernel_wait_s"]
             out[f"chunked_{backend}_front_size"] = res.front_size
-        # overlap is an invisible optimization: same front, bit for bit
+        # depth-k prefetch scaling: one timed run per depth, with the
+        # stage accounting (sweep.kernel / sweep.synthesize span sums,
+        # surfaced through timings) turned into device-side throughput
+        # and per-depth overlap fraction
+        for depth in (1, 2, 4):
+            t0 = time.perf_counter()
+            res = sweep_chunked(wl, space(), backend=backend,
+                                chunk_size=chunk_size, overlap=True,
+                                prefetch_depth=depth)
+            dt = time.perf_counter() - t0
+            fronts[f"depth{depth}"] = res.front_metrics
+            tm = res.timings
+            out[f"chunked_{backend}_depth{depth}_s"] = dt
+            out[f"chunked_{backend}_depth{depth}_configs_per_s"] = n / dt
+            # configs over kernel-stage busy time (dispatch -> finalize
+            # span of every chunk): the accelerator-bound ceiling the
+            # prefetch queue is trying to reach
+            busy = tm["kernel_busy_s"]
+            if busy > 0:
+                out[f"chunked_{backend}_depth{depth}"
+                    f"_device_configs_per_s"] = n / busy
+            # stage overlap: (synth + kernel_wait) / wall > 1 means the
+            # host and kernel stages ran concurrently (cf. obs report)
+            wall = tm["wall_s"]
+            if wall > 0:
+                out[f"chunked_{backend}_depth{depth}_overlap_fraction"] \
+                    = max(0.0, min(1.0, (tm["synth_s"]
+                                         + tm["kernel_wait_s"]) / wall
+                                   - 1.0))
+        # overlap is an invisible optimization: same front, bit for bit,
+        # at every prefetch depth
         out[f"chunked_{backend}_pipeline_front_identical"] = bool(all(
-            np.array_equal(fronts["serial"][m], fronts["pipelined"][m])
+            np.array_equal(fronts["serial"][m], fronts[mode][m])
+            for mode in fronts if mode != "serial"
             for m in fronts["serial"]))
         serial_s = out[f"chunked_{backend}_serial_s"]
         pipe_s = out[f"chunked_{backend}_pipelined_s"]
@@ -178,6 +209,49 @@ def bench_jax(workload: str, configs, quick: bool) -> dict:
         "jax_warm_s": warm_s,
         "jax_warm_configs_per_s": len(configs) / warm_s,
         "jax_vs_numpy_headline_rel": rel,
+    }
+
+
+def bench_pallas(workload: str, quick: bool) -> dict:
+    """Interpret-mode Pallas sweep kernel parity against the exact numpy
+    kernel over the committed chunked stream (quick: the smoke grid;
+    full: the whole ~103k-config grid), gated at ≤1e-6 relative."""
+    try:
+        resolve_backend("jax")
+    except RuntimeError as exc:
+        return {"pallas_available": False, "pallas_error": str(exc)}
+    from repro.core.accelerator import design_space_soa
+    from repro.core.dse_batch import (AGGREGATE_OUTPUTS, _make_cfg_lay,
+                                      _sweep_kernel, _workload_batch)
+    from repro.core.synthesis import synthesize_soa
+    from repro.kernels.sweep_kernel import sweep_aggregates_pallas
+
+    wl = get_workload(workload)
+    wb = _workload_batch(wl)
+    grid = _CHUNKED_QUICK if quick else _CHUNKED_FULL
+    chunk_size = 4096
+    max_rel = 0.0
+    n_checked = 0
+    t_pallas = 0.0
+    for soa in design_space_soa(chunk_size=chunk_size, **grid):
+        cols = synthesize_soa(soa)
+        cfg, lay = _make_cfg_lay(soa, cols, wb)
+        t0 = time.perf_counter()
+        got = {k: np.asarray(v) for k, v in
+               sweep_aggregates_pallas(cfg, lay, interpret=True).items()}
+        t_pallas += time.perf_counter() - t0
+        want = _sweep_kernel(np, cfg, lay, outputs="aggregates")
+        for k in AGGREGATE_OUTPUTS:
+            w = np.asarray(want[k], dtype=np.float64)
+            rel = np.max(np.abs(got[k] - w)
+                         / np.maximum(np.abs(w), 1e-30))
+            max_rel = max(max_rel, float(rel))
+        n_checked += len(soa["pe_rows"])
+    return {
+        "pallas_available": True,
+        "pallas_parity_n_configs": n_checked,
+        "pallas_interpret_max_rel": max_rel,
+        "pallas_interpret_configs_per_s": n_checked / t_pallas,
     }
 
 
@@ -235,6 +309,7 @@ def bench(workload: str = "vgg16", quick: bool = False) -> dict:
     }
     out.update(bench_jax(workload, configs, quick))
     out.update(bench_chunked(workload, quick))
+    out.update(bench_pallas(workload, quick))
     if not quick:
         # also record the quick-mode cold number so the CI smoke gate can
         # compare like-for-like (quick's smaller space has proportionally
@@ -333,6 +408,20 @@ def main() -> None:
                   f" ms pipelined  {r[key]:9.0f} configs/s  "
                   f"(overlap {r[f'chunked_{b}_overlap_fraction']:.0%}, "
                   f"{r['chunked_n_configs']} configs)")
+        for d in (1, 2, 4):
+            dk = f"chunked_{b}_depth{d}_configs_per_s"
+            if dk in r:
+                dev = r.get(f"chunked_{b}_depth{d}_device_configs_per_s")
+                ov = r.get(f"chunked_{b}_depth{d}_overlap_fraction")
+                print(f"  depth={d}   {r[dk]:9.0f} configs/s"
+                      + (f"  device {dev:9.0f}/s" if dev else "")
+                      + (f"  stage overlap {ov:.0%}"
+                         if ov is not None else ""))
+    if r.get("pallas_available"):
+        print(f"pallas parity {r['pallas_parity_n_configs']} configs  "
+              f"max rel {r['pallas_interpret_max_rel']:.1e}  "
+              f"({r['pallas_interpret_configs_per_s']:.0f} configs/s "
+              f"interpret)")
     print(f"headline ratios identical: {r['headline_ratios_identical']}")
     print(f"wrote {args.out}")
 
@@ -344,7 +433,25 @@ def main() -> None:
         k = f"chunked_{b}_pipeline_front_identical"
         if k in r and not r[k]:
             raise SystemExit(
-                f"pipelined chunked sweep diverged from serial ({b})")
+                f"pipelined chunked sweep diverged from serial ({b}) "
+                f"at some prefetch depth")
+    if r.get("pallas_available") \
+            and r["pallas_interpret_max_rel"] > 1e-6:
+        raise SystemExit(
+            "pallas sweep kernel diverged from numpy beyond 1e-6: "
+            f"{r['pallas_interpret_max_rel']:.2e}")
+    best_pipe = max((r[f"chunked_{b}_pipeline_speedup"]
+                     for b in ("numpy", "jax")
+                     if f"chunked_{b}_pipeline_speedup" in r),
+                    default=None)
+    # pipelined >= serial: ~1.0x is measurement noise on a loaded /
+    # 1-core host, so the gate only catches the pipeline *actively*
+    # hurting throughput — a wide margin in quick (1-rep smoke) mode
+    floor = 0.5 if r["quick"] else 0.9
+    if best_pipe is not None and best_pipe < floor:
+        raise SystemExit(
+            f"pipelined chunked sweep slower than serial on every "
+            f"backend (best {best_pipe:.3f}x < {floor}x floor)")
     if not r["quick"]:
         if r["speedup_cold"] < 10.0:
             raise SystemExit(
@@ -354,15 +461,6 @@ def main() -> None:
             raise SystemExit(
                 "jax backend diverged from numpy beyond 1e-6: "
                 f"{r['jax_vs_numpy_headline_rel']:.2e}")
-        best_pipe = max(r[f"chunked_{b}_pipeline_speedup"]
-                        for b in ("numpy", "jax")
-                        if f"chunked_{b}_pipeline_speedup" in r)
-        # ~1.0x is measurement noise on a loaded / 1-core host; what the
-        # gate must catch is the pipeline actively hurting throughput
-        if best_pipe < 0.9:
-            raise SystemExit(
-                f"double-buffered pipeline slower than serial on every "
-                f"backend (best {best_pipe:.3f}x)")
 
 
 if __name__ == "__main__":

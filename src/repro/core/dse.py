@@ -168,7 +168,8 @@ def _explore(workload: Workload | str,
              use_cache: bool = True,
              backend: str = "auto",
              mesh=None,
-             outputs: str = "points"):
+             outputs: str = "points",
+             use_pallas: bool | None = None):
     """Sweep ``configs`` (default: the full paper design space) on a workload.
 
     ``engine="batched"`` evaluates everything as fused array ops;
@@ -199,7 +200,8 @@ def _explore(workload: Workload | str,
     cfgs = tuple(design_space() if configs is None else configs)
     sweep = _sweep_workload(
         workload, cfgs, use_cache=use_cache, backend=backend, mesh=mesh,
-        outputs="aggregates" if outputs == "aggregates" else "full")
+        outputs="aggregates" if outputs == "aggregates" else "full",
+        use_pallas=use_pallas)
     if outputs in ("sweep", "aggregates"):
         return sweep
     if outputs != "points":
@@ -217,7 +219,8 @@ def _explore_many(workloads: Sequence[Workload | str],
                   use_cache: bool = True,
                   backend: str = "auto",
                   mesh=None,
-                  outputs: str = "points") -> dict:
+                  outputs: str = "points",
+                  use_pallas: bool | None = None) -> dict:
     """Batched multi-workload sweep.
 
     Synthesis and the struct-of-arrays conversion run *once* for the config
@@ -239,7 +242,8 @@ def _explore_many(workloads: Sequence[Workload | str],
         wl = _resolve(wl)
         sweep = _sweep_workload(
             wl, cfgs, cols, soa=soa, backend=backend, mesh=mesh,
-            outputs="aggregates" if outputs == "aggregates" else "full")
+            outputs="aggregates" if outputs == "aggregates" else "full",
+            use_pallas=use_pallas)
         if outputs in ("sweep", "aggregates"):
             out[wl.name] = sweep
         else:
@@ -273,6 +277,7 @@ def _coexplore(workload: Workload | str,
                traffic=None,
                n_slots: int | None = None,
                chunk_size: int | None = None,
+               use_pallas: bool | None = None,
                checkpoint_dir: str | None = None,
                checkpoint_every: int | None = None,
                **method_kwargs):
@@ -329,7 +334,7 @@ def _coexplore(workload: Workload | str,
         seed=p.seed if seed is None else seed,
         backend=backend,
         chunk_size=p.chunk_size if chunk_size is None else chunk_size,
-        ref_point=ref_point, mesh=mesh,
+        ref_point=ref_point, mesh=mesh, use_pallas=use_pallas,
         traffic=traffic_resolved,
         n_slots=p.n_slots if n_slots is None else n_slots)
     if method == "nsga2":
@@ -375,6 +380,7 @@ def _coexplore_many(workloads: Sequence[Workload | str],
                     mesh=None,
                     space_overrides: dict | None = None,
                     chunk_size: int | None = None,
+                    use_pallas: bool | None = None,
                     checkpoint_dir: str | None = None,
                     checkpoint_every: int | None = None,
                     **method_kwargs):
@@ -426,7 +432,7 @@ def _coexplore_many(workloads: Sequence[Workload | str],
         seed=p.seed if seed is None else seed,
         backend=backend,
         chunk_size=p.chunk_size if chunk_size is None else chunk_size,
-        ref_point=ref_point, mesh=mesh,
+        ref_point=ref_point, mesh=mesh, use_pallas=use_pallas,
         weights=p.weights if weights is None else weights,
         sqnr_floor_db=(p.sqnr_floor_db if sqnr_floor_db is None
                        else sqnr_floor_db))
@@ -528,6 +534,10 @@ class ExploreSpec:
     cache: object = None                # persisted synthesis cache (chunked)
     save_cache: bool = True
     overlap: bool = True
+    # in-flight chunk bound of the streamed pipeline (chunked sweeps):
+    # 1 = serial, 2 = the classic two-stage overlap, deeper queues hide
+    # host synthesis behind an accelerator-fast kernel stage
+    prefetch_depth: int = 2
     # mixed-precision (search) knobs
     preset: str | None = None
     method: str | None = None
@@ -546,6 +556,11 @@ class ExploreSpec:
     mesh: object = None
     use_cache: bool = True
     chunk_size: int | None = None
+    # Pallas sweep-kernel routing: None auto-engages it on the jax
+    # backend with a real accelerator (no mesh); True forces it (raises
+    # where unsupported), False pins the jitted XLA kernel — see
+    # repro.core.dse_batch.resolve_use_pallas
+    use_pallas: object = None
     # fault tolerance: periodic snapshots + resume (preemption safety).
     # Valid for chunked uniform sweeps (checkpointed stream cursor /
     # front / cache accounting, resumed via
@@ -582,6 +597,26 @@ class ExploreSpec:
         if self.chunk_size is not None and self.chunk_size < 1:
             raise ValueError(
                 f"chunk_size must be >= 1, got {self.chunk_size}")
+        if int(self.prefetch_depth) < 1:
+            raise ValueError(
+                f"prefetch_depth must be >= 1, got {self.prefetch_depth}")
+        if self.prefetch_depth != 2 and self.chunk_size is None:
+            raise ValueError(
+                "prefetch_depth tunes the streamed chunk pipeline; it "
+                "needs chunk_size=")
+        if self.use_pallas is not None \
+                and not isinstance(self.use_pallas, bool):
+            raise ValueError(
+                f"use_pallas must be None (auto) or a bool, got "
+                f"{type(self.use_pallas).__name__}")
+        if self.use_pallas is True and self.backend == "numpy":
+            raise ValueError(
+                "use_pallas=True requires the jax backend, not "
+                "backend='numpy'")
+        if self.use_pallas is True and self.mesh is not None:
+            raise ValueError(
+                "use_pallas=True does not compose with mesh= sharding "
+                "yet; drop mesh= or use_pallas")
         if self.checkpoint_every is not None:
             if self.checkpoint_dir is None:
                 raise ValueError(
@@ -649,7 +684,9 @@ class ExploreSpec:
                outputs: str = "points", chunk_size: int | None = None,
                backend: str = "auto", mesh=None, use_cache: bool = True,
                cache=None, save_cache: bool = True,
-               overlap: bool = True, checkpoint_dir: str | None = None,
+               overlap: bool = True, prefetch_depth: int = 2,
+               use_pallas: bool | None = None,
+               checkpoint_dir: str | None = None,
                checkpoint_every: int | None = None,
                telemetry=None) -> "ExploreSpec":
         """Uniform-precision sweep of one workload over a config batch
@@ -664,6 +701,7 @@ class ExploreSpec:
                    chunk_size=chunk_size, backend=backend, mesh=mesh,
                    use_cache=use_cache, cache=cache,
                    save_cache=save_cache, overlap=overlap,
+                   prefetch_depth=prefetch_depth, use_pallas=use_pallas,
                    checkpoint_dir=checkpoint_dir,
                    checkpoint_every=checkpoint_every,
                    telemetry=telemetry)
@@ -675,7 +713,8 @@ class ExploreSpec:
               seed: int | None = None, ref_point=None,
               space_overrides: dict | None = None,
               chunk_size: int | None = None, backend: str = "auto",
-              mesh=None, checkpoint_dir: str | None = None,
+              mesh=None, use_pallas: bool | None = None,
+              checkpoint_dir: str | None = None,
               checkpoint_every: int | None = None, telemetry=None,
               **search_kwargs) -> "ExploreSpec":
         """Guided mixed-precision co-exploration of one workload; a
@@ -689,7 +728,7 @@ class ExploreSpec:
                    objectives=objectives, traffic=traffic, n_slots=n_slots,
                    seed=seed, ref_point=ref_point,
                    space_overrides=space_overrides, chunk_size=chunk_size,
-                   backend=backend, mesh=mesh,
+                   backend=backend, mesh=mesh, use_pallas=use_pallas,
                    checkpoint_dir=checkpoint_dir,
                    checkpoint_every=checkpoint_every, telemetry=telemetry,
                    search_kwargs=search_kwargs or None)
@@ -703,6 +742,7 @@ class ExploreSpec:
              ref_point=None, space_overrides: dict | None = None,
              chunk_size: int | None = None, backend: str = "auto",
              mesh=None, use_cache: bool = True,
+             use_pallas: bool | None = None,
              checkpoint_dir: str | None = None,
              checkpoint_every: int | None = None, telemetry=None,
              **search_kwargs) -> "ExploreSpec":
@@ -721,7 +761,8 @@ class ExploreSpec:
                    sqnr_floor_db=sqnr_floor_db, seed=seed,
                    ref_point=ref_point, space_overrides=space_overrides,
                    chunk_size=chunk_size, backend=backend, mesh=mesh,
-                   use_cache=use_cache, checkpoint_dir=checkpoint_dir,
+                   use_cache=use_cache, use_pallas=use_pallas,
+                   checkpoint_dir=checkpoint_dir,
                    checkpoint_every=checkpoint_every, telemetry=telemetry,
                    search_kwargs=search_kwargs or None)
 
@@ -760,7 +801,7 @@ def _run_dispatch(spec: ExploreSpec):
                 ref_point=spec.ref_point, mesh=spec.mesh,
                 space_overrides=spec.space_overrides,
                 traffic=spec.traffic, n_slots=spec.n_slots,
-                chunk_size=spec.chunk_size,
+                chunk_size=spec.chunk_size, use_pallas=spec.use_pallas,
                 checkpoint_dir=spec.checkpoint_dir,
                 checkpoint_every=spec.checkpoint_every, **extra)
         return _coexplore_many(
@@ -771,14 +812,15 @@ def _run_dispatch(spec: ExploreSpec):
             ref_point=spec.ref_point, weights=spec.weights,
             sqnr_floor_db=spec.sqnr_floor_db, mesh=spec.mesh,
             space_overrides=spec.space_overrides,
-            chunk_size=spec.chunk_size,
+            chunk_size=spec.chunk_size, use_pallas=spec.use_pallas,
             checkpoint_dir=spec.checkpoint_dir,
             checkpoint_every=spec.checkpoint_every, **extra)
     # uniform precision
     if len(spec.workloads) > 1:
         return _explore_many(
             spec.workloads, spec.configs, use_cache=spec.use_cache,
-            backend=spec.backend, mesh=spec.mesh, outputs=spec.outputs)
+            backend=spec.backend, mesh=spec.mesh, outputs=spec.outputs,
+            use_pallas=spec.use_pallas)
     wl = spec.workloads[0]
     if spec.chunk_size is not None:
         if spec.configs is None:
@@ -799,15 +841,19 @@ def _run_dispatch(spec: ExploreSpec):
                 chunk_size=spec.chunk_size, backend=spec.backend,
                 use_cache=spec.use_cache, cache=spec.cache,
                 save_cache=spec.save_cache, mesh=spec.mesh,
-                overlap=spec.overlap, **kwargs)
+                overlap=spec.overlap,
+                prefetch_depth=spec.prefetch_depth,
+                use_pallas=spec.use_pallas, **kwargs)
         return _explore_chunked(
             wl, spec.configs, chunk_size=spec.chunk_size,
             backend=spec.backend, use_cache=spec.use_cache,
             cache=spec.cache, save_cache=spec.save_cache, mesh=spec.mesh,
-            overlap=spec.overlap)
+            overlap=spec.overlap, prefetch_depth=spec.prefetch_depth,
+            use_pallas=spec.use_pallas)
     return _explore(wl, spec.configs, engine=spec.engine,
                     use_cache=spec.use_cache, backend=spec.backend,
-                    mesh=spec.mesh, outputs=spec.outputs)
+                    mesh=spec.mesh, outputs=spec.outputs,
+                    use_pallas=spec.use_pallas)
 
 
 # --------------------------------------------------------------------------

@@ -399,6 +399,34 @@ def resolve_backend(backend: str = "auto") -> str:
     return "jax" if usable and _jax_has_accelerator() else "numpy"
 
 
+def resolve_use_pallas(use_pallas: bool | None, backend: str,
+                       mesh=None) -> bool:
+    """Resolve the ``use_pallas`` routing flag against a *resolved*
+    backend.
+
+    ``None`` (auto) engages the Pallas sweep kernel exactly when the jax
+    backend is active on a real accelerator platform without ``mesh``
+    sharding — on CPU the interpreter-mode kernel is for parity testing,
+    not production throughput, so auto keeps the jitted XLA path.
+    Explicit ``True`` raises instead of silently falling back when the
+    backend can't honor it (numpy, or a sharded mesh — the Pallas kernel
+    owns its own tiling and doesn't compose with ``shard_map`` yet).
+    """
+    if use_pallas is None:
+        return (backend == "jax" and mesh is None
+                and _jax_usable()[0] and _jax_has_accelerator())
+    use_pallas = bool(use_pallas)
+    if use_pallas and backend != "jax":
+        raise ValueError(
+            f"use_pallas=True requires the jax backend, but the sweep "
+            f"resolved to backend={backend!r}")
+    if use_pallas and mesh is not None:
+        raise ValueError(
+            "use_pallas=True does not compose with mesh= sharding yet; "
+            "drop mesh= or use_pallas")
+    return use_pallas
+
+
 # ---------------------------------------------------------------------------
 # jax path: jit cache + x64-free input conversion + optional shard_map
 # ---------------------------------------------------------------------------
@@ -473,11 +501,20 @@ def get_jax_kernel(mesh=None, outputs: str = "full"):
 
 
 def _run_kernel(cfg: dict, lay: dict, backend: str,
-                mesh=None, outputs: str = "full") -> dict[str, np.ndarray]:
+                mesh=None, outputs: str = "full",
+                use_pallas: bool = False) -> dict[str, np.ndarray]:
     if outputs not in OUTPUT_MODES:
         raise ValueError(
             f"unknown sweep outputs: {outputs!r} (choose from "
             f"{OUTPUT_MODES})")
+    if backend == "jax" and use_pallas and outputs == "aggregates" \
+            and mesh is None:
+        # the Pallas kernel covers the aggregate-reduction path (the only
+        # one the streamed/search hot loops use); per-layer output modes
+        # keep the jitted XLA kernel
+        from repro.kernels.sweep_kernel import sweep_aggregates_pallas
+        out = sweep_aggregates_pallas(cfg, lay)
+        return {k: np.asarray(v) for k, v in out.items()}
     if backend == "jax":
         _require_jax_mesh(mesh)
         fn, exact = get_jax_kernel(mesh, outputs)
@@ -629,7 +666,8 @@ def _sweep_workload(workload: Workload,
                     backend: str = "auto",
                     soa: dict[str, np.ndarray] | None = None,
                     mesh=None,
-                    outputs: str = "full") -> BatchedSweep:
+                    outputs: str = "full",
+                    use_pallas: bool | None = None) -> BatchedSweep:
     """Evaluate ``workload`` on every config in one batched pass.
 
     ``reports``/``soa`` let :func:`repro.core.dse.explore_many` synthesize
@@ -642,6 +680,7 @@ def _sweep_workload(workload: Workload,
     every aggregate metric, but ``.layers`` is unavailable.
     """
     backend = resolve_backend(backend)
+    use_pallas = resolve_use_pallas(use_pallas, backend, mesh)
     configs = tuple(configs)
     if soa is None:
         soa = configs_to_soa(configs)
@@ -652,7 +691,8 @@ def _sweep_workload(workload: Workload,
         cols = _reports_to_cols(reports)
     wb = _workload_batch(workload)
     cfg, lay = _make_cfg_lay(soa, cols, wb)
-    out = _run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs)
+    out = _run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs,
+                      use_pallas=use_pallas)
     return BatchedSweep(workload=workload.name, configs=configs,
                         layer_names=wb.layer_names, macs=wb.arrays["macs"],
                         clock_ghz=cfg["clock_ghz"][:, 0],
@@ -726,7 +766,8 @@ def _sweep_mixed(workload: Workload,
                  use_cache: bool = True,
                  backend: str = "auto",
                  outputs: str = "aggregates",
-                 mesh=None) -> dict[str, np.ndarray]:
+                 mesh=None,
+                 use_pallas: bool | None = None) -> dict[str, np.ndarray]:
     """Evaluate a batch of mixed-precision genomes in one fused pass.
 
     ``soa`` is the hardware half of the genome batch
@@ -739,6 +780,7 @@ def _sweep_mixed(workload: Workload,
     :func:`repro.core.dataflow.run_workload_mixed` row by row.
     """
     backend = resolve_backend(backend)
+    use_pallas = resolve_use_pallas(use_pallas, backend, mesh)
     wb = _workload_batch(workload)
     assign = np.asarray(assign, dtype=np.int64)
     if assign.shape != (len(soa["pe_rows"]), len(wb)):
@@ -751,7 +793,8 @@ def _sweep_mixed(workload: Workload,
                 else synthesize_soa(soa))
     cfg, lay = _make_cfg_lay(soa, cols, wb)
     cfg = mixed_assign_cfg(cfg, assign)
-    out = dict(_run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs))
+    out = dict(_run_kernel(cfg, lay, backend, mesh=mesh, outputs=outputs,
+                           use_pallas=use_pallas))
     out["clock_ghz"] = cfg["clock_ghz"][:, 0]
     out["area_mm2"] = cfg["area_mm2"][:, 0]
     return out
@@ -915,7 +958,9 @@ def _sweep_mixed_many(workloads: Sequence[Workload],
                       *,
                       use_cache: bool = True,
                       backend: str = "auto",
-                      mesh=None) -> dict[str, np.ndarray]:
+                      mesh=None,
+                      use_pallas: bool | None = None
+                      ) -> dict[str, np.ndarray]:
     """Evaluate one genome batch against W workloads in one fused pass.
 
     ``soa`` is the shared hardware half (N configs); ``assigns`` holds one
@@ -945,6 +990,7 @@ def _sweep_mixed_many(workloads: Sequence[Workload],
     multiple devices.
     """
     backend = resolve_backend(backend)
+    use_pallas = resolve_use_pallas(use_pallas, backend, mesh)
     wls = tuple(workloads)
     if not wls:
         raise ValueError("sweep_mixed_many needs at least one workload")
@@ -966,7 +1012,12 @@ def _sweep_mixed_many(workloads: Sequence[Workload],
                 else synthesize_soa(soa))
     cfg, lay = _make_cfg_lay(soa, cols, combined)
     cfg = mixed_assign_cfg(cfg, assign_all)
-    if backend == "jax":
+    if backend == "jax" and use_pallas:
+        from repro.kernels.sweep_kernel import sweep_aggregates_pallas
+        out = {k: np.asarray(v)
+               for k, v in sweep_aggregates_pallas(
+                   cfg, lay, bounds=bounds).items()}
+    elif backend == "jax":
         _require_jax_mesh(mesh)
         fn, exact = get_jax_many_kernel(bounds, mesh)
         jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
@@ -1085,8 +1136,53 @@ class ChunkDeadlineExceeded(RuntimeError):
     the chunk serially on the exact numpy kernel."""
 
 
+class ChunkCancelled(RuntimeError):
+    """An in-flight chunk's worker future was cancelled — the watchdog
+    replaced a zombie executor and dropped its queue.  The stream
+    recomputes the chunk serially (no deadline warning: the chunk itself
+    did nothing wrong)."""
+
+
+class _AbandonedFinalizers:
+    """Accounting for jax materialize threads the watchdog gave up on.
+
+    A wedged device can pin a chunk's buffers inside ``np.asarray`` for
+    as long as it stays wedged — Python cannot kill the thread — but an
+    abandoned thread must (a) never park its materialized result in a
+    long-lived box and (b) be observable, so repeated watchdog fires show
+    up as a bounded ``live`` count instead of silent memory growth.
+    """
+
+    def __init__(self):
+        import threading
+        self._lock = threading.Lock()
+        self.abandoned = 0      # watchdog timeouts that orphaned a thread
+        self.completed = 0      # orphaned threads that finished + dropped
+
+    def abandon(self) -> None:
+        with self._lock:
+            self.abandoned += 1
+        obs_metrics.get_registry().inc("sweep.abandoned_finalizers")
+
+    def finish(self) -> None:
+        with self._lock:
+            self.completed += 1
+
+    @property
+    def live(self) -> int:
+        """Threads still wedged on a materialization (buffers pinned)."""
+        with self._lock:
+            return self.abandoned - self.completed
+
+
+#: process-wide abandoned-materialization ledger (tests assert ``live``
+#: returns to 0 once a slow — not wedged — device catches up)
+abandoned_finalizers = _AbandonedFinalizers()
+
+
 def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
-                    chunk_size: int, n: int, executor):
+                    chunk_size: int, n: int, executor,
+                    use_pallas: bool = False):
     """Launch the aggregates kernel for one chunk without blocking.
 
     Returns a ``finalize(timeout=None)`` producing the host-side ``(n,)``
@@ -1105,12 +1201,16 @@ def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
         # pad the tail chunk to the steady-state shape: one jit trace
         # serves the whole stream (padded rows are sliced off below)
         cfg = _pad_rows(cfg, (chunk_size - n % chunk_size) % chunk_size)
-        fn, exact = get_jax_kernel(mesh, "aggregates")
-        jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
-        if mesh is not None:
-            jcfg = _pad_rows(jcfg,
-                             -len(jcfg["pe_rows"]) % _mesh_shards(mesh))
-        out = fn(jcfg, jlay)                       # async dispatch
+        if use_pallas and mesh is None:
+            from repro.kernels.sweep_kernel import sweep_aggregates_pallas
+            out = sweep_aggregates_pallas(cfg, lay)    # async dispatch
+        else:
+            fn, exact = get_jax_kernel(mesh, "aggregates")
+            jcfg, jlay = _to_jax_inputs(cfg, lay, exact)
+            if mesh is not None:
+                jcfg = _pad_rows(jcfg,
+                                 -len(jcfg["pe_rows"]) % _mesh_shards(mesh))
+            out = fn(jcfg, jlay)                       # async dispatch
 
         def finalize(timeout: float | None = None):
             if timeout is None:
@@ -1119,20 +1219,43 @@ def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
             # daemon-thread join so a wedged device cannot hang the stream
             import threading
             box: dict = {}
+            lock = threading.Lock()
 
-            def _materialize():
+            def _materialize(buffers):
                 try:
-                    box["out"] = {k: np.asarray(v)[:n]
-                                  for k, v in out.items()}
-                except BaseException as exc:   # surfaced to the caller
-                    box["exc"] = exc
+                    res = {k: np.asarray(v)[:n]
+                           for k, v in buffers.items()}
+                    exc = None
+                except BaseException as e:      # surfaced to the caller
+                    res, exc = None, e
+                buffers = None      # noqa: F841 — drop the device refs
+                with lock:
+                    if box.get("abandoned"):
+                        # the watchdog gave up on this chunk while we
+                        # were blocked: discard the result here instead
+                        # of parking host+device copies in `box` for the
+                        # rest of the process, and mark the orphan done
+                        abandoned_finalizers.finish()
+                        return
+                    if exc is not None:
+                        box["exc"] = exc
+                    else:
+                        box["out"] = res
 
-            th = threading.Thread(target=_materialize, daemon=True)
+            th = threading.Thread(target=_materialize, args=(out,),
+                                  daemon=True)
             th.start()
             th.join(timeout)
-            if th.is_alive():
-                raise ChunkDeadlineExceeded(
-                    f"jax chunk did not materialize within {timeout}s")
+            with lock:
+                if "out" not in box and "exc" not in box:
+                    # timed out: flag the orphan so its eventual
+                    # completion drops the buffers instead of keeping
+                    # them reachable through the box
+                    box["abandoned"] = True
+                    abandoned_finalizers.abandon()
+                    raise ChunkDeadlineExceeded(
+                        f"jax chunk did not materialize within "
+                        f"{timeout}s")
             if "exc" in box:
                 raise box["exc"]
             return box["out"]
@@ -1144,6 +1267,7 @@ def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
         fut = executor.submit(kernel)
 
         def finalize(timeout: float | None = None):
+            from concurrent.futures import CancelledError
             from concurrent.futures import TimeoutError as _FutTimeout
             try:
                 return fut.result(timeout)
@@ -1153,6 +1277,13 @@ def _dispatch_chunk(cfg: dict, lay: dict, backend: str, mesh,
                 raise ChunkDeadlineExceeded(
                     f"chunk kernel still running after {timeout}s"
                 ) from None
+            except CancelledError:
+                # the watchdog tore down the executor this chunk was
+                # queued on (zombie-worker recovery) — not this chunk's
+                # own deadline
+                raise ChunkCancelled(
+                    "chunk worker future was cancelled by executor "
+                    "replacement") from None
 
         return finalize
     return lambda timeout=None: kernel()
@@ -1168,6 +1299,8 @@ def _sweep_chunked(workload: Workload,
                    save_cache: bool = True,
                    mesh=None,
                    overlap: bool = True,
+                   prefetch_depth: int = 2,
+                   use_pallas: bool | None = None,
                    checkpoint=None,
                    fail_at: dict[int, int] | None = None,
                    chunk_deadline_s: float | None = None,
@@ -1184,17 +1317,22 @@ def _sweep_chunked(workload: Workload,
     seen space skips synthesis; ``use_cache`` instead routes through the
     in-process array cache.
 
-    ``overlap=True`` (default) runs the stream as a **two-stage
-    pipeline**: while the kernel maps chunk *i* (on device under jax, on
-    a worker thread under numpy), the host already pulls chunk *i+1* from
-    the feed and synthesizes it; the running Pareto reduction of chunk
-    *i* then also hides behind the dispatch of chunk *i+1*.  Chunks are
-    synthesized, reduced, and cache-inserted in exactly the stream order
-    of the serial path, so results, resume points, and
+    ``overlap=True`` (default) runs the stream as a **depth-k prefetch
+    pipeline**: up to ``prefetch_depth`` chunks (default 2 — the classic
+    two-stage overlap) are dispatched and in flight at once, their
+    ``finalize`` handles held in a bounded deque, while the host pulls
+    and synthesizes the next chunk; the running Pareto reduction drains
+    the deque in FIFO order.  Chunks are synthesized, reduced, and
+    cache-inserted in exactly the stream order of the serial path at
+    *every* depth, so results, resume points, and
     :class:`~repro.core.synthesis.PersistentSynthesisCache` hit/miss
     accounting are identical (asserted in
     ``tests/test_chunked_pipeline.py``); ``overlap=False`` keeps the
-    fully serial per-chunk loop.
+    fully serial per-chunk loop (equivalent to ``prefetch_depth=1``).
+    Depths beyond 2 only pay off once the kernel stage outruns host
+    synthesis — e.g. the Pallas sweep kernel on a real accelerator
+    (``use_pallas=True``; ``None`` auto-engages it exactly there, see
+    :func:`resolve_use_pallas`).
 
     Fault tolerance (``tests/test_dse_checkpoint.py``):
 
@@ -1221,9 +1359,16 @@ def _sweep_chunked(workload: Workload,
     import sys
     import time
     import warnings
+    from collections import deque
     backend = resolve_backend(backend)
     if backend == "jax":
         _require_jax_mesh(mesh)
+    use_pallas = resolve_use_pallas(use_pallas, backend, mesh)
+    if int(prefetch_depth) < 1:
+        raise ValueError(
+            f"prefetch_depth must be >= 1, got {prefetch_depth}")
+    # depth 1 <=> the fully serial loop; overlap=False forces it
+    depth = int(prefetch_depth) if overlap else 1
     if isinstance(cache, (str, bytes)) or hasattr(cache, "__fspath__"):
         cache = PersistentSynthesisCache(cache)
     wb = _workload_batch(workload)
@@ -1247,13 +1392,17 @@ def _sweep_chunked(workload: Workload,
                         and snap.get("cache_state") is not None:
                     cache.import_state(snap["cache_state"])
     t_wall = time.perf_counter()
-    timings = {"overlap": bool(overlap), "wall_s": 0.0, "synth_s": 0.0,
-               "kernel_wait_s": 0.0, "watchdog_redispatches": 0,
+    timings = {"overlap": bool(overlap), "prefetch_depth": depth,
+               "use_pallas": bool(use_pallas), "wall_s": 0.0,
+               "synth_s": 0.0, "kernel_wait_s": 0.0, "kernel_busy_s": 0.0,
+               "watchdog_redispatches": 0, "executor_replacements": 0,
+               "cancelled_recomputes": 0, "abandoned_finalizers": 0,
                "degraded": False}
     _reg = obs_metrics.get_registry()
     root_span = obs_trace.span_start(
         "sweep_chunked", workload=workload.name, backend=backend,
         chunk_size=int(chunk_size), overlap=bool(overlap),
+        prefetch_depth=depth, use_pallas=bool(use_pallas),
         resume_cursor=resume_cursor)
     n_total0, n_chunks0 = n_total, n_chunks   # restored-from-snapshot base
     telemetry_flushed = False
@@ -1275,6 +1424,8 @@ def _sweep_chunked(workload: Workload,
         _reg.inc("sweep.wall_s", timings["wall_s"])
         _reg.inc("sweep.synth_s", timings["synth_s"])
         _reg.inc("sweep.kernel_wait_s", timings["kernel_wait_s"])
+        _reg.inc("sweep.kernel_busy_s", timings["kernel_busy_s"])
+        _reg.set("sweep.prefetch_depth", depth)
         if status != "ok":
             _reg.inc("sweep.failures")
         if timings["wall_s"] > 0:
@@ -1315,6 +1466,23 @@ def _sweep_chunked(workload: Workload,
             from concurrent.futures import ThreadPoolExecutor
             executor = ThreadPoolExecutor(max_workers=1)
 
+    def _replace_executor() -> None:
+        # zombie-worker recovery: fut.cancel() cannot interrupt a kernel
+        # that is already running, so after a watchdog fire the old
+        # executor's single worker is still occupied — every later chunk
+        # would queue behind it and cascade into its own deadline.  Tear
+        # the executor down (without waiting on the zombie) and start a
+        # fresh one; still-queued futures of other in-flight chunks are
+        # cancelled and surface as ChunkCancelled at their drain.
+        nonlocal executor
+        if executor is None:
+            return
+        executor.shutdown(wait=False, cancel_futures=True)
+        executor = None
+        timings["executor_replacements"] += 1
+        _reg.inc("sweep.executor_replacements")
+        _ensure_executor()
+
     _ensure_executor()
 
     def _degrade(dcfg: dict, dlay: dict, exc: BaseException,
@@ -1334,17 +1502,16 @@ def _sweep_chunked(workload: Workload,
         _ensure_executor()
         return _sweep_kernel(np, dcfg, dlay, outputs="aggregates")
 
+    # FIFO of in-flight chunks, each:
     # (soa, n, cfg, lay, finalize, backend_at_dispatch, save_info,
-    #  cache_state, chunk_index, kernel_span)
-    pending: tuple | None = None
+    #  cache_state, chunk_index, kernel_span, t_dispatch)
+    pending: deque = deque()
 
-    def drain() -> None:
-        nonlocal pending
-        if pending is None:
+    def drain_one() -> None:
+        if not pending:
             return
         (psoa, pn, pcfg, play, pfin, pbackend, psave, pcache,
-         pci, kspan) = pending
-        pending = None
+         pci, kspan, tdisp) = pending.popleft()
         t0 = time.perf_counter()
         kstatus = "ok"
         try:
@@ -1357,8 +1524,22 @@ def _sweep_chunked(workload: Workload,
                 stacklevel=3)
             timings["watchdog_redispatches"] += 1
             _reg.inc("sweep.watchdog_redispatches")
+            if pbackend == "jax":
+                timings["abandoned_finalizers"] += 1
             kstatus = "watchdog"
+            # the deadlined worker (numpy path) is a zombie occupying
+            # the 1-worker executor — replace it so the next dispatch
+            # doesn't queue behind it and cascade-deadline
+            _replace_executor()
             with obs_trace.span("sweep.watchdog_recompute", chunk=pci):
+                out = _sweep_kernel(np, pcfg, play, outputs="aggregates")
+        except ChunkCancelled:
+            # this chunk was queued on an executor the watchdog tore
+            # down; recompute serially, no deadline of its own
+            timings["cancelled_recomputes"] += 1
+            _reg.inc("sweep.cancelled_recomputes")
+            kstatus = "cancelled"
+            with obs_trace.span("sweep.cancelled_recompute", chunk=pci):
                 out = _sweep_kernel(np, pcfg, play, outputs="aggregates")
         except Exception as exc:
             if pbackend != "jax" or not degrade_on_failure:
@@ -1366,7 +1547,11 @@ def _sweep_chunked(workload: Workload,
                 raise
             kstatus = "degraded"
             out = _degrade(pcfg, play, exc, "materialization")
-        timings["kernel_wait_s"] += time.perf_counter() - t0
+        now = time.perf_counter()
+        timings["kernel_wait_s"] += now - t0
+        # dispatch -> finalize span of this chunk: the kernel stage's
+        # busy time (overlapping in-flight chunks each count their own)
+        timings["kernel_busy_s"] += now - tdisp
         obs_trace.span_end(kspan, status=kstatus)
         with obs_trace.span("sweep.reduce", chunk=pci, n=pn):
             reduce_chunk(psoa, pn, out)
@@ -1380,7 +1565,6 @@ def _sweep_chunked(workload: Workload,
     try:
         feed = _as_soa_chunks(configs, chunk_size)
         ci = -1                 # absolute index of the chunk being pulled
-        fresh: tuple | None = None
         while True:
             t0 = time.perf_counter()
             with obs_trace.span("sweep.pull"):
@@ -1436,21 +1620,25 @@ def _sweep_chunked(workload: Workload,
                     with obs_trace.span("sweep.dispatch", chunk=ci):
                         finalize = _dispatch_chunk(cfg, lay, backend,
                                                    mesh, chunk_size, n,
-                                                   executor)
+                                                   executor, use_pallas)
                 except Exception as exc:
                     if backend != "jax" or not degrade_on_failure:
                         obs_trace.span_end(kspan, status="error")
                         raise
                     out_now = _degrade(cfg, lay, exc, "dispatch")
                     finalize = lambda timeout=None, o=out_now: o  # noqa: E731
-                fresh = (soa, n, cfg, lay, finalize, backend,
-                         save_info, cache_state, ci, kspan)
-            drain()             # finalize + reduce the previous chunk
-            if soa is None:
+                pending.append((soa, n, cfg, lay, finalize, backend,
+                                save_info, cache_state, ci, kspan,
+                                time.perf_counter()))
+                _reg.observe("sweep.inflight", len(pending))
+                # bounded prefetch: drain FIFO until at most depth-1
+                # chunks stay in flight behind the next synthesis
+                while len(pending) >= depth:
+                    drain_one()
+            else:
+                while pending:  # feed exhausted: drain the queue dry
+                    drain_one()
                 break
-            pending = fresh
-            if not overlap:
-                drain()
     finally:
         if executor is not None:
             executor.shutdown(wait=True)

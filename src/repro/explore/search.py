@@ -30,7 +30,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.dse_batch import (_mesh_shards, _sweep_mixed,
-                                  _sweep_mixed_many, resolve_backend)
+                                  _sweep_mixed_many, resolve_backend,
+                                  resolve_use_pallas)
 from repro.core.workloads import Workload, get_workload
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       DEFAULT_OBJECTIVES,
@@ -148,7 +149,7 @@ class Evaluator:
                  *, backend: str = "auto", chunk_size: int = 4096,
                  use_cache: bool = True, weights=None,
                  sqnr_floor_db=None, mesh=None, traffic=None,
-                 n_slots: int = 8):
+                 n_slots: int = 8, use_pallas: bool | None = None):
         self.space = space
         self.multi = isinstance(workload, (list, tuple))
         if self.multi:
@@ -219,6 +220,11 @@ class Evaluator:
                 "backend='jax' needs a jax.sharding.Mesh for mesh=, not "
                 "an int shard count (see repro.launch.mesh.make_sweep_mesh)")
         self.mesh = mesh
+        # use_pallas routes the fused aggregate reduction through the
+        # hand-tiled Pallas sweep kernel (None = auto: only when jax has
+        # a real accelerator and no mesh is sharding the genome axis)
+        self.use_pallas = resolve_use_pallas(use_pallas, self.backend,
+                                             mesh=self.mesh)
         self._memo: dict[tuple[bytes, int], np.ndarray] = {}
         self._subsets: dict[int, tuple] = {}
         self.n_requested = 0
@@ -271,7 +277,8 @@ class Evaluator:
                        for (s, e), w in zip(bounds, wls)]
             agg = _sweep_mixed_many(wls, soa, assigns,
                                     use_cache=self.use_cache,
-                                    backend=self.backend, mesh=self.mesh)
+                                    backend=self.backend, mesh=self.mesh,
+                                    use_pallas=self.use_pallas)
             agg = {k: np.asarray(v)[:, :n_real]
                    for k, v in agg.items() if np.ndim(v) == 2}
             return multi_objective_matrix(
@@ -282,7 +289,7 @@ class Evaluator:
         agg = _sweep_mixed(wl, soa, assign[:, :len(wl.layers)],
                            use_cache=self.use_cache,
                            backend=self.backend, outputs="aggregates",
-                           mesh=self.mesh)
+                           mesh=self.mesh, use_pallas=self.use_pallas)
         return objective_matrix({k: np.asarray(v)[:n_real]
                                  for k, v in agg.items()},
                                 assign[:n_real, :len(wl.layers)],
@@ -365,6 +372,7 @@ class Evaluator:
             "memo_hits": self.n_memo_hits,
             "eval_seconds": self.eval_seconds,
             "backend": self.backend,
+            "use_pallas": self.use_pallas,
             "n_workloads": len(self.workloads),
             "mesh_shards": (None if self.mesh is None else
                             _mesh_shards(self.mesh)),
@@ -400,6 +408,7 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
                   ref_point: np.ndarray | None = None,
                   weights=None, sqnr_floor_db=None,
                   mesh=None, traffic=None, n_slots: int = 8,
+                  use_pallas: bool | None = None,
                   batch: int | None = None) -> SearchResult:
     """Uniform-random baseline: ``budget`` independent genomes, running
     non-dominated reduction, hypervolume recorded per batch.
@@ -423,7 +432,8 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
                    sqnr_floor_db=sqnr_floor_db, mesh=mesh,
-                   traffic=traffic, n_slots=n_slots)
+                   traffic=traffic, n_slots=n_slots,
+                   use_pallas=use_pallas)
     if budget < 1:
         raise ValueError("budget must be >= 1")
     if batch_size is not None and batch_size < 1:
@@ -481,6 +491,7 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
           ref_point: np.ndarray | None = None,
           weights=None, sqnr_floor_db=None, mesh=None,
           traffic=None, n_slots: int = 8,
+          use_pallas: bool | None = None,
           archive_epsilon=None,
           checkpoint_dir: str | None = None,
           checkpoint_every: int = 5,
@@ -546,7 +557,8 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
                    sqnr_floor_db=sqnr_floor_db, mesh=mesh,
-                   traffic=traffic, n_slots=n_slots)
+                   traffic=traffic, n_slots=n_slots,
+                   use_pallas=use_pallas)
 
     def eps_vector(ref, F0) -> np.ndarray | None:
         if archive_epsilon is None:
@@ -658,8 +670,8 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
                        chunk_size: int = 4096, min_layers: int = 2,
                        ref_point: np.ndarray | None = None,
                        weights=None, sqnr_floor_db=None,
-                       mesh=None, traffic=None,
-                       n_slots: int = 8) -> SearchResult:
+                       mesh=None, traffic=None, n_slots: int = 8,
+                       use_pallas: bool | None = None) -> SearchResult:
     """Successive halving over workload layer-prefix subsets.
 
     Rung ``r`` evaluates its population on the first ``m_r`` layers only
@@ -678,7 +690,8 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
                    sqnr_floor_db=sqnr_floor_db, mesh=mesh,
-                   traffic=traffic, n_slots=n_slots)
+                   traffic=traffic, n_slots=n_slots,
+                   use_pallas=use_pallas)
     L = ev.full_subset
     sizes = [L]
     while sizes[-1] > min(min_layers, L) and len(sizes) < 4:

@@ -93,7 +93,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     b, h, sq, d = q.shape
     sk = k.shape[2]
-    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    # ValueError, not assert: `python -O` strips asserts and a ragged
+    # sq/sk would silently truncate the attention grid
+    if sq % bq or sk % bk:
+        raise ValueError(
+            f"sequence lengths must tile evenly: (sq={sq}, sk={sk}) vs "
+            f"blocks (bq={bq}, bk={bk}); pad the operands (ops.py does) "
+            f"or pick divisible block sizes")
     scale_ = float(scale) if scale is not None else float(d) ** -0.5
     bh = b * h
     qf = q.reshape(bh, sq, d)

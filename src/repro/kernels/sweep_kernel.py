@@ -1,0 +1,287 @@
+"""Pallas sweep kernel — the hot (N x L) mapping + segment reduction.
+
+The streamed DSE pipeline spends its device time in one place: the
+row-stationary mapping + energy model over an ``(N configs, L layers)``
+grid followed by a per-workload-segment reduction down to the
+:data:`repro.core.dse_batch.AGGREGATE_OUTPUTS` columns.  The generic jax
+path jits that as unfused XLA ops; this module writes it as a real Pallas
+kernel with explicit tiling, following the tiling / ``pl.when``-epilogue /
+scratch-accumulator idiom of :mod:`repro.kernels.w4a8_matmul`:
+
+* grid ``(N/block_n, L/block_l)`` with the **layer axis innermost**, so
+  each config tile revisits its output block while four ``(block_n, W)``
+  VMEM scratch accumulators carry the running per-segment Kahan sums
+  (cycles + energy, value + compensation) across layer tiles;
+* the per-tile body *reuses* the shared array-namespace kernel
+  (:func:`repro.core.dse_batch._sweep_kernel` with ``exact=False,
+  outputs="layer_totals"``) on the tile's refs — one source of truth for
+  the PPA math, so Pallas results track the jitted XLA path op-for-op;
+* a ``(W, block_l)`` segment mask gates the sequential Kahan update per
+  layer column, reproducing :func:`repro.core.dse_batch._kahan_sum_rows`
+  over each ``[start, end)`` workload segment exactly (padded layer
+  columns carry an all-zero mask and never touch the accumulators);
+* the ``pl.when(l == n_l - 1)`` epilogue converts the accumulated sums to
+  the six aggregate columns (latency, energy_j, throughput, perf/area)
+  with the same formulas as ``_segment_aggregates``, writing one
+  ``(block_n, 6 * W)`` output block per config tile.
+
+``interpret=True`` (auto-selected when no accelerator platform is
+attached) runs the same kernel through the Pallas interpreter on CPU —
+bit-comparable to the jitted XLA path at the usual f32 tolerance, which
+CI asserts at ≤1e-6 relative against the exact numpy kernel.  On an
+accelerator the per-chunk config operands are donated
+(``donate_argnums``) so steady-state streaming stops double-buffering
+device memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.dse_batch import (AGGREGATE_OUTPUTS, _jax_has_accelerator,
+                                  _sweep_kernel, _to_jax_inputs)
+
+# operand order of the pallas_call — every cfg/lay field the mapping +
+# energy model reads, one ref each (dicts don't cross the pallas boundary)
+CFG_FIELDS = ("pe_rows", "pe_cols", "num_pes", "act_bits", "weight_bits",
+              "glb_kb", "glb_bits", "filter_spad", "psum_spad",
+              "spad_bits", "dram_bw_gbps", "mac_energy_pj", "clock_ghz",
+              "area_mm2", "leak_mw")
+LAY_FIELDS = ("r", "s", "e", "f", "c", "k", "h", "w", "batch", "macs")
+# the per-layer precision columns that may be (N, L) instead of (N, 1)
+MIXED_CFG_FIELDS = ("act_bits", "weight_bits", "mac_energy_pj")
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def resolve_pallas_interpret(interpret: bool | None = None) -> bool:
+    """``None`` -> interpreter mode exactly when no accelerator platform
+    is attached (the CPU-CI path); an explicit bool wins."""
+    if interpret is None:
+        return not _jax_has_accelerator()
+    return bool(interpret)
+
+
+def resolve_pallas_donate(donate: bool | None = None) -> bool:
+    """``None`` -> donate per-chunk config operands only on a real
+    accelerator (CPU jax can't consume donations and would warn)."""
+    if donate is None:
+        return _jax_has_accelerator()
+    return bool(donate)
+
+
+def _sweep_block_body(*refs, n_l: int, block_l: int, w: int):
+    """One ``(block_n, block_l)`` tile: mapping + masked segment Kahan
+    accumulation, epilogue on the last layer tile."""
+    n_cfg, n_lay = len(CFG_FIELDS), len(LAY_FIELDS)
+    cfg_refs = refs[:n_cfg]
+    lay_refs = refs[n_cfg:n_cfg + n_lay]
+    mask_ref, macs_ref, out_ref = refs[n_cfg + n_lay:n_cfg + n_lay + 3]
+    acc_c, cmp_c, acc_e, cmp_e = refs[n_cfg + n_lay + 3:]
+
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        acc_c[...] = jnp.zeros_like(acc_c)
+        cmp_c[...] = jnp.zeros_like(cmp_c)
+        acc_e[...] = jnp.zeros_like(acc_e)
+        cmp_e[...] = jnp.zeros_like(cmp_e)
+
+    cfg = {k: r[...] for k, r in zip(CFG_FIELDS, cfg_refs)}
+    lay = {k: r[...] for k, r in zip(LAY_FIELDS, lay_refs)}
+    totals = _sweep_kernel(jnp, cfg, lay, exact=False,
+                           outputs="layer_totals")
+    tc = totals["total_cycles"]            # (block_n, block_l) f32
+    ep = totals["energy_pj"]
+    mask = mask_ref[...]                   # (w, block_l) f32
+
+    # Sequential compensated accumulation, one layer column at a time,
+    # gated per segment: a segment's accumulator advances only on its own
+    # columns, so each (config, segment) cell sees exactly the Kahan
+    # update sequence of _kahan_sum_rows over that segment's slice.
+    for j in range(block_l):
+        sel = mask[:, j][None, :] > 0.5    # (1, w): layer j's segment(s)
+        for acc_ref, cmp_ref, x in ((acc_c, cmp_c, tc),
+                                    (acc_e, cmp_e, ep)):
+            acc = acc_ref[...]
+            comp = cmp_ref[...]
+            y = x[:, j][:, None] - comp    # (block_n, w)
+            t = acc + y
+            c2 = (t - acc) - y
+            acc_ref[...] = jnp.where(sel, t, acc)
+            cmp_ref[...] = jnp.where(sel, c2, comp)
+
+    @pl.when(l_idx == n_l - 1)
+    def _epilogue():
+        cycles = acc_c[...]                          # (block_n, w)
+        energy = acc_e[...]
+        clk = cfg["clock_ghz"]                       # (block_n, 1)
+        latency_s = cycles / (clk * 1e9)
+        energy_j = energy / 1e12
+        throughput = macs_ref[...] / latency_s / 1e9  # (1, w) / (bn, w)
+        perf_per_area = throughput / cfg["area_mm2"]
+        out_ref[...] = jnp.concatenate(
+            [cycles, energy, latency_s, energy_j, throughput,
+             perf_per_area], axis=1)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_sweep_call(n_pad: int, l_pad: int, w: int, block_n: int,
+                      block_l: int, mixed_wide: tuple[bool, ...],
+                      interpret: bool, donate: bool):
+    """Compiled pallas_call for one (shape, tiling, mode) signature —
+    cached so a steady-state chunk stream traces exactly once."""
+    n_l = l_pad // block_l
+    wide = dict(zip(MIXED_CFG_FIELDS, mixed_wide))
+
+    cfg_block = pl.BlockSpec((block_n, 1), lambda i, l: (i, 0))
+    cfg_block_wide = pl.BlockSpec((block_n, block_l), lambda i, l: (i, l))
+    lay_block = pl.BlockSpec((1, block_l), lambda i, l: (0, l))
+    in_specs = [cfg_block_wide if wide.get(name, False) else cfg_block
+                for name in CFG_FIELDS]
+    in_specs += [lay_block for _ in LAY_FIELDS]
+    in_specs.append(pl.BlockSpec((w, block_l), lambda i, l: (0, l)))
+    in_specs.append(pl.BlockSpec((1, w), lambda i, l: (0, 0)))
+
+    call = pl.pallas_call(
+        functools.partial(_sweep_block_body, n_l=n_l, block_l=block_l,
+                          w=w),
+        grid=(n_pad // block_n, n_l),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_n, 6 * w), lambda i, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 6 * w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n, w), jnp.float32)
+                        for _ in range(4)],
+        interpret=interpret,
+    )
+    # donating the per-chunk (N, ...) config operands lets steady-state
+    # streaming reuse their device buffers instead of double-buffering
+    donate_argnums = tuple(range(len(CFG_FIELDS))) if donate else ()
+    return jax.jit(call, donate_argnums=donate_argnums)
+
+
+def _pad_cfg(a: np.ndarray, n_pad: int, l_pad: int) -> np.ndarray:
+    n, width = a.shape
+    if n_pad > n:       # repeat the last row: valid throwaway work
+        a = np.concatenate([a, np.repeat(a[-1:], n_pad - n, axis=0)])
+    if width > 1 and l_pad > width:
+        a = np.concatenate(
+            [a, np.repeat(a[:, :1], l_pad - width, axis=1)], axis=1)
+    return a
+
+
+def _pad_lay(a: np.ndarray, l_pad: int) -> np.ndarray:
+    width = a.shape[1]
+    if l_pad > width:   # repeat layer 0: masked out of every segment
+        a = np.concatenate(
+            [a, np.repeat(a[:, :1], l_pad - width, axis=1)], axis=1)
+    return a
+
+
+def sweep_aggregates_pallas(cfg: dict, lay: dict, *,
+                            bounds: tuple[tuple[int, int], ...] | None = None,
+                            block_n: int | None = None,
+                            block_l: int | None = None,
+                            interpret: bool | None = None,
+                            donate: bool | None = None) -> dict:
+    """Aggregate sweep columns via the Pallas kernel.
+
+    ``cfg`` / ``lay`` are the float64/int64 arrays of
+    :func:`repro.core.dse_batch._make_cfg_lay` (the x64-free conversion
+    happens here).  ``bounds=None`` treats the whole layer axis as one
+    workload and returns ``{column: (N,)}`` like
+    ``_run_kernel(..., outputs="aggregates")``; explicit ``bounds``
+    returns ``{column: (W, N)}`` like ``_sweep_mixed_many``.  Results are
+    jax arrays (dispatch is async under jit) — ``np.asarray`` to
+    materialize.
+    """
+    missing = [k for k in CFG_FIELDS if k not in cfg]
+    if missing:
+        raise ValueError(
+            f"sweep_aggregates_pallas: cfg is missing field(s) {missing}; "
+            f"build it with repro.core.dse_batch._make_cfg_lay")
+    missing = [k for k in LAY_FIELDS if k not in lay]
+    if missing:
+        raise ValueError(
+            f"sweep_aggregates_pallas: lay is missing field(s) {missing}; "
+            f"build it with repro.core.dse_batch._make_cfg_lay")
+    n = int(np.shape(cfg["pe_rows"])[0])
+    l = int(np.shape(lay["r"])[1])
+    if n < 1 or l < 1:
+        raise ValueError(
+            f"sweep_aggregates_pallas: need at least one config and one "
+            f"layer, got N={n}, L={l}")
+    for name in CFG_FIELDS:
+        shp = np.shape(cfg[name])
+        want_widths = (1, l) if name in MIXED_CFG_FIELDS else (1,)
+        if len(shp) != 2 or shp[0] != n or shp[1] not in want_widths:
+            raise ValueError(
+                f"sweep_aggregates_pallas: cfg[{name!r}] has shape {shp}; "
+                f"expected ({n}, w) with w in {want_widths} — pass the "
+                f"(N, 1) column form (or (N, L) for per-layer precision "
+                f"fields)")
+    for name in LAY_FIELDS:
+        shp = np.shape(lay[name])
+        if shp != (1, l):
+            raise ValueError(
+                f"sweep_aggregates_pallas: lay[{name!r}] has shape {shp}; "
+                f"expected (1, {l})")
+    squeeze = bounds is None
+    if bounds is None:
+        bounds = ((0, l),)
+    bounds = tuple((int(s), int(e)) for s, e in bounds)
+    for s, e in bounds:
+        if not (0 <= s < e <= l):
+            raise ValueError(
+                f"sweep_aggregates_pallas: segment bounds ({s}, {e}) are "
+                f"not a non-empty slice of the {l}-layer axis")
+    w = len(bounds)
+
+    interpret = resolve_pallas_interpret(interpret)
+    donate = resolve_pallas_donate(donate)
+    if block_n is None:
+        block_n = min(512, _ceil_to(n, 8))
+    if block_l is None:
+        block_l = min(32, l)
+    if block_n < 1 or block_l < 1:
+        raise ValueError(
+            f"sweep_aggregates_pallas: block sizes must be >= 1, got "
+            f"block_n={block_n}, block_l={block_l}")
+
+    jcfg, jlay = _to_jax_inputs(cfg, lay, exact=False)
+    n_pad = _ceil_to(n, block_n)
+    l_pad = _ceil_to(l, block_l)
+
+    operands = [_pad_cfg(np.asarray(jcfg[name]), n_pad, l_pad)
+                for name in CFG_FIELDS]
+    operands += [_pad_lay(np.asarray(jlay[name]), l_pad)
+                 for name in LAY_FIELDS]
+    seg_mask = np.zeros((w, l_pad), dtype=np.float32)
+    for wi, (s, e) in enumerate(bounds):
+        seg_mask[wi, s:e] = 1.0
+    seg_macs = np.array(
+        [[jlay["macs"][0, s:e].sum(dtype=np.float32) for s, e in bounds]],
+        dtype=np.float32)
+    operands += [seg_mask, seg_macs]
+
+    mixed_wide = tuple(np.shape(cfg[name])[1] == l and l > 1
+                       for name in MIXED_CFG_FIELDS)
+    fn = _build_sweep_call(n_pad, l_pad, w, block_n, block_l, mixed_wide,
+                           interpret, donate)
+    out = fn(*operands)                    # (n_pad, 6 * w), async
+
+    result = {}
+    for idx, name in enumerate(AGGREGATE_OUTPUTS):
+        block = out[:n, idx * w:(idx + 1) * w]     # (N, W)
+        result[name] = block[:, 0] if squeeze else block.T
+    return result

@@ -72,9 +72,22 @@ def w4a8_matmul(x_q: jax.Array, w_packed: jax.Array, x_scale: jax.Array,
     """(m,k) int8 @ packed (k//2,n) pow2-int4 with dequant epilogue."""
     m, k = x_q.shape
     kp, n = w_packed.shape
-    assert k == 2 * kp, (x_q.shape, w_packed.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    assert bk % 2 == 0
+    # real ValueErrors, not asserts: under `python -O` an assert vanishes
+    # and a non-multiple m/n/k silently truncates the grid into garbage
+    if k != 2 * kp:
+        raise ValueError(
+            f"activation k={k} must be twice the packed weight rows "
+            f"kp={kp} (two int4 values per int8 byte); got x_q "
+            f"{x_q.shape} vs w_packed {w_packed.shape}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shapes must tile evenly: (m={m}, n={n}, k={k}) vs blocks "
+            f"(bm={bm}, bn={bn}, bk={bk}); pad the operands or pick "
+            f"divisible block sizes")
+    if bk % 2:
+        raise ValueError(
+            f"bk={bk} must be even so each k-block unpacks whole int4 "
+            f"pairs")
     n_k = k // bk
     x_scale = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
     w_scale = jnp.broadcast_to(

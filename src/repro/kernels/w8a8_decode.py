@@ -82,7 +82,12 @@ def w8a8_decode_attention(q, k_q, v_q, k_scale, v_scale, pos, *,
     Returns (b, kvh, rep, hd) in q.dtype."""
     b, kvh, rep, hd = q.shape
     S = k_q.shape[1]
-    assert S % bs == 0, (S, bs)
+    # ValueError, not assert: `python -O` strips asserts and a ragged S
+    # would silently truncate the sequence grid
+    if S % bs:
+        raise ValueError(
+            f"kv sequence length S={S} must be divisible by the block "
+            f"size bs={bs}; pad the cache or pick a divisible bs")
     scale = float(hd) ** -0.5
     bh = b * kvh
     qf = q.reshape(bh, rep, hd)

@@ -50,8 +50,17 @@ def w8a8_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
     divisible by the block sizes (ops.py pads otherwise)."""
     m, k = x_q.shape
     k2, n = w_q.shape
-    assert k == k2, (x_q.shape, w_q.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    # ValueError, not assert: `python -O` strips asserts and a
+    # non-multiple m/n/k would silently truncate the grid
+    if k != k2:
+        raise ValueError(
+            f"contraction mismatch: x_q {x_q.shape} has k={k} but w_q "
+            f"{w_q.shape} has k={k2}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shapes must tile evenly: (m={m}, n={n}, k={k}) vs blocks "
+            f"(bm={bm}, bn={bn}, bk={bk}); pad the operands or pick "
+            f"divisible block sizes")
     n_k = k // bk
     x_scale = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
     w_scale = jnp.broadcast_to(

@@ -156,3 +156,51 @@ def test_empty_feed_still_returns_empty_front():
     res = sweep_chunked(WL, [], overlap=True, backend="numpy")
     assert res.n_configs == 0 and res.front_size == 0
     assert res.timings["overlap"] is True
+
+
+# ---------------------------------------------------------------------------
+# depth-k prefetch queue (ISSUE 9): the generalized pipeline must stay an
+# invisible optimization at every depth, exactly like overlap=True at
+# depth 2 — identical fronts and identical stream-ordered cache accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", (1, 2, 4))
+def test_prefetch_depth_front_identity(depth, jax_usable):
+    feed = SPACE * 7
+    for backend in _backends(jax_usable):
+        serial = sweep_chunked(WL, [feed], chunk_size=11, backend=backend,
+                               overlap=False)
+        pipe = sweep_chunked(WL, [feed], chunk_size=11, backend=backend,
+                             overlap=True, prefetch_depth=depth)
+        _assert_same_sweep(serial, pipe)
+        assert pipe.timings["prefetch_depth"] == depth
+        # overlap=False pins the effective depth to 1 regardless of the
+        # requested prefetch_depth
+        assert serial.timings["prefetch_depth"] == 1
+
+
+@pytest.mark.parametrize("depth", (1, 2, 4))
+def test_prefetch_depth_cache_accounting(tmp_path, depth, jax_usable):
+    """Synthesis cache hit/miss counters are stream-ordered state; a
+    deeper prefetch queue must not reorder or double-count them."""
+    for backend in _backends(jax_usable):
+        ref_cache = PersistentSynthesisCache(
+            tmp_path / f"ref_{backend}_{depth}.npz")
+        ref = sweep_chunked(WL, [SPACE * 3], chunk_size=7, backend=backend,
+                            overlap=False, cache=ref_cache)
+        cache = PersistentSynthesisCache(
+            tmp_path / f"d_{backend}_{depth}.npz")
+        res = sweep_chunked(WL, [SPACE * 3], chunk_size=7, backend=backend,
+                            overlap=True, prefetch_depth=depth,
+                            cache=cache)
+        _assert_same_sweep(ref, res)
+        for attr in ("hits", "misses"):
+            assert getattr(cache, attr) == getattr(ref_cache, attr), \
+                (backend, depth, attr)
+        assert len(cache) == len(ref_cache)
+
+
+def test_prefetch_depth_validation():
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        sweep_chunked(WL, [SPACE], chunk_size=8, backend="numpy",
+                      prefetch_depth=0)

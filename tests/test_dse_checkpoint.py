@@ -234,6 +234,120 @@ def test_watchdog_redispatches_stuck_chunk(tmp_path, monkeypatch,
     _assert_same_sweep(res, ref_sweep)
 
 
+def test_watchdog_zombie_worker_does_not_cascade(monkeypatch, ref_sweep):
+    """Regression (ISSUE 9): ``fut.cancel()`` cannot interrupt a running
+    kernel, so before the executor-replacement fix the zombie worker kept
+    occupying the 1-worker pool and every later chunk queued behind it
+    into its own deadline.  A deliberately slow *first* chunk must now
+    fire the watchdog exactly once, replace the executor, and let the
+    rest of the stream (including chunks already queued on the torn-down
+    executor) finish cleanly on the exact front."""
+    real_kernel = dse_batch._sweep_kernel
+    state = {"calls": 0}
+
+    def slow_first(xp, cfg, lay, **kw):
+        state["calls"] += 1
+        if state["calls"] == 1:
+            import time
+            time.sleep(0.9)
+        return real_kernel(xp, cfg, lay, **kw)
+
+    monkeypatch.setattr(dse_batch, "_sweep_kernel", slow_first)
+    with pytest.warns(RuntimeWarning) as rec:
+        res = _sweep_chunked(WL, [FEED], chunk_size=CHUNK,
+                             backend="numpy", overlap=True,
+                             prefetch_depth=4, chunk_deadline_s=0.3)
+    deadline_warns = [w for w in rec
+                     if "watchdog deadline" in str(w.message)]
+    assert len(deadline_warns) == 1          # no cascading deadlines
+    t = res.timings
+    assert t["watchdog_redispatches"] == 1
+    assert t["executor_replacements"] == 1
+    # chunks queued behind the zombie surface as cancellations and are
+    # recomputed serially, never as their own watchdog fires
+    assert 0 < t["cancelled_recomputes"] < N_CHUNKS
+    _assert_same_sweep(res, ref_sweep)
+
+
+class _SlowBuf:
+    """Array-like whose materialization blocks — a wedged device buffer."""
+
+    def __init__(self, arr, delay):
+        self.arr, self.delay = arr, delay
+
+    def __array__(self, dtype=None):
+        import time
+        time.sleep(self.delay)
+        return np.asarray(self.arr, dtype=dtype)
+
+
+def test_jax_watchdog_drops_abandoned_buffers(monkeypatch):
+    """Regression (ISSUE 9): the daemon materialize thread the watchdog
+    abandons used to park the chunk's host+device buffers in its result
+    box for the life of the process.  The orphan must now discard its
+    result on completion and the ledger must return to zero live."""
+    import time
+    from repro.core.dse_batch import abandoned_finalizers
+
+    n = 4
+    out = {"latency_s": _SlowBuf(np.ones(n), 0.8),
+           "energy_j": _SlowBuf(np.ones(n), 0.0)}
+    monkeypatch.setattr(dse_batch, "get_jax_kernel",
+                        lambda mesh, outputs: (lambda c, l: out, False))
+    monkeypatch.setattr(dse_batch, "_to_jax_inputs",
+                        lambda cfg, lay, exact: (cfg, lay))
+    a0 = abandoned_finalizers.abandoned
+    c0 = abandoned_finalizers.completed
+    finalize = dse_batch._dispatch_chunk(
+        {"pe_rows": np.ones(n)}, {}, "jax", None, n, n, None)
+    with pytest.raises(ChunkDeadlineExceeded):
+        finalize(timeout=0.1)
+    assert abandoned_finalizers.abandoned == a0 + 1
+    deadline = time.time() + 5.0
+    while abandoned_finalizers.completed < c0 + 1:
+        if time.time() > deadline:            # pragma: no cover
+            pytest.fail("orphaned finalizer never completed")
+        time.sleep(0.05)
+    assert abandoned_finalizers.live == (a0 - c0)   # back to baseline
+
+
+def test_jax_watchdog_stream_counts_abandoned_finalizers(monkeypatch,
+                                                         ref_sweep):
+    """Stream-level: a jax chunk that never materializes within the
+    deadline is recomputed on numpy, counted in
+    ``timings['abandoned_finalizers']``, and the stream finishes with
+    the exact front (no cascade, no unbounded orphan growth)."""
+    from repro.core.dse_batch import abandoned_finalizers
+    real_kernel = dse_batch._sweep_kernel
+    state = {"calls": 0}
+
+    def jax_fn(cfg, lay):
+        state["calls"] += 1
+        out = real_kernel(np, cfg, lay, outputs="aggregates")
+        if state["calls"] == 1:
+            return {k: _SlowBuf(v, 0.9) for k, v in out.items()}
+        return out
+
+    monkeypatch.setattr(dse_batch, "resolve_backend",
+                        lambda b="auto": "jax")
+    monkeypatch.setattr(dse_batch, "_require_jax_mesh", lambda mesh: None)
+    monkeypatch.setattr(dse_batch, "get_jax_kernel",
+                        lambda mesh, outputs: (jax_fn, False))
+    monkeypatch.setattr(dse_batch, "_to_jax_inputs",
+                        lambda cfg, lay, exact: (cfg, lay))
+    a0 = abandoned_finalizers.abandoned
+    with pytest.warns(RuntimeWarning) as rec:
+        res = _sweep_chunked(WL, [FEED], chunk_size=CHUNK, backend="jax",
+                             overlap=True, prefetch_depth=3,
+                             chunk_deadline_s=0.3)
+    assert len([w for w in rec
+                if "watchdog deadline" in str(w.message)]) == 1
+    assert res.timings["watchdog_redispatches"] == 1
+    assert res.timings["abandoned_finalizers"] == 1
+    assert abandoned_finalizers.abandoned == a0 + 1
+    _assert_same_sweep(res, ref_sweep)
+
+
 def test_jax_failure_degrades_stream_to_numpy(monkeypatch, ref_sweep):
     """A jax failure mid-stream falls back to the numpy kernel with a
     warning instead of losing the accumulated front."""

@@ -1,0 +1,265 @@
+"""Pallas sweep kernel parity + routing (ISSUE 9 tentpole).
+
+The hand-tiled Pallas kernel (``repro.kernels.sweep_kernel``) must be an
+invisible substitution for the jitted XLA aggregate path: interpret-mode
+results match the exact numpy kernel at ≤1e-6 relative on every
+aggregate column — across ragged config tails, multi-tile accumulation
+on both grid axes, mixed-precision ``(N, L)`` columns, and multi-segment
+(multi-workload) reductions — and the ``use_pallas`` routing flag
+threads from the public engines down to ``_run_kernel`` with strict
+validation.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core.accelerator import AcceleratorConfig, configs_to_soa
+from repro.core.dse_batch import (AGGREGATE_OUTPUTS, _make_cfg_lay,
+                                  _sweep_chunked, _sweep_kernel,
+                                  _sweep_mixed, _workload_batch,
+                                  mixed_assign_cfg, resolve_use_pallas)
+from repro.core.pe import PEType
+from repro.core.synthesis import synthesize_soa
+from repro.core.workloads import get_workload
+from repro.kernels.sweep_kernel import (CFG_FIELDS, resolve_pallas_donate,
+                                        resolve_pallas_interpret,
+                                        sweep_aggregates_pallas)
+
+RTOL = 1e-6
+
+
+def _configs(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    types = tuple(PEType)
+    return tuple(
+        AcceleratorConfig(
+            pe_type=types[int(rng.integers(len(types)))],
+            pe_rows=int(rng.integers(4, 33)),
+            pe_cols=int(rng.integers(4, 33)),
+            glb_kb=int(rng.choice([64, 128, 256, 512])),
+            dram_bw_gbps=float(rng.choice([6.4, 12.8, 25.6])))
+        for _ in range(n))
+
+
+def _cfg_lay(n: int, workloads=("vgg16",), seed: int = 0):
+    """(cfg, lay, bounds) over the concatenated layer axis."""
+    soa = configs_to_soa(_configs(n, seed))
+    cols = synthesize_soa(soa)
+    wbs = [_workload_batch(get_workload(w)) for w in workloads]
+    cfg, _ = _make_cfg_lay(soa, cols, wbs[0])
+    lay = {k: np.concatenate([wb.arrays[k][None, :] for wb in wbs],
+                             axis=1) for k in wbs[0].arrays}
+    bounds, s = [], 0
+    for wb in wbs:
+        L = len(wb.arrays["macs"])
+        bounds.append((s, s + L))
+        s += L
+    return cfg, lay, tuple(bounds)
+
+
+def _numpy_segments(cfg, lay, bounds):
+    """Exact reference: the numpy kernel per workload segment -> (W, N)."""
+    out = {k: [] for k in AGGREGATE_OUTPUTS}
+    for s, e in bounds:
+        sub_lay = {k: v[:, s:e] for k, v in lay.items()}
+        sub_cfg = {k: (v[:, s:e] if v.shape[1] > 1 else v)
+                   for k, v in cfg.items()}
+        agg = _sweep_kernel(np, sub_cfg, sub_lay, outputs="aggregates")
+        for k in AGGREGATE_OUTPUTS:
+            out[k].append(np.asarray(agg[k], dtype=np.float64))
+    return {k: np.stack(v) for k, v in out.items()}
+
+
+def _assert_close(got: dict, want: dict):
+    for k in AGGREGATE_OUTPUTS:
+        g = np.asarray(got[k], dtype=np.float64)
+        w = np.asarray(want[k], dtype=np.float64)
+        assert g.shape == w.shape, k
+        rel = np.max(np.abs(g - w) / np.maximum(np.abs(w), 1e-30))
+        assert rel <= RTOL, (k, rel)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode parity vs the exact numpy kernel
+# ---------------------------------------------------------------------------
+
+def test_interpret_parity_single_workload():
+    cfg, lay, _ = _cfg_lay(83)
+    got = sweep_aggregates_pallas(cfg, lay, interpret=True)
+    want = {k: v[0] for k, v in
+            _numpy_segments(cfg, lay, ((0, lay["r"].shape[1]),)).items()}
+    assert all(np.shape(got[k]) == (83,) for k in AGGREGATE_OUTPUTS)
+    _assert_close(got, want)
+
+
+def test_multi_tile_ragged_tail():
+    """block_n/block_l far smaller than (N, L): the scratch accumulators
+    must carry segment sums across layer tiles and the padded ragged
+    tail rows/columns must never contaminate real outputs."""
+    cfg, lay, _ = _cfg_lay(53, seed=1)
+    L = lay["r"].shape[1]
+    got = sweep_aggregates_pallas(cfg, lay, block_n=16, block_l=5,
+                                  interpret=True)
+    want = {k: v[0] for k, v in
+            _numpy_segments(cfg, lay, ((0, L),)).items()}
+    _assert_close(got, want)
+
+
+def test_mixed_precision_columns():
+    """(N, L) per-layer act/weight-bit + mac-energy columns (the
+    co-exploration genome layout) ride the wide BlockSpec path."""
+    rng = np.random.default_rng(7)
+    cfg, lay, _ = _cfg_lay(40, seed=2)
+    L = lay["r"].shape[1]
+    assign = rng.integers(0, len(tuple(PEType)), size=(40, L))
+    cfg = mixed_assign_cfg(cfg, assign)
+    got = sweep_aggregates_pallas(cfg, lay, block_n=16, block_l=4,
+                                  interpret=True)
+    want = {k: v[0] for k, v in
+            _numpy_segments(cfg, lay, ((0, L),)).items()}
+    _assert_close(got, want)
+
+
+def test_multi_segment_bounds():
+    """Two workloads on one concatenated layer axis: per-segment masks
+    must gate the Kahan updates even when a layer tile straddles the
+    segment boundary."""
+    cfg, lay, bounds = _cfg_lay(21, workloads=("vgg16", "resnet34"),
+                                seed=3)
+    got = sweep_aggregates_pallas(cfg, lay, bounds=bounds, block_n=8,
+                                  block_l=8, interpret=True)
+    want = _numpy_segments(cfg, lay, bounds)
+    assert all(np.shape(got[k]) == (2, 21) for k in AGGREGATE_OUTPUTS)
+    _assert_close(got, want)
+
+
+def test_committed_stream_slice_parity():
+    """Rows drawn from the committed benchmark stream (the widened
+    chunked-scaling grid of dse_sweep_bench) match at ≤1e-6."""
+    from repro.core.accelerator import design_space_soa
+    soa = next(iter(design_space_soa(
+        chunk_size=2048, glb_kbs=(4, 64, 1024, 4096),
+        bws=tuple(np.linspace(2.0, 64.0, 156)))))
+    cols = synthesize_soa(soa)
+    wb = _workload_batch(get_workload("vgg16"))
+    cfg, lay = _make_cfg_lay(soa, cols, wb)
+    got = sweep_aggregates_pallas(cfg, lay, interpret=True)
+    want = {k: np.asarray(v, dtype=np.float64) for k, v in
+            _sweep_kernel(np, cfg, lay, outputs="aggregates").items()}
+    _assert_close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# guards + mode resolution
+# ---------------------------------------------------------------------------
+
+def test_validation_guards():
+    cfg, lay, _ = _cfg_lay(8)
+    bad = dict(cfg)
+    del bad["pe_rows"]
+    with pytest.raises(ValueError, match="missing field"):
+        sweep_aggregates_pallas(bad, lay)
+    bad = dict(cfg, pe_rows=cfg["pe_rows"][:, 0])    # (N,) not (N, 1)
+    with pytest.raises(ValueError, match="shape"):
+        sweep_aggregates_pallas(bad, lay)
+    with pytest.raises(ValueError, match="bounds"):
+        sweep_aggregates_pallas(cfg, lay, bounds=((0, 0),))
+    with pytest.raises(ValueError, match="bounds"):
+        sweep_aggregates_pallas(
+            cfg, lay, bounds=((0, lay["r"].shape[1] + 1),))
+    with pytest.raises(ValueError, match="block sizes"):
+        sweep_aggregates_pallas(cfg, lay, block_n=0)
+
+
+def test_mode_resolution_cpu():
+    """On the CPU-only CI host: interpret auto-resolves on, donation
+    auto-resolves off (CPU jax can't consume donations)."""
+    from repro.core.dse_batch import _jax_has_accelerator
+    if _jax_has_accelerator():          # pragma: no cover - device CI
+        pytest.skip("accelerator attached")
+    assert resolve_pallas_interpret(None) is True
+    assert resolve_pallas_donate(None) is False
+    assert resolve_pallas_interpret(False) is False
+    assert resolve_pallas_donate(True) is True
+
+
+def test_resolve_use_pallas_routing():
+    assert resolve_use_pallas(False, "numpy") is False
+    assert resolve_use_pallas(None, "numpy") is False
+    assert resolve_use_pallas(True, "jax") is True
+    with pytest.raises(ValueError, match="numpy"):
+        resolve_use_pallas(True, "numpy")
+    with pytest.raises(ValueError, match="mesh"):
+        resolve_use_pallas(True, "jax", mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# routing through the public engines
+# ---------------------------------------------------------------------------
+
+def test_sweep_mixed_use_pallas_matches_xla(jax_usable):
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    from repro.core.pe import mode_compat_matrix
+    rng = np.random.default_rng(11)
+    wl = get_workload("vgg16")
+    soa = configs_to_soa(_configs(24, seed=4))
+    # per-layer modes drawn from each config's *compatible* mode set
+    compat = mode_compat_matrix()[soa["pe_type_idx"]]     # (N, T)
+    assign = np.stack([
+        rng.choice(np.nonzero(row)[0], size=len(wl.layers))
+        for row in compat])
+    base = _sweep_mixed(wl, soa, assign, backend="jax",
+                        outputs="aggregates", use_pallas=False)
+    pal = _sweep_mixed(wl, soa, assign, backend="jax",
+                       outputs="aggregates", use_pallas=True)
+    _assert_close({k: pal[k] for k in AGGREGATE_OUTPUTS},
+                  {k: np.asarray(base[k], dtype=np.float64)
+                   for k in AGGREGATE_OUTPUTS})
+
+
+def test_chunked_stream_use_pallas(jax_usable):
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    wl = get_workload("vgg16")
+    feed = list(_configs(36, seed=5))
+    res = _sweep_chunked(wl, [feed], chunk_size=16, backend="jax",
+                         use_pallas=True, use_cache=False)
+    assert res.timings["use_pallas"] is True
+    ref = _sweep_chunked(wl, [feed], chunk_size=16, backend="numpy",
+                         overlap=False, use_cache=False)
+    assert res.front_size == ref.front_size
+    for m in ref.front_metrics:
+        np.testing.assert_allclose(
+            np.sort(res.front_metrics[m]), np.sort(ref.front_metrics[m]),
+            rtol=1e-5)
+
+
+def test_evaluator_use_pallas_parity(jax_usable):
+    if not jax_usable:
+        pytest.skip("jax unusable")
+    from repro.explore import CoExploreSpace
+    from repro.explore.search import random_search
+    wl = get_workload("vgg16")
+    space = CoExploreSpace(n_layers=len(wl.layers))
+    base = random_search(space, wl, 48, seed=9, backend="jax",
+                         use_pallas=False)
+    pal = random_search(space, wl, 48, seed=9, backend="jax",
+                        use_pallas=True)
+    assert pal.stats["use_pallas"] is True
+    np.testing.assert_allclose(pal.front_objectives,
+                               base.front_objectives, rtol=1e-5)
+
+
+def test_explore_spec_use_pallas_validation():
+    from repro.core.dse import ExploreSpec
+    with pytest.raises(ValueError, match="numpy"):
+        ExploreSpec.single("vgg16", backend="numpy", use_pallas=True)
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        ExploreSpec.single("vgg16", prefetch_depth=0, chunk_size=8)
+    with pytest.raises(ValueError, match="chunk_size"):
+        ExploreSpec.single("vgg16", prefetch_depth=4)
+    spec = ExploreSpec.single("vgg16", chunk_size=8, prefetch_depth=4)
+    assert spec.prefetch_depth == 4 and spec.use_pallas is None
