@@ -6,10 +6,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (coexplore_bench, coexplore_many_bench,
-                            dse_sweep_bench, fig2_ppa_accuracy,
-                            fig3to5_dse, kernel_bench, quant_accuracy,
-                            roofline_bench, serving_dse_bench)
+    from benchmarks import (accuracy_bench, coexplore_bench,
+                            coexplore_many_bench, dse_sweep_bench,
+                            fig2_ppa_accuracy, fig3to5_dse, kernel_bench,
+                            quant_accuracy, roofline_bench,
+                            serving_dse_bench)
     modules = [
         ("fig2", fig2_ppa_accuracy),
         ("fig3to5", fig3to5_dse),
@@ -17,6 +18,7 @@ def main() -> None:
         ("coexplore", coexplore_bench),
         ("coexplore_many", coexplore_many_bench),
         ("serving_dse", serving_dse_bench),
+        ("accuracy", accuracy_bench),
         ("kernels", kernel_bench),
         ("quant_acc", quant_accuracy),
         ("roofline", roofline_bench),

@@ -46,8 +46,8 @@ from repro.serving.traffic import make_trace  # noqa: E402
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_serving_dse.json"
 
-SERVING_OBJS = ("p99_latency_s", "energy_per_token_j", "quant_noise")
-EDP_OBJS = ("edp", "quant_noise")
+SERVING_OBJS = ("p99_latency_s", "energy_per_token_j", "accuracy_noise")
+EDP_OBJS = ("edp", "accuracy_noise")
 
 
 def _genome_set(res) -> set:

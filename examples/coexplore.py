@@ -82,7 +82,7 @@ def main() -> None:
               f" glb{cfg.glb_kb:<4d} [{_mode_string(pt['modes'])}]"
               f"  perf/area={-pt['neg_perf_per_area']:8.1f}"
               f"  energy={pt['energy_j'] * 1e3:7.3f} mJ"
-              f"  noise={pt['quant_noise']:.2e}")
+              f"  noise={pt['accuracy_noise']:.2e}")
 
     print("\nhypervolume vs evaluations (guided, own reference):")
     for evals, hv in guided.history[:: max(1, len(guided.history) // 8)]:

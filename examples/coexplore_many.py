@@ -11,7 +11,7 @@ synthesis) per hardware config.
 
   PYTHONPATH=src python examples/coexplore_many.py [--quick]
       [--workloads vgg16 resnet34 resnet50] [--seed 0] [--backend auto]
-      [--sqnr-floor-db 20]
+      [--floor-db 20]
 """
 
 from __future__ import annotations
@@ -22,6 +22,7 @@ import time
 import numpy as np
 
 from repro.core.dse import ExploreSpec, run
+from repro.explore.accuracy import AccuracySpec
 from repro.core.synthesis import (clear_synthesis_cache,
                                   synthesis_cache_stats)
 from repro.explore.pareto import hypervolume, reference_point
@@ -41,10 +42,13 @@ def main() -> None:
                     default=["vgg16", "resnet34", "resnet50"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto")
-    ap.add_argument("--sqnr-floor-db", type=float, default=None,
-                    help="per-workload accuracy floor (constraint)")
+    ap.add_argument("--floor-db", type=float, default=None,
+                    help="per-workload accuracy floor in dB (constraint, "
+                         "rides on the accuracy spec)")
     args = ap.parse_args()
 
+    accuracy = (None if args.floor_db is None
+                else AccuracySpec(floor_db=args.floor_db))
     preset = "many-quick" if args.quick else "many-default"
     print(f"workloads={'+'.join(args.workloads)}  preset={preset}  "
           f"seed={args.seed}")
@@ -54,13 +58,13 @@ def main() -> None:
     guided = run(ExploreSpec.many(args.workloads, precision="mixed",
                                   preset=preset, seed=args.seed,
                                   backend=args.backend,
-                                  sqnr_floor_db=args.sqnr_floor_db))
+                                  accuracy=accuracy))
     t_guided = time.perf_counter() - t0
     t0 = time.perf_counter()
     rand = run(ExploreSpec.many(args.workloads, precision="mixed",
                                 preset=preset, method="random",
                                 seed=args.seed, backend=args.backend,
-                                sqnr_floor_db=args.sqnr_floor_db))
+                                accuracy=accuracy))
     t_rand = time.perf_counter() - t0
 
     ref = reference_point(np.concatenate([guided.all_objectives,
@@ -90,7 +94,7 @@ def main() -> None:
               f" glb{cfg.glb_kb:<4d}"
               f"  worst perf/area={-pt['neg_worst_perf_per_area']:8.1f}"
               f"  suite energy={pt['total_energy_j'] * 1e3:8.3f} mJ"
-              f"  worst noise={pt['worst_quant_noise']:.2e}")
+              f"  worst noise={pt['worst_accuracy_noise']:.2e}")
         print(f"            {modes}")
 
     print("\narchive hypervolume vs evaluations (guided, own reference):")

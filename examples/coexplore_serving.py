@@ -51,7 +51,7 @@ def main() -> None:
     t0 = time.perf_counter()
     edp = run(ExploreSpec.mixed(
         args.workload, preset="quick", budget=budget, pop_size=pop,
-        objectives=("edp", "quant_noise"), seed=args.seed,
+        objectives=("edp", "accuracy_noise"), seed=args.seed,
         backend=args.backend))
     t_edp = time.perf_counter() - t0
     t0 = time.perf_counter()

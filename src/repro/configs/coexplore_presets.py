@@ -10,9 +10,17 @@ reproducible instead of ad-hoc kwargs.  ``quick`` is the CI smoke setting;
 The ``many-*`` presets target the multi-workload setting (one shared
 hardware config, per-workload precision assignments): their objective
 names come from :data:`repro.explore.objectives.MULTI_OBJECTIVES`
-(worst-case / energy-weighted-mean across the suite), and
-``sqnr_floor_db`` optionally turns per-workload accuracy floors into
-constraints.
+(worst-case / energy-weighted-mean across the suite).
+
+``accuracy`` selects the accuracy tier scoring the ``accuracy_noise``
+objectives — an :class:`repro.explore.accuracy.AccuracySpec` or a spec
+string (``"proxy"`` / ``"calibrated:<model>"`` / ``"measured:<model>"``);
+its ``floor_db`` turns accuracy floors into constraints (the successor of
+the deprecated ``sqnr_floor_db`` knob, which still folds in with a
+warning).  ``calibrated-quick`` is the committed tier-1 campaign: the
+same budget as ``quick`` but scored on a table calibrated from real
+``mamba2-130m`` tensors — its front *membership* differs from the proxy's
+(asserted in ``tests/test_accuracy.py``).
 
 The ``serving-*`` presets score every genome on a serving fleet instead
 of a single inference: ``traffic`` names a
@@ -26,12 +34,15 @@ attainment, throughput under load, energy per served token).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
+from repro.explore.accuracy import AccuracySpec
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       DEFAULT_OBJECTIVES,
                                       DEFAULT_SERVING_OBJECTIVES,
                                       MULTI_OBJECTIVES, OBJECTIVES,
-                                      SERVING_OBJECTIVES)
+                                      SERVING_OBJECTIVES,
+                                      resolve_objectives)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +56,8 @@ class CoExplorePreset:
     seed: int = 0
     chunk_size: int = 4096
     eta: int = 3                     # successive-halving reduction factor
-    sqnr_floor_db: float | tuple[float, ...] | None = None
+    sqnr_floor_db: float | tuple[float, ...] | None = None   # deprecated
+    accuracy: AccuracySpec | str | None = None
     weights: tuple[float, ...] | None = None   # None = energy-weighted
     traffic: str | None = None       # TRAFFIC_PRESETS name (serving mode)
     n_slots: int = 8                 # fleet slots (serving mode)
@@ -54,14 +66,26 @@ class CoExplorePreset:
     archive_epsilon: float | None = None
 
     def __post_init__(self):
-        unknown = set(self.objectives) - set(OBJECTIVES) \
-            - set(MULTI_OBJECTIVES) - set(SERVING_OBJECTIVES)
-        if unknown:
-            raise ValueError(
-                f"preset {self.name!r}: unknown objective(s) "
-                f"{sorted(unknown)} (choose from single-workload "
-                f"{OBJECTIVES}, multi-workload {MULTI_OBJECTIVES}, or "
-                f"serving {SERVING_OBJECTIVES})")
+        # canonicalize legacy objective names (DeprecationWarning lands
+        # on whoever constructed the preset, 4 frames up through the
+        # generated __init__)
+        object.__setattr__(self, "objectives", resolve_objectives(
+            self.objectives, stacklevel=4))
+        if isinstance(self.accuracy, str):
+            object.__setattr__(self, "accuracy",
+                               AccuracySpec.parse(self.accuracy))
+        if self.sqnr_floor_db is not None:
+            warnings.warn(
+                f"preset {self.name!r}: sqnr_floor_db= is deprecated; "
+                f"use accuracy=AccuracySpec(floor_db=...)",
+                DeprecationWarning, stacklevel=4)
+            if self.accuracy is not None:
+                raise ValueError(
+                    f"preset {self.name!r}: pass either accuracy= or the "
+                    f"deprecated sqnr_floor_db=, not both")
+            object.__setattr__(self, "accuracy", AccuracySpec(
+                floor_db=self.sqnr_floor_db))
+            object.__setattr__(self, "sqnr_floor_db", None)
         serving = set(self.objectives) & set(SERVING_OBJECTIVES)
         if serving and self.traffic is None:
             raise ValueError(
@@ -108,6 +132,10 @@ PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
     CoExplorePreset(name="random-baseline", method="random"),
     CoExplorePreset(name="halving", method="successive_halving",
                     budget=4096),
+    # tier-1 campaign: quick's budget, scored on a calibration table
+    # measured from real mamba2-130m tensors (npz-cached after first run)
+    CoExplorePreset(name="calibrated-quick", budget=384, pop_size=24,
+                    accuracy="calibrated:mamba2-130m"),
     # multi-workload campaigns (shared hardware, per-workload precision)
     CoExplorePreset(name="many-quick", budget=384, pop_size=24,
                     objectives=DEFAULT_MULTI_OBJECTIVES),
@@ -116,8 +144,8 @@ PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
     CoExplorePreset(name="many-thorough", budget=8192, pop_size=96,
                     objectives=("neg_worst_perf_per_area",
                                 "total_energy_j", "worst_edp",
-                                "worst_quant_noise"),
-                    sqnr_floor_db=20.0),
+                                "worst_accuracy_noise"),
+                    accuracy=AccuracySpec(floor_db=20.0)),
     # serving-fleet campaigns (traffic-aware objectives)
     CoExplorePreset(name="serving-quick", budget=384, pop_size=24,
                     objectives=DEFAULT_SERVING_OBJECTIVES,
@@ -128,7 +156,7 @@ PRESETS: dict[str, CoExplorePreset] = {p.name: p for p in (
     CoExplorePreset(name="serving-thorough", budget=8192, pop_size=96,
                     objectives=("p99_latency_s", "neg_slo_attainment",
                                 "neg_throughput_tps",
-                                "energy_per_token_j", "quant_noise"),
+                                "energy_per_token_j", "accuracy_noise"),
                     traffic="bursty"),
 )}
 

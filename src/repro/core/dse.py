@@ -276,6 +276,7 @@ def _coexplore(workload: Workload | str,
                space_overrides: dict | None = None,
                traffic=None,
                n_slots: int | None = None,
+               accuracy=None,
                chunk_size: int | None = None,
                use_pallas: bool | None = None,
                checkpoint_dir: str | None = None,
@@ -291,6 +292,14 @@ def _coexplore(workload: Workload | str,
     :class:`repro.explore.search.SearchResult` whose front genomes decode
     to (AcceleratorConfig, per-layer mode) pairs.
 
+    ``accuracy`` (default: the preset's) selects the accuracy tier scoring
+    the ``accuracy_noise`` objective — anything
+    :func:`repro.explore.accuracy.resolve_accuracy` accepts.  A tier-2
+    (``"measured:<model>"``) spec additionally runs the final Pareto
+    elites through real quantized forward passes
+    (:func:`repro.explore.accuracy.validate_elites`) and attaches the
+    re-scored front as ``result.validation``.
+
     A ``traffic`` trace (name, :class:`repro.serving.traffic.TrafficPreset`
     or :class:`~repro.serving.traffic.TrafficTrace`) switches the search
     to serving-fleet objectives: each genome's per-inference latency and
@@ -304,12 +313,15 @@ def _coexplore(workload: Workload | str,
     >>> res.front_points()[0]["modes"]            # doctest: +SKIP
     """
     from repro.configs.coexplore_presets import get_preset
+    from repro.explore.accuracy import resolve_accuracy, validate_elites
     from repro.explore.objectives import (DEFAULT_SERVING_OBJECTIVES,
                                           SERVING_OBJECTIVES)
     from repro.explore.search import SEARCH_METHODS
     from repro.explore.space import space_for_workload
 
     p = get_preset(preset)
+    acc = accuracy if accuracy is not None else p.accuracy
+    acc_model = None if acc is None else resolve_accuracy(acc)
     wl = _resolve(workload)
     space = space_for_workload(wl, **(space_overrides or {}))
     method = p.method if method is None else method
@@ -336,7 +348,8 @@ def _coexplore(workload: Workload | str,
         chunk_size=p.chunk_size if chunk_size is None else chunk_size,
         ref_point=ref_point, mesh=mesh, use_pallas=use_pallas,
         traffic=traffic_resolved,
-        n_slots=p.n_slots if n_slots is None else n_slots)
+        n_slots=p.n_slots if n_slots is None else n_slots,
+        accuracy=acc_model)
     if method == "nsga2":
         kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
         if p.archive_epsilon is not None:
@@ -345,7 +358,10 @@ def _coexplore(workload: Workload | str,
         kwargs.update(eta=p.eta)
     _apply_checkpointing(kwargs, method, checkpoint_dir, checkpoint_every)
     kwargs.update(method_kwargs)
-    return fn(space, wl, p.budget if budget is None else budget, **kwargs)
+    res = fn(space, wl, p.budget if budget is None else budget, **kwargs)
+    if acc_model is not None and acc_model.tier == 2:
+        res.validation = validate_elites(res, acc_model)
+    return res
 
 
 def _apply_checkpointing(kwargs: dict, method: str,
@@ -377,6 +393,7 @@ def _coexplore_many(workloads: Sequence[Workload | str],
                     ref_point=None,
                     weights=None,
                     sqnr_floor_db=None,
+                    accuracy=None,
                     mesh=None,
                     space_overrides: dict | None = None,
                     chunk_size: int | None = None,
@@ -398,8 +415,9 @@ def _coexplore_many(workloads: Sequence[Workload | str],
     suite: ``worst_*`` objectives are the max over workloads (Pareto
     claims then hold for *every* workload), ``mean_*`` are
     energy-weighted means unless ``weights`` fixes an importance vector,
-    and ``sqnr_floor_db`` turns per-workload accuracy floors into
-    constraints (see
+    and an ``accuracy`` spec with ``floor_db`` (scalar or per-workload;
+    successor of the deprecated ``sqnr_floor_db``) turns accuracy floors
+    into constraints (see
     :func:`repro.explore.objectives.multi_objective_matrix`).
     ``mesh`` (e.g. :func:`repro.launch.mesh.make_sweep_mesh`) shards
     every evaluation chunk's genome axis across devices via
@@ -413,10 +431,24 @@ def _coexplore_many(workloads: Sequence[Workload | str],
     ...                      preset="many-quick", seed=7)  # doctest: +SKIP
     """
     from repro.configs.coexplore_presets import get_preset
+    from repro.explore.accuracy import resolve_accuracy
     from repro.explore.search import SEARCH_METHODS
     from repro.explore.space import space_for_workloads
 
     p = get_preset(preset)
+    if sqnr_floor_db is not None and accuracy is None:
+        # deprecated floor override: drop the preset's accuracy (which
+        # in the committed presets is only a floor) and let the engine
+        # fold + warn, preserving the historical override semantics
+        acc = None
+    else:
+        acc = accuracy if accuracy is not None else p.accuracy
+    acc_model = None if acc is None else resolve_accuracy(acc)
+    if acc_model is not None and acc_model.tier == 2:
+        raise ValueError(
+            "tier-2 (measured) accuracy is single-workload only: a "
+            "multi-workload genome has no single precision plan to run "
+            "the calibration model under; use 'calibrated:<model>'")
     wls = tuple(_resolve(w) for w in workloads)
     if not wls:
         raise ValueError("coexplore_many needs at least one workload")
@@ -434,8 +466,7 @@ def _coexplore_many(workloads: Sequence[Workload | str],
         chunk_size=p.chunk_size if chunk_size is None else chunk_size,
         ref_point=ref_point, mesh=mesh, use_pallas=use_pallas,
         weights=p.weights if weights is None else weights,
-        sqnr_floor_db=(p.sqnr_floor_db if sqnr_floor_db is None
-                       else sqnr_floor_db))
+        sqnr_floor_db=sqnr_floor_db, accuracy=acc_model)
     if method == "nsga2":
         kwargs.update(pop_size=p.pop_size, mutation_rate=p.mutation_rate)
         if p.archive_epsilon is not None:
@@ -547,7 +578,12 @@ class ExploreSpec:
     n_slots: int | None = None
     ref_point: tuple | None = None
     weights: tuple | None = None
-    sqnr_floor_db: object = None
+    sqnr_floor_db: object = None        # deprecated: accuracy floor_db
+    # accuracy tier scoring the accuracy_noise objectives: None (the
+    # preset's, else tier-0 proxy), a spec string ("proxy" /
+    # "calibrated:<model>" / "measured:<model>"), an AccuracySpec, or a
+    # live AccuracyModel — see repro.explore.accuracy
+    accuracy: object = None
     space_overrides: dict | None = None
     search_kwargs: dict | None = None
     # shared knobs
@@ -637,6 +673,11 @@ class ExploreSpec:
                 "telemetry must be None, a bool, or a dict of "
                 "repro.obs.configure() kwargs, got "
                 f"{type(self.telemetry).__name__}")
+        if isinstance(self.accuracy, str):
+            # validate + normalize spec strings early, before any work
+            from repro.explore.accuracy import AccuracySpec
+            object.__setattr__(self, "accuracy",
+                               AccuracySpec.parse(self.accuracy))
         if self.precision == "uniform":
             bad = [n for n, v in (
                 ("preset", self.preset), ("method", self.method),
@@ -644,6 +685,7 @@ class ExploreSpec:
                 ("traffic", self.traffic), ("n_slots", self.n_slots),
                 ("ref_point", self.ref_point), ("weights", self.weights),
                 ("sqnr_floor_db", self.sqnr_floor_db),
+                ("accuracy", self.accuracy),
                 ("space_overrides", self.space_overrides),
                 ("search_kwargs", self.search_kwargs)) if v is not None]
             if bad:
@@ -710,6 +752,7 @@ class ExploreSpec:
     def mixed(cls, workload, *, preset: str | None = None,
               method: str | None = None, budget: int | None = None,
               objectives=None, traffic=None, n_slots: int | None = None,
+              accuracy=None,
               seed: int | None = None, ref_point=None,
               space_overrides: dict | None = None,
               chunk_size: int | None = None, backend: str = "auto",
@@ -720,13 +763,16 @@ class ExploreSpec:
         """Guided mixed-precision co-exploration of one workload; a
         ``traffic`` trace switches the objectives to the serving-fleet
         set (tail latency / SLO attainment / throughput / energy per
-        served token).  A ``checkpoint_dir`` snapshots the search each
-        ``checkpoint_every`` generations and resumes bit-identically
-        (nsga2 only)."""
+        served token).  ``accuracy`` picks the accuracy tier —
+        ``"measured:<model>"`` additionally re-scores the final Pareto
+        elites with real quantized forward passes
+        (``result.validation``).  A ``checkpoint_dir`` snapshots the
+        search each ``checkpoint_every`` generations and resumes
+        bit-identically (nsga2 only)."""
         return cls(workloads=(workload,), precision="mixed",
                    preset=preset, method=method, budget=budget,
                    objectives=objectives, traffic=traffic, n_slots=n_slots,
-                   seed=seed, ref_point=ref_point,
+                   accuracy=accuracy, seed=seed, ref_point=ref_point,
                    space_overrides=space_overrides, chunk_size=chunk_size,
                    backend=backend, mesh=mesh, use_pallas=use_pallas,
                    checkpoint_dir=checkpoint_dir,
@@ -738,7 +784,8 @@ class ExploreSpec:
              configs=None, outputs: str = "points",
              preset: str | None = None, method: str | None = None,
              budget: int | None = None, objectives=None,
-             weights=None, sqnr_floor_db=None, seed: int | None = None,
+             weights=None, sqnr_floor_db=None, accuracy=None,
+             seed: int | None = None,
              ref_point=None, space_overrides: dict | None = None,
              chunk_size: int | None = None, backend: str = "auto",
              mesh=None, use_cache: bool = True,
@@ -758,7 +805,8 @@ class ExploreSpec:
                    configs=None if configs is None else tuple(configs),
                    outputs=outputs, preset=preset, method=method,
                    budget=budget, objectives=objectives, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, seed=seed,
+                   sqnr_floor_db=sqnr_floor_db, accuracy=accuracy,
+                   seed=seed,
                    ref_point=ref_point, space_overrides=space_overrides,
                    chunk_size=chunk_size, backend=backend, mesh=mesh,
                    use_cache=use_cache, use_pallas=use_pallas,
@@ -801,6 +849,7 @@ def _run_dispatch(spec: ExploreSpec):
                 ref_point=spec.ref_point, mesh=spec.mesh,
                 space_overrides=spec.space_overrides,
                 traffic=spec.traffic, n_slots=spec.n_slots,
+                accuracy=spec.accuracy,
                 chunk_size=spec.chunk_size, use_pallas=spec.use_pallas,
                 checkpoint_dir=spec.checkpoint_dir,
                 checkpoint_every=spec.checkpoint_every, **extra)
@@ -810,7 +859,8 @@ def _run_dispatch(spec: ExploreSpec):
             method=spec.method, budget=spec.budget, seed=spec.seed,
             backend=spec.backend, objectives=spec.objectives,
             ref_point=spec.ref_point, weights=spec.weights,
-            sqnr_floor_db=spec.sqnr_floor_db, mesh=spec.mesh,
+            sqnr_floor_db=spec.sqnr_floor_db,
+            accuracy=spec.accuracy, mesh=spec.mesh,
             space_overrides=spec.space_overrides,
             chunk_size=spec.chunk_size, use_pallas=spec.use_pallas,
             checkpoint_dir=spec.checkpoint_dir,

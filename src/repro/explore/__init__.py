@@ -3,15 +3,25 @@
 Searches the joint (accelerator config x per-layer execution precision)
 space under k-objective Pareto optimality, on top of the fused sweep
 engine.  See :mod:`repro.explore.space` for the genome encoding,
-:mod:`repro.explore.search` for the engines, and
-:func:`repro.core.dse.coexplore` for the one-call entry point.
+:mod:`repro.explore.search` for the engines,
+:mod:`repro.explore.accuracy` for the tiered accuracy models, and
+:func:`repro.core.dse.run` for the one-call entry point.
 """
 
+from repro.explore.accuracy import (AccuracyModel, AccuracySpec,
+                                    CalibratedAccuracy, EliteValidation,
+                                    ProxyAccuracy, resolve_accuracy,
+                                    validate_elites)
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
-                                      DEFAULT_OBJECTIVES, MULTI_OBJECTIVES,
-                                      OBJECTIVES, mode_noise_table,
-                                      mode_sqnr_db, multi_objective_matrix,
+                                      DEFAULT_OBJECTIVES,
+                                      LEGACY_OBJECTIVE_ALIASES,
+                                      MULTI_OBJECTIVES, OBJECTIVE_REGISTRY,
+                                      OBJECTIVES, ObjectiveSpec,
+                                      accuracy_floor_violation,
+                                      mode_noise_table, mode_sqnr_db,
+                                      multi_objective_matrix,
                                       objective_matrix, quant_noise,
+                                      reset_sqnr_table, resolve_objectives,
                                       sqnr_floor_violation)
 from repro.explore.pareto import (crowding_distance, hypervolume,
                                   nondominated_sort, pareto_mask_k,
@@ -27,7 +37,11 @@ __all__ = [
     "OBJECTIVES", "DEFAULT_OBJECTIVES", "objective_matrix", "quant_noise",
     "MULTI_OBJECTIVES", "DEFAULT_MULTI_OBJECTIVES",
     "multi_objective_matrix", "sqnr_floor_violation",
+    "accuracy_floor_violation", "ObjectiveSpec", "OBJECTIVE_REGISTRY",
+    "LEGACY_OBJECTIVE_ALIASES", "resolve_objectives", "reset_sqnr_table",
     "mode_noise_table", "mode_sqnr_db",
+    "AccuracyModel", "AccuracySpec", "ProxyAccuracy", "CalibratedAccuracy",
+    "resolve_accuracy", "validate_elites", "EliteValidation",
     "pareto_mask_k", "nondominated_sort", "crowding_distance",
     "hypervolume", "reference_point",
     "Evaluator", "SearchResult", "SEARCH_METHODS",

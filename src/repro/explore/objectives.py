@@ -1,16 +1,23 @@
 """Objective functions for co-exploration (all minimized).
 
 Hardware objectives come straight from the fused sweep's aggregate columns
-(perf/area negated, energy, EDP, area).  The *accuracy proxy* is a
-quantization-noise score derived from the per-PE-type SQNR of the actual
-quantizers in :mod:`repro.quant.quantizers`: each layer contributes its
-MAC share times the relative noise power (1/SQNR) of its assigned
-execution mode, so an INT4-everywhere genome pays a visible accuracy cost
-instead of trivially winning every hardware objective.
+(perf/area negated, energy, EDP, area).  The *accuracy* objective
+(``accuracy_noise``) is a quantization-noise score: by default the tier-0
+synthetic proxy — each layer contributes its MAC share times the relative
+noise power (1/SQNR) of its assigned execution mode, with per-PE-type
+SQNR measured on the actual quantizers in :mod:`repro.quant.quantizers` —
+and, when an :mod:`repro.explore.accuracy` model is threaded in
+(``accuracy=``), the tier-1 table calibrated on real model-zoo tensors.
 
-The SQNR table is measured once per process on a fixed synthetic tensor
-(seeded, CPU, float32) — deterministic, and identical regardless of which
-sweep backend (numpy/jax) evaluates the hardware objectives.  When jax is
+Every known objective lives in :data:`OBJECTIVE_REGISTRY`; the historical
+``quant_noise`` / ``worst_quant_noise`` / ``mean_quant_noise`` objective
+*names* remain accepted everywhere through :func:`resolve_objectives`
+with a ``DeprecationWarning``.
+
+The tier-0 SQNR table is measured once per (jax backend, x64 flag)
+(seeded, float32) — deterministic, and keyed so flipping the backend or
+enabling x64 mid-process cannot silently reuse a stale table
+(:func:`reset_sqnr_table` clears the cache for tests).  When jax is
 unusable the table falls back to the standard analytic SQNR model
 (~6.02 dB/bit for integer, LightNN-published figures for pow2) so the
 search still runs.
@@ -18,36 +25,129 @@ search still runs.
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 import numpy as np
 
 from repro.core.pe import PEType
 
-OBJECTIVES = ("neg_perf_per_area", "energy_j", "edp", "area_mm2",
-              "quant_noise")
-DEFAULT_OBJECTIVES = ("neg_perf_per_area", "energy_j", "quant_noise")
 
-# serving-fleet objectives (single-workload only): the candidate's fused
-# sweep aggregates feed the trace-driven fleet simulator
-# (repro.serving.fleet_sim) and the search optimizes what a serving
-# deployment actually pays for — tail latency under load, SLO hit rate,
-# sustained token throughput, energy per *served* token (occupancy-
-# sensitive: idle slots still burn the full batch dispatch).  All
-# minimized, so attainment/throughput are negated.
-SERVING_OBJECTIVES = ("p50_latency_s", "p99_latency_s",
-                      "neg_slo_attainment", "neg_throughput_tps",
-                      "energy_per_token_j")
+@dataclasses.dataclass(frozen=True)
+class ObjectiveSpec:
+    """One registered objective: canonical name, which evaluation scope
+    provides it, and a one-line description for reports."""
+
+    name: str
+    scope: str          # "single" | "serving" | "multi"
+    description: str
+
+    def __post_init__(self):
+        if self.scope not in ("single", "serving", "multi"):
+            raise ValueError(f"bad scope {self.scope!r}")
+
+
+_REGISTRY_SPECS = (
+    ObjectiveSpec("neg_perf_per_area", "single",
+                  "negated TOPS/mm^2 of the synthesized design"),
+    ObjectiveSpec("energy_j", "single", "energy per inference"),
+    ObjectiveSpec("edp", "single", "energy-delay product"),
+    ObjectiveSpec("area_mm2", "single", "die area"),
+    ObjectiveSpec("accuracy_noise", "single",
+                  "MAC-weighted relative quantization-noise power "
+                  "(tier-0 proxy or tier-1 calibrated)"),
+    # serving-fleet objectives (single-workload only): the candidate's
+    # fused sweep aggregates feed the trace-driven fleet simulator
+    # (repro.serving.fleet_sim) and the search optimizes what a serving
+    # deployment actually pays for — tail latency under load, SLO hit
+    # rate, sustained token throughput, energy per *served* token.  All
+    # minimized, so attainment/throughput are negated.
+    ObjectiveSpec("p50_latency_s", "serving", "median request latency"),
+    ObjectiveSpec("p99_latency_s", "serving", "tail request latency"),
+    ObjectiveSpec("neg_slo_attainment", "serving",
+                  "negated fraction of requests inside the SLO"),
+    ObjectiveSpec("neg_throughput_tps", "serving",
+                  "negated sustained tokens/s"),
+    ObjectiveSpec("energy_per_token_j", "serving",
+                  "energy per served token (occupancy-sensitive)"),
+    # multi-workload objectives (shared hardware, per-workload
+    # assignments): worst_* is the max over the workload suite, mean_*
+    # the weighted mean (default weights: each workload's share of the
+    # genome's total energy)
+    ObjectiveSpec("neg_worst_perf_per_area", "multi",
+                  "negated worst-case perf/area over the suite"),
+    ObjectiveSpec("worst_latency_s", "multi", "worst-case latency"),
+    ObjectiveSpec("mean_latency_s", "multi", "weighted-mean latency"),
+    ObjectiveSpec("worst_edp", "multi", "worst-case EDP"),
+    ObjectiveSpec("mean_edp", "multi", "weighted-mean EDP"),
+    ObjectiveSpec("total_energy_j", "multi", "suite energy"),
+    ObjectiveSpec("worst_accuracy_noise", "multi",
+                  "worst-case accuracy noise over the suite"),
+    ObjectiveSpec("mean_accuracy_noise", "multi",
+                  "weighted-mean accuracy noise"),
+)
+
+OBJECTIVE_REGISTRY: dict[str, ObjectiveSpec] = {
+    s.name: s for s in _REGISTRY_SPECS}
+
+# historical objective names -> canonical (all still accepted, warning)
+LEGACY_OBJECTIVE_ALIASES = {
+    "quant_noise": "accuracy_noise",
+    "worst_quant_noise": "worst_accuracy_noise",
+    "mean_quant_noise": "mean_accuracy_noise",
+}
+
+
+def _scope(scope: str) -> tuple[str, ...]:
+    return tuple(s.name for s in _REGISTRY_SPECS if s.scope == scope)
+
+
+OBJECTIVES = _scope("single")
+SERVING_OBJECTIVES = _scope("serving")
+MULTI_OBJECTIVES = _scope("multi")
+DEFAULT_OBJECTIVES = ("neg_perf_per_area", "energy_j", "accuracy_noise")
 DEFAULT_SERVING_OBJECTIVES = ("p99_latency_s", "energy_per_token_j",
-                              "quant_noise")
-
-# multi-workload objectives (shared hardware, per-workload assignments):
-# worst_* is the max over the workload suite, mean_* the weighted mean
-# (default weights: each workload's share of the genome's total energy)
-MULTI_OBJECTIVES = ("neg_worst_perf_per_area", "worst_latency_s",
-                    "mean_latency_s", "worst_edp", "mean_edp",
-                    "total_energy_j", "worst_quant_noise",
-                    "mean_quant_noise")
+                              "accuracy_noise")
 DEFAULT_MULTI_OBJECTIVES = ("neg_worst_perf_per_area", "total_energy_j",
-                            "worst_quant_noise")
+                            "worst_accuracy_noise")
+
+
+def resolve_objectives(objectives, *, stacklevel: int = 2,
+                       scope: str | None = None) -> tuple[str, ...]:
+    """Canonicalize an objective-name sequence against the registry.
+
+    Legacy aliases (:data:`LEGACY_OBJECTIVE_ALIASES`) resolve to their
+    canonical names with a ``DeprecationWarning`` attributed
+    ``stacklevel`` frames up; unknown names raise.  ``scope`` restricts
+    the registry ("single" additionally admits serving objectives, which
+    are single-workload by construction).
+    """
+    out = []
+    for name in objectives:
+        if name in LEGACY_OBJECTIVE_ALIASES:
+            new = LEGACY_OBJECTIVE_ALIASES[name]
+            warnings.warn(
+                f"objective name {name!r} is deprecated; use {new!r}",
+                DeprecationWarning, stacklevel=stacklevel)
+            name = new
+        spec = OBJECTIVE_REGISTRY.get(name)
+        if spec is None:
+            raise ValueError(
+                f"unknown objective {name!r} (choose from "
+                f"{tuple(OBJECTIVE_REGISTRY)})")
+        if scope == "single" and spec.scope == "multi":
+            raise ValueError(
+                f"objective {name!r} is multi-workload only")
+        if scope == "multi" and spec.scope != "multi":
+            if spec.scope == "serving":
+                raise ValueError(
+                    f"serving objective {name!r} is single-workload only "
+                    f"(one traffic trace drives one fleet)")
+            raise ValueError(
+                f"objective {name!r} is not a multi-workload objective "
+                f"(choose from {MULTI_OBJECTIVES})")
+        out.append(name)
+    return tuple(out)
 
 # static-penalty scale for SQNR-floor constraint violations: any genome
 # breaking an accuracy floor lands far outside the feasible objective
@@ -69,7 +169,21 @@ _ANALYTIC_NOISE = {
     + 10.0 ** (-(6.02 * 8 + 1.76) / 10.0),
 }
 
-_NOISE_TABLE: np.ndarray | None = None
+# measured tier-0 tables, keyed on (jax backend, x64 flag): a process
+# that flips jax.config.jax_enable_x64 or lands on a different backend
+# re-measures instead of silently reusing a table from another numerics
+# regime.  ("analytic", False) keys the jax-unusable fallback.
+_NOISE_TABLES: dict[tuple[str, bool], np.ndarray] = {}
+
+
+def _noise_table_key() -> tuple[str, bool]:
+    import jax
+    return (jax.default_backend(), bool(jax.config.jax_enable_x64))
+
+
+def reset_sqnr_table() -> None:
+    """Drop every memoized tier-0 SQNR table (tests / backend flips)."""
+    _NOISE_TABLES.clear()
 
 
 def _measure_noise_table() -> np.ndarray:
@@ -77,14 +191,13 @@ def _measure_noise_table() -> np.ndarray:
     the repo's own quantizers over a fixed synthetic Gaussian tensor.
 
     noise(mode) = E[(w - qdq(w))^2]/E[w^2] + E[(x - qdq_act(x))^2]/E[x^2]
-    with the weight/activation quantizer pairs of
-    :mod:`repro.quant.policy`'s mode table.
+    with the weight/activation quantizer pairs every tier shares
+    (:data:`repro.quant.calibrate.PE_QUANT_SPECS`).
     """
     import jax.numpy as jnp
 
-    from repro.quant.quantizers import (quantize_dequantize_int,
-                                        quantize_dequantize_pow2,
-                                        quantize_dequantize_pow2_2term)
+    from repro.quant.calibrate import PE_QUANT_SPECS
+    from repro.quant.quantizers import quantize_dequantize
 
     rng = np.random.default_rng(20220516)          # paper's arXiv date
     w = jnp.asarray(rng.normal(size=8192).astype(np.float32))
@@ -96,22 +209,12 @@ def _measure_noise_table() -> np.ndarray:
         return float(np.mean((v64 - q64) ** 2) / np.mean(v64 ** 2))
 
     table = np.zeros(len(_TYPES), dtype=np.float64)
-    per = {
-        # weight quantizer, activation quantizer (None = native precision)
-        PEType.FP32: (None, None),
-        PEType.INT16: (lambda v: quantize_dequantize_int(v, 16),
-                       lambda v: quantize_dequantize_int(v, 16)),
-        PEType.LIGHTPE1: (quantize_dequantize_pow2,
-                          lambda v: quantize_dequantize_int(v, 8)),
-        PEType.LIGHTPE2: (quantize_dequantize_pow2_2term,
-                          lambda v: quantize_dequantize_int(v, 8)),
-    }
-    for t, (wq, aq) in per.items():
+    for t, (wspec, aspec) in PE_QUANT_SPECS.items():
         n = 0.0
-        if wq is not None:
-            n += rel_noise(w, wq(w))
-        if aq is not None:
-            n += rel_noise(x, aq(x))
+        if wspec is not None:
+            n += rel_noise(w, quantize_dequantize(w, wspec))
+        if aspec is not None:
+            n += rel_noise(x, quantize_dequantize(x, aspec))
         table[_TYPES.index(t)] = n
     return table
 
@@ -119,21 +222,23 @@ def _measure_noise_table() -> np.ndarray:
 def mode_noise_table(refresh: bool = False) -> np.ndarray:
     """``(T,)`` relative noise power per PE type (canonical order), from
     the measured quantizers when jax is usable, else the analytic model."""
-    global _NOISE_TABLE
-    if _NOISE_TABLE is None or refresh:
-        try:
-            _NOISE_TABLE = _measure_noise_table()
-        except ImportError as exc:
-            # only the jax-unusable case falls back (loudly); a bug inside
-            # the measurement must raise, not silently shift the objective
-            import warnings
+    try:
+        key = _noise_table_key()
+        if key not in _NOISE_TABLES or refresh:
+            _NOISE_TABLES[key] = _measure_noise_table()
+        return _NOISE_TABLES[key]
+    except ImportError as exc:
+        # only the jax-unusable case falls back (loudly); a bug inside
+        # the measurement must raise, not silently shift the objective
+        key = ("analytic", False)
+        if key not in _NOISE_TABLES or refresh:
             warnings.warn(
                 f"jax unusable ({exc}); quantization-noise objective uses "
                 f"the analytic SQNR model instead of measured quantizers",
                 RuntimeWarning, stacklevel=2)
-            _NOISE_TABLE = np.array([_ANALYTIC_NOISE[t] for t in _TYPES],
-                                    dtype=np.float64)
-    return _NOISE_TABLE
+            _NOISE_TABLES[key] = np.array(
+                [_ANALYTIC_NOISE[t] for t in _TYPES], dtype=np.float64)
+        return _NOISE_TABLES[key]
 
 
 def mode_sqnr_db() -> dict[str, float]:
@@ -188,7 +293,8 @@ def objective_matrix(agg: dict[str, np.ndarray],
                      layer_macs: np.ndarray,
                      objectives=DEFAULT_OBJECTIVES, *,
                      traffic=None, n_slots: int = 8,
-                     sim_backend: str = "numpy") -> np.ndarray:
+                     sim_backend: str = "numpy",
+                     accuracy=None) -> np.ndarray:
     """Assemble the ``(N, K)`` minimization matrix from sweep aggregates.
 
     ``agg`` is the fused mixed-precision sweep output (the aggregate
@@ -198,7 +304,16 @@ def objective_matrix(agg: dict[str, np.ndarray],
     :func:`repro.serving.traffic.resolve_traffic`); an overloaded
     candidate's infinite tail latency / energy-per-token is clamped to
     :data:`FLOOR_PENALTY` so it stays comparable yet always dominated.
+
+    ``accuracy`` is an :class:`repro.explore.accuracy.AccuracyModel`
+    scoring the ``accuracy_noise`` column (``None`` = the tier-0 proxy,
+    identical to the historical behaviour); a model carrying a
+    ``floor_db`` turns that floor into a static penalty on every
+    objective (see :func:`accuracy_floor_violation`).
     """
+    objectives = resolve_objectives(objectives, stacklevel=3,
+                                    scope="single")
+    score = quant_noise if accuracy is None else accuracy.score
     need_serving = [n for n in objectives if n in SERVING_OBJECTIVES]
     fleet = None
     if need_serving:
@@ -223,8 +338,8 @@ def objective_matrix(agg: dict[str, np.ndarray],
                         * np.asarray(agg["latency_s"], dtype=np.float64))
         elif name == "area_mm2":
             cols.append(np.asarray(agg["area_mm2"], dtype=np.float64))
-        elif name == "quant_noise":
-            cols.append(quant_noise(assign, layer_macs))
+        elif name == "accuracy_noise":
+            cols.append(score(assign, layer_macs))
         elif name in ("p50_latency_s", "p99_latency_s"):
             cols.append(clamp(fleet[name]))
         elif name == "neg_slo_attainment":
@@ -235,37 +350,51 @@ def objective_matrix(agg: dict[str, np.ndarray],
                                     dtype=np.float64))
         elif name == "energy_per_token_j":
             cols.append(clamp(fleet["energy_per_token_j"]))
-        else:
-            raise ValueError(
-                f"unknown objective {name!r} (choose from "
-                f"{OBJECTIVES + SERVING_OBJECTIVES})")
-    return np.stack(cols, axis=-1)
+        else:                     # registry-validated: unreachable
+            raise AssertionError(name)
+    F = np.stack(cols, axis=-1)
+    floor_db = getattr(accuracy, "floor_db", None)
+    if floor_db is not None:
+        v = accuracy_floor_violation([assign], [layer_macs], floor_db,
+                                     accuracy=accuracy)
+        F = F + (FLOOR_PENALTY * v)[:, None]
+    return F
 
 
 # ---------------------------------------------------------------------------
 # Multi-workload objectives (the QUIDAM co-exploration setting)
 # ---------------------------------------------------------------------------
 
-def sqnr_floor_violation(assigns, layer_macs_list,
-                         floor_db) -> np.ndarray:
+def accuracy_floor_violation(assigns, layer_macs_list, floor_db,
+                             accuracy=None) -> np.ndarray:
     """Per-genome violation of per-workload SQNR accuracy floors.
 
     ``floor_db`` is the minimum acceptable MAC-weighted SQNR in dB, a
     scalar (shared floor) or one value per workload.  A workload's
-    quantization-noise score must stay below the ceiling
-    ``10**(-floor_db/10)``; the violation is the summed relative excess
-    ``max(0, noise_w - ceiling_w) / ceiling_w`` over workloads — zero for
-    feasible genomes.  Pure function of the assignment, so it is
-    backend-independent and memo-safe.
+    accuracy-noise score (from ``accuracy``, default the tier-0 proxy)
+    must stay below the ceiling ``10**(-floor_db/10)``; the violation is
+    the summed relative excess ``max(0, noise_w - ceiling_w)/ceiling_w``
+    over workloads — zero for feasible genomes.  Pure function of the
+    assignment, so it is backend-independent and memo-safe.
     """
+    score = quant_noise if accuracy is None else accuracy.score
     floors = np.broadcast_to(np.asarray(floor_db, dtype=np.float64),
                              (len(assigns),))
     ceil = 10.0 ** (-floors / 10.0)
     v = np.zeros(len(np.asarray(assigns[0])), dtype=np.float64)
     for a, macs, c in zip(assigns, layer_macs_list, ceil):
-        noise = quant_noise(a, macs)
+        noise = score(a, macs)
         v += np.maximum(0.0, noise - c) / c
     return v
+
+
+def sqnr_floor_violation(assigns, layer_macs_list,
+                         floor_db) -> np.ndarray:
+    """Deprecated name for :func:`accuracy_floor_violation`."""
+    warnings.warn(
+        "sqnr_floor_violation is deprecated; use accuracy_floor_violation",
+        DeprecationWarning, stacklevel=2)
+    return accuracy_floor_violation(assigns, layer_macs_list, floor_db)
 
 
 def multi_objective_matrix(agg: dict[str, np.ndarray],
@@ -273,7 +402,8 @@ def multi_objective_matrix(agg: dict[str, np.ndarray],
                            layer_macs_list,
                            objectives=DEFAULT_MULTI_OBJECTIVES,
                            weights=None,
-                           sqnr_floor_db=None) -> np.ndarray:
+                           sqnr_floor_db=None,
+                           accuracy=None) -> np.ndarray:
     """Assemble the ``(N, K)`` minimization matrix for a workload suite.
 
     ``agg`` holds the ``(W, N)`` aggregate columns from
@@ -294,7 +424,22 @@ def multi_objective_matrix(agg: dict[str, np.ndarray],
     floor violation times :data:`FLOOR_PENALTY` is added to **every**
     objective, so infeasible genomes are dominated by all feasible ones
     while remaining comparable among themselves (less violation wins).
+
+    ``accuracy`` is an :class:`repro.explore.accuracy.AccuracyModel`
+    scoring the ``*_accuracy_noise`` columns (``None`` = tier-0 proxy).
+    A floor may come from either ``sqnr_floor_db`` or the model's own
+    ``floor_db`` — specifying both is an error.
     """
+    objectives = resolve_objectives(objectives, stacklevel=3,
+                                    scope="multi")
+    score = quant_noise if accuracy is None else accuracy.score
+    model_floor = getattr(accuracy, "floor_db", None)
+    if sqnr_floor_db is not None and model_floor is not None:
+        raise ValueError(
+            f"both sqnr_floor_db={sqnr_floor_db} and the accuracy "
+            f"model's floor_db={model_floor} set an accuracy floor; "
+            f"pick one")
+    floor_db = model_floor if sqnr_floor_db is None else sqnr_floor_db
     lat = np.asarray(agg["latency_s"], dtype=np.float64)
     energy = np.asarray(agg["energy_j"], dtype=np.float64)
     if lat.ndim != 2:
@@ -322,7 +467,7 @@ def multi_objective_matrix(agg: dict[str, np.ndarray],
     def _noise():
         nonlocal noise
         if noise is None:
-            noise = np.stack([quant_noise(a, m) for a, m in
+            noise = np.stack([score(a, m) for a, m in
                               zip(assigns, layer_macs_list)])  # (W, N)
         return noise
 
@@ -341,16 +486,15 @@ def multi_objective_matrix(agg: dict[str, np.ndarray],
             cols.append((wts * edp).sum(axis=0))
         elif name == "total_energy_j":
             cols.append(energy.sum(axis=0))
-        elif name == "worst_quant_noise":
+        elif name == "worst_accuracy_noise":
             cols.append(_noise().max(axis=0))
-        elif name == "mean_quant_noise":
+        elif name == "mean_accuracy_noise":
             cols.append((wts * _noise()).sum(axis=0))
-        else:
-            raise ValueError(
-                f"unknown multi-workload objective {name!r} "
-                f"(choose from {MULTI_OBJECTIVES})")
+        else:                     # registry-validated: unreachable
+            raise AssertionError(name)
     F = np.stack(cols, axis=-1)
-    if sqnr_floor_db is not None:
-        v = sqnr_floor_violation(assigns, layer_macs_list, sqnr_floor_db)
+    if floor_db is not None:
+        v = accuracy_floor_violation(assigns, layer_macs_list, floor_db,
+                                     accuracy=accuracy)
         F = F + (FLOOR_PENALTY * v)[:, None]
     return F

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -33,12 +34,14 @@ from repro.core.dse_batch import (_mesh_shards, _sweep_mixed,
                                   _sweep_mixed_many, resolve_backend,
                                   resolve_use_pallas)
 from repro.core.workloads import Workload, get_workload
+from repro.explore.accuracy import resolve_accuracy
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       DEFAULT_OBJECTIVES,
                                       DEFAULT_SERVING_OBJECTIVES,
                                       SERVING_OBJECTIVES,
                                       multi_objective_matrix,
-                                      objective_matrix)
+                                      objective_matrix,
+                                      resolve_objectives)
 from repro.explore.pareto import (EpsilonDominanceArchive,
                                   crowding_distance, epsilon_from_reference,
                                   hypervolume, nondominated_sort,
@@ -77,6 +80,9 @@ class SearchResult:
     # own non-dominated set
     population: np.ndarray | None = None
     population_objectives: np.ndarray | None = None
+    # tier-2 quantized-forward elite validation, attached by
+    # repro.core.dse when the accuracy spec asks for it
+    validation: object | None = None
 
     @property
     def front_size(self) -> int:
@@ -121,6 +127,24 @@ class SearchResult:
         } for i in order]
 
 
+def _fold_floor(accuracy, sqnr_floor_db, *, stacklevel: int = 3):
+    """Fold the deprecated ``sqnr_floor_db=`` side-channel into an
+    accuracy spec (``AccuracySpec(floor_db=...)``).  Raises if the caller
+    supplies both spellings — floors ride on the accuracy model now."""
+    if sqnr_floor_db is None:
+        return accuracy
+    warnings.warn(
+        "sqnr_floor_db= is deprecated; pass "
+        "accuracy=AccuracySpec(floor_db=...) instead",
+        DeprecationWarning, stacklevel=stacklevel)
+    if accuracy is not None:
+        raise ValueError(
+            "pass either accuracy= or the deprecated sqnr_floor_db=, not "
+            "both; put the floor on the accuracy spec (floor_db=)")
+    from repro.explore.accuracy import AccuracySpec
+    return AccuracySpec(floor_db=sqnr_floor_db)
+
+
 class Evaluator:
     """Chunked, memoized genome evaluation through the fused sweep.
 
@@ -139,8 +163,14 @@ class Evaluator:
     :func:`sweep_mixed_many` (one fused kernel call for all W workloads,
     synthesis shared per hardware digest), and objectives come from
     :func:`repro.explore.objectives.multi_objective_matrix` (worst-case /
-    weighted-mean across the suite, optional per-workload SQNR floors via
-    ``sqnr_floor_db``).
+    weighted-mean across the suite).
+
+    ``accuracy`` selects the accuracy tier scoring the
+    ``accuracy_noise`` columns — anything
+    :func:`repro.explore.accuracy.resolve_accuracy` takes (``None`` =
+    tier-0 proxy); an :class:`~repro.explore.accuracy.AccuracySpec`
+    ``floor_db`` turns per-workload SQNR floors into constraints.
+    ``sqnr_floor_db`` is the deprecated spelling of that floor.
     """
 
     def __init__(self, space: CoExploreSpace,
@@ -149,7 +179,11 @@ class Evaluator:
                  *, backend: str = "auto", chunk_size: int = 4096,
                  use_cache: bool = True, weights=None,
                  sqnr_floor_db=None, mesh=None, traffic=None,
-                 n_slots: int = 8, use_pallas: bool | None = None):
+                 n_slots: int = 8, use_pallas: bool | None = None,
+                 accuracy=None):
+        accuracy = _fold_floor(accuracy, sqnr_floor_db, stacklevel=3)
+        self.accuracy = (None if accuracy is None
+                         else resolve_accuracy(accuracy))
         self.space = space
         self.multi = isinstance(workload, (list, tuple))
         if self.multi:
@@ -185,7 +219,9 @@ class Evaluator:
             else:
                 objectives = (DEFAULT_MULTI_OBJECTIVES if self.multi
                               else DEFAULT_OBJECTIVES)
-        self.objectives = tuple(objectives)
+        self.objectives = resolve_objectives(
+            objectives, stacklevel=3,
+            scope="multi" if self.multi else "single")
         serving = [o for o in self.objectives if o in SERVING_OBJECTIVES]
         if serving and self.multi:
             raise ValueError(
@@ -211,7 +247,6 @@ class Evaluator:
         self.chunk_size = int(chunk_size)
         self.use_cache = use_cache
         self.weights = weights
-        self.sqnr_floor_db = sqnr_floor_db
         # mesh= shards every evaluation chunk's genome axis across devices
         # (jax: shard_map via sweep_mixed / sweep_mixed_many; numpy: an
         # int simulates that many shards bit-identically)
@@ -284,7 +319,7 @@ class Evaluator:
             return multi_objective_matrix(
                 agg, [a[:n_real] for a in assigns], macs,
                 self.objectives, weights=self.weights,
-                sqnr_floor_db=self.sqnr_floor_db)
+                accuracy=self.accuracy)
         wl, = wls
         agg = _sweep_mixed(wl, soa, assign[:, :len(wl.layers)],
                            use_cache=self.use_cache,
@@ -295,7 +330,8 @@ class Evaluator:
                                 assign[:n_real, :len(wl.layers)],
                                 macs[0], self.objectives,
                                 traffic=self.traffic,
-                                n_slots=self.n_slots)
+                                n_slots=self.n_slots,
+                                accuracy=self.accuracy)
 
     def evaluate(self, genomes: np.ndarray,
                  subset: int | None = None) -> np.ndarray:
@@ -409,6 +445,7 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
                   weights=None, sqnr_floor_db=None,
                   mesh=None, traffic=None, n_slots: int = 8,
                   use_pallas: bool | None = None,
+                  accuracy=None,
                   batch: int | None = None) -> SearchResult:
     """Uniform-random baseline: ``budget`` independent genomes, running
     non-dominated reduction, hypervolume recorded per batch.
@@ -416,22 +453,23 @@ def random_search(space: CoExploreSpace, workload, budget: int, *,
     ``workload`` may be a single workload or a sequence (multi-workload
     co-exploration — then ``space`` must be a
     :class:`~repro.explore.space.CoExploreManySpace`; ``weights`` and
-    ``sqnr_floor_db`` configure the suite objectives, see
+    ``accuracy`` configure the suite objectives, see
     :class:`Evaluator`).  ``traffic=`` switches to serving-fleet
     objectives over an ``n_slots`` fleet.  Same for the other engines.
-    ``batch=`` is the deprecated spelling of ``batch_size=``.
+    ``batch=`` is the deprecated spelling of ``batch_size=``,
+    ``sqnr_floor_db=`` of ``accuracy=AccuracySpec(floor_db=...)``.
     """
     if batch is not None:
-        import warnings
         warnings.warn(
             "random_search(batch=...) is deprecated; use batch_size=",
             DeprecationWarning, stacklevel=2)
         if batch_size is None:
             batch_size = batch
+    accuracy = _fold_floor(accuracy, sqnr_floor_db)
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, mesh=mesh,
+                   accuracy=accuracy, mesh=mesh,
                    traffic=traffic, n_slots=n_slots,
                    use_pallas=use_pallas)
     if budget < 1:
@@ -492,6 +530,7 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
           weights=None, sqnr_floor_db=None, mesh=None,
           traffic=None, n_slots: int = 8,
           use_pallas: bool | None = None,
+          accuracy=None,
           archive_epsilon=None,
           checkpoint_dir: str | None = None,
           checkpoint_every: int = 5,
@@ -553,10 +592,11 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
     if checkpoint_dir is not None:
         from repro.runtime.dse_checkpoint import SearchCheckpointer
         ckpt = SearchCheckpointer(checkpoint_dir, every=checkpoint_every)
+    accuracy = _fold_floor(accuracy, sqnr_floor_db)
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, mesh=mesh,
+                   accuracy=accuracy, mesh=mesh,
                    traffic=traffic, n_slots=n_slots,
                    use_pallas=use_pallas)
 
@@ -575,10 +615,29 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
         archive.add(arch_g, arch_F)
         return archive
 
+    def acc_payload() -> dict:
+        if ev.accuracy is None:
+            return {}
+        return {"accuracy_state": ev.accuracy.state(),
+                "accuracy_digest": ev.accuracy.digest()}
+
     eps_archive = None
     eps_vec = None
     snap = ckpt.restore() if ckpt is not None else None
     if snap is not None:
+        # pin the exact accuracy table the interrupted run scored with,
+        # and refuse to resume under a *different* calibration (a digest
+        # mismatch after restore means the accuracy spec itself changed)
+        if ev.accuracy is not None \
+                and snap.get("accuracy_state") is not None:
+            ev.accuracy.restore_state(snap["accuracy_state"])
+            want = snap.get("accuracy_digest")
+            got = ev.accuracy.digest()
+            if want is not None and want != got:
+                raise ValueError(
+                    f"checkpoint was scored under accuracy digest "
+                    f"{want}; this run's accuracy spec yields {got} — "
+                    f"refusing to resume against a different calibration")
         gen = snap["gen"]
         evals = snap["evals"]
         pop, F = snap["pop"], snap["F"]
@@ -610,7 +669,7 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
             ckpt.save(gen=0, evals=evals, pop=pop, F=F, arch_g=arch_g,
                       arch_F=arch_F, ref=ref, history=history,
                       all_F=all_F, rng_state=rng.bit_generator.state,
-                      eps_vec=eps_vec)
+                      eps_vec=eps_vec, **acc_payload())
     reg = obs_metrics.get_registry()
     while evals < budget:
         maybe_fail(gen + 1)
@@ -654,7 +713,7 @@ def nsga2(space: CoExploreSpace, workload, budget: int, *,
             ckpt.save(gen=gen, evals=evals, pop=pop, F=F, arch_g=arch_g,
                       arch_F=arch_F, ref=ref, history=history,
                       all_F=all_F, rng_state=rng.bit_generator.state,
-                      eps_vec=eps_vec)
+                      eps_vec=eps_vec, **acc_payload())
     res = _result("nsga2", ev, seed, arch_g, arch_F, ref, history, all_F,
                   evals, population=pop, population_objectives=F)
     res.stats["archive_size"] = int(len(arch_F))
@@ -671,7 +730,8 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
                        ref_point: np.ndarray | None = None,
                        weights=None, sqnr_floor_db=None,
                        mesh=None, traffic=None, n_slots: int = 8,
-                       use_pallas: bool | None = None) -> SearchResult:
+                       use_pallas: bool | None = None,
+                       accuracy=None) -> SearchResult:
     """Successive halving over workload layer-prefix subsets.
 
     Rung ``r`` evaluates its population on the first ``m_r`` layers only
@@ -686,10 +746,11 @@ def successive_halving(space: CoExploreSpace, workload, budget: int, *,
         raise ValueError("budget must be >= 1")
     if eta < 2:
         raise ValueError("eta must be >= 2")
+    accuracy = _fold_floor(accuracy, sqnr_floor_db)
     rng = np.random.default_rng(seed)
     ev = Evaluator(space, workload, objectives, backend=backend,
                    chunk_size=chunk_size, weights=weights,
-                   sqnr_floor_db=sqnr_floor_db, mesh=mesh,
+                   accuracy=accuracy, mesh=mesh,
                    traffic=traffic, n_slots=n_slots,
                    use_pallas=use_pallas)
     L = ev.full_subset

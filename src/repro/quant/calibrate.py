@@ -1,0 +1,318 @@
+"""Tier-1 accuracy calibration: per-layer, per-mode quantization noise
+measured on *real* model-zoo tensors.
+
+The synthetic SQNR proxy in :mod:`repro.explore.objectives` scores every
+layer of every workload with one noise number per PE type, measured once
+on a fixed Gaussian tensor.  This module grounds that signal in the
+seeded model zoo: for a named config (gemma3-4b, mamba2-130m, …) it
+initializes the real parameter tree at calibration width, runs every
+projection weight of every layer through the actual fake quantizers
+(:class:`repro.quant.quantizers.FakeQuantSpec`), samples activations
+from the embedding of a fixed synthetic token batch, and records
+
+* a per-layer, per-PE-type relative noise-power table (weight noise +
+  activation noise, per-channel or per-tensor scales),
+* per-layer distribution statistics (absmax, percentile scale, std)
+  that explain *why* a layer is noisy,
+
+collected once per (model, seed, percentile, per_channel) and cached to
+an ``.npz`` keyed by a confighash digest, so the search loop pays one
+table lookup per genome.
+
+The calibration model is the zoo config at **full depth but reduced
+width** — per-layer structure (and therefore per-layer noise variation)
+is preserved while init stays CPU-cheap.  Only the stacked decoder
+layers feed the table; shared / cross / encoder blocks are serving
+details that the per-layer workload mapping cannot see anyway.
+
+Everything here is import-light on purpose: the module pulls in only
+numpy, the PE enum, and the quantizers, so
+:mod:`repro.explore.objectives` can source its mode→quantizer pairs from
+:data:`PE_QUANT_SPECS` without an import cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import warnings
+
+import numpy as np
+
+from repro.core.pe import PEType
+from repro.quant.quantizers import FakeQuantSpec
+
+CALIB_VERSION = 1
+
+_TYPES = tuple(PEType)
+
+# mode -> (weight spec, act spec); None = native precision.  This is THE
+# single definition of what quantizers each PE type runs — the synthetic
+# tier-0 table in explore/objectives.py and the tier-1 calibrator here
+# both consume it, so the two tiers can never drift apart.
+PE_QUANT_SPECS: dict[PEType, tuple[FakeQuantSpec | None,
+                                   FakeQuantSpec | None]] = {
+    PEType.FP32: (None, None),
+    PEType.INT16: (FakeQuantSpec("int", 16), FakeQuantSpec("int", 16)),
+    PEType.LIGHTPE1: (FakeQuantSpec("pow2"), FakeQuantSpec("int", 8)),
+    PEType.LIGHTPE2: (FakeQuantSpec("pow2_2term"), FakeQuantSpec("int", 8)),
+}
+
+# projection leaves that the serving path quantizes (Model.quantize_params)
+PROJ_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+              "wq_x", "wk_img", "wv_img", "wo_x", "in_proj", "out_proj")
+
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def calibration_cache_stats() -> dict[str, int]:
+    """Copy of the process-wide npz-cache hit/miss counters."""
+    return dict(_CACHE_STATS)
+
+
+def reset_calibration_cache_stats() -> None:
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def calibration_cache_dir() -> pathlib.Path:
+    """Cache root: ``$REPRO_CALIB_CACHE`` or ``~/.cache/repro-qappa/calibration``."""
+    env = os.environ.get("REPRO_CALIB_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro-qappa" / "calibration"
+
+
+def _rel_noise(v64: np.ndarray, q) -> float:
+    """E[(v - qdq(v))^2] / E[v^2], accumulated in float64."""
+    q64 = np.asarray(q, dtype=np.float64)
+    return float(np.mean((v64 - q64) ** 2) / np.mean(v64 ** 2))
+
+
+def _per_channel(spec: FakeQuantSpec) -> FakeQuantSpec:
+    """Per-output-channel variant of a weight spec (axis 0 of (d_in, d_out)),
+    matching the qlinear serve/QAT convention."""
+    return dataclasses.replace(spec, axis=0, per_channel=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationTable:
+    """Per-layer, per-PE-type noise table for one calibrated model.
+
+    ``table[l, t]`` is the relative quantization-noise power (weight +
+    activation) layer ``l`` pays under PE type ``tuple(PEType)[t]`` —
+    the same units as the tier-0 proxy table, so the two tiers are
+    directly comparable.  ``per_tensor_table`` carries the per-tensor
+    variant as a reported statistic regardless of which scale granularity
+    ``table`` was built with.
+    """
+
+    model: str
+    seed: int
+    percentile: float
+    per_channel: bool
+    table: np.ndarray             # (L, T) float64
+    per_tensor_table: np.ndarray  # (L, T) float64
+    act_noise: np.ndarray         # (T,) float64, shared activation sample
+    absmax: np.ndarray            # (L,) float64
+    scale_pctl: np.ndarray        # (L,) float64  |w| percentile per layer
+    std: np.ndarray               # (L,) float64
+
+    @property
+    def n_layers(self) -> int:
+        return self.table.shape[0]
+
+    def digest(self) -> str:
+        """Content digest of the table itself (spec digest + data words):
+        pinned into search checkpoints so a resumed run can refuse to
+        continue against a different calibration."""
+        from repro.core.confighash import digest_words, f64_words
+        words = list(_spec_words(self.model, self.seed, self.percentile,
+                                 self.per_channel))
+        for arr in (self.table, self.per_tensor_table, self.act_noise):
+            lo, hi = f64_words(np.ascontiguousarray(arr).ravel())
+            words += list(lo) + list(hi)
+        # scalar words make digest_words wrap in numpy-scalar arithmetic,
+        # which warns on (intended) uint32 overflow — silence just that
+        with np.errstate(over="ignore"):
+            return "".join(f"{int(w):08x}" for w in digest_words(words))
+
+    def state(self) -> dict[str, np.ndarray]:
+        """Arrays for checkpoint snapshots (see SearchCheckpointer)."""
+        return {"table": self.table,
+                "per_tensor_table": self.per_tensor_table,
+                "act_noise": self.act_noise,
+                "absmax": self.absmax,
+                "scale_pctl": self.scale_pctl,
+                "std": self.std}
+
+
+def _spec_words(model: str, seed: int, percentile: float,
+                per_channel: bool):
+    """Scalar uint32 words identifying a calibration spec (each word is
+    absorbed individually by digest_words, so the list stays flat)."""
+    from repro.core.confighash import f64_words
+    raw = model.encode("utf-8")
+    raw += b"\0" * (-len(raw) % 4)
+    name_words = list(np.frombuffer(raw, dtype=np.uint32)) if raw else []
+    plo, phi = f64_words(np.array([percentile]))
+    return name_words + [np.uint32(len(raw)),
+                         np.uint32(seed & 0xFFFFFFFF), plo[0], phi[0],
+                         np.uint32(bool(per_channel)),
+                         np.uint32(CALIB_VERSION)]
+
+
+def calibration_key(model: str, *, seed: int = 0, percentile: float = 99.9,
+                    per_channel: bool = True) -> str:
+    """Hex cache key for a calibration spec (confighash digest)."""
+    from repro.core.confighash import digest_words
+    with np.errstate(over="ignore"):
+        d = digest_words(_spec_words(model, seed, percentile, per_channel))
+        return "".join(f"{int(w):08x}" for w in d)
+
+
+def _collect_layer_weights(params, n_layers: int) -> list[list[np.ndarray]]:
+    """Per-layer list of (d_in, d_out) float64 projection weights from the
+    stacked ``params['layers']`` tree (the leaves quantize_params touches)."""
+    per_layer: list[list[np.ndarray]] = [[] for _ in range(n_layers)]
+    for name, leaf in sorted(params["layers"].items()):
+        if name not in PROJ_NAMES:
+            continue
+        arr = np.asarray(leaf, dtype=np.float64)
+        if arr.ndim != 3:      # stacked experts etc. stay unquantized
+            continue
+        for l in range(n_layers):
+            per_layer[l].append(arr[l])
+    return per_layer
+
+
+def _measure(model: str, seed: int, percentile: float,
+             per_channel: bool) -> CalibrationTable:
+    import jax
+
+    from repro.configs.base import get_config, reduced
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model import Model
+    from repro.quant.quantizers import quantize_dequantize
+
+    cfg = get_config(model)
+    # full depth, reduced width: keeps per-layer structure, cheap on CPU
+    calib_cfg = reduced(cfg, n_layers=cfg.n_layers)
+    m = Model(calib_cfg)
+    params = m.init(jax.random.key(seed))
+    layers = _collect_layer_weights(params, calib_cfg.n_layers)
+    if not any(layers):
+        raise ValueError(
+            f"model {model!r} exposes no stacked projection weights to "
+            f"calibrate (families must populate params['layers'])")
+
+    # one shared activation sample: embedding rows of a fixed token batch
+    data = SyntheticLM(DataConfig(vocab=calib_cfg.vocab, seq_len=64,
+                                  global_batch=4, seed=seed + 1))
+    toks = np.asarray(data.batch(0)["tokens"]).ravel()
+    embed = np.asarray(params["embed"], dtype=np.float64)
+    act64 = embed[toks].ravel()
+    act32 = np.asarray(act64, dtype=np.float32)
+
+    T, L = len(_TYPES), calib_cfg.n_layers
+    act_noise = np.zeros(T, dtype=np.float64)
+    for t, (_, aspec) in PE_QUANT_SPECS.items():
+        if aspec is not None:
+            act_noise[_TYPES.index(t)] = _rel_noise(
+                act64, quantize_dequantize(act32, aspec))
+
+    w_pc = np.zeros((L, T), dtype=np.float64)
+    w_pt = np.zeros((L, T), dtype=np.float64)
+    absmax = np.zeros(L, dtype=np.float64)
+    scale_pctl = np.zeros(L, dtype=np.float64)
+    std = np.zeros(L, dtype=np.float64)
+    for l, ws in enumerate(layers):
+        flat = np.concatenate([w.ravel() for w in ws])
+        absmax[l] = np.abs(flat).max()
+        scale_pctl[l] = np.percentile(np.abs(flat), percentile)
+        std[l] = flat.std()
+        counts = np.array([w.size for w in ws], dtype=np.float64)
+        shares = counts / counts.sum()
+        for t, (wspec, _) in PE_QUANT_SPECS.items():
+            ti = _TYPES.index(t)
+            if wspec is None:
+                continue
+            for w64, share in zip(ws, shares):
+                w32 = np.asarray(w64, dtype=np.float32)
+                w_pc[l, ti] += share * _rel_noise(
+                    w64, quantize_dequantize(w32, _per_channel(wspec)))
+                w_pt[l, ti] += share * _rel_noise(
+                    w64, quantize_dequantize(w32, wspec))
+
+    table = (w_pc if per_channel else w_pt) + act_noise[None, :]
+    return CalibrationTable(
+        model=model, seed=seed, percentile=percentile,
+        per_channel=per_channel, table=table,
+        per_tensor_table=w_pt + act_noise[None, :], act_noise=act_noise,
+        absmax=absmax, scale_pctl=scale_pctl, std=std)
+
+
+def _analytic_fallback(model: str, seed: int, percentile: float,
+                       per_channel: bool) -> CalibrationTable:
+    """jax-unusable path: broadcast the tier-0 proxy table over the
+    config's layer count so exploration still runs (loudly)."""
+    from repro.configs.base import get_config
+    from repro.explore.objectives import mode_noise_table
+
+    L = get_config(model).n_layers
+    row = np.asarray(mode_noise_table(), dtype=np.float64)
+    table = np.tile(row, (L, 1))
+    z = np.zeros(L, dtype=np.float64)
+    return CalibrationTable(
+        model=model, seed=seed, percentile=percentile,
+        per_channel=per_channel, table=table, per_tensor_table=table.copy(),
+        act_noise=np.zeros(len(_TYPES)), absmax=z, scale_pctl=z.copy(),
+        std=z.copy())
+
+
+def calibrate_model(model: str, *, seed: int = 0, percentile: float = 99.9,
+                    per_channel: bool = True, cache_dir=None,
+                    refresh: bool = False) -> CalibrationTable:
+    """Calibrated per-layer noise table for a zoo model, npz-cached.
+
+    The cache file name is the confighash digest of (model, seed,
+    percentile, per_channel, CALIB_VERSION) — bumping :data:`CALIB_VERSION`
+    invalidates every cached table; ``refresh=True`` bypasses one entry.
+    """
+    key = calibration_key(model, seed=seed, percentile=percentile,
+                          per_channel=per_channel)
+    cdir = pathlib.Path(cache_dir) if cache_dir else calibration_cache_dir()
+    path = cdir / f"calib_{key}.npz"
+    meta = dict(model=model, seed=seed, percentile=percentile,
+                per_channel=per_channel)
+    if path.exists() and not refresh:
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                tab = CalibrationTable(
+                    table=z["table"], per_tensor_table=z["per_tensor_table"],
+                    act_noise=z["act_noise"], absmax=z["absmax"],
+                    scale_pctl=z["scale_pctl"], std=z["std"], **meta)
+            _CACHE_STATS["hits"] += 1
+            return tab
+        except Exception as exc:      # corrupt cache entry: re-measure
+            warnings.warn(f"unreadable calibration cache {path}: {exc}; "
+                          f"re-measuring", RuntimeWarning, stacklevel=2)
+    _CACHE_STATS["misses"] += 1
+    try:
+        tab = _measure(model, seed, percentile, per_channel)
+    except ImportError as exc:
+        warnings.warn(
+            f"jax unusable ({exc}); calibration for {model!r} falls back "
+            f"to the analytic proxy broadcast over layers",
+            RuntimeWarning, stacklevel=2)
+        return _analytic_fallback(model, seed, percentile, per_channel)
+    try:
+        cdir.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp.npz")
+        np.savez(tmp, **tab.state())
+        os.replace(tmp, path)
+    except OSError as exc:            # read-only FS: table still usable
+        warnings.warn(f"cannot write calibration cache {path}: {exc}",
+                      RuntimeWarning, stacklevel=2)
+    return tab

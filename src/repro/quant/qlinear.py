@@ -77,20 +77,30 @@ def dequantize_weight(qw: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
 # QAT fake-quant contraction (training path)
 # ---------------------------------------------------------------------------
 
+def weight_quant_spec(policy: QuantPolicy, axis=0) -> qz.FakeQuantSpec:
+    """FakeQuantSpec for a (d_in, d_out) weight under ``policy``."""
+    if policy.mode == ExecMode.W8A8:
+        return qz.FakeQuantSpec("int", 8, axis)
+    if policy.mode == ExecMode.W4A8_POW2:
+        return qz.FakeQuantSpec("pow2", axis=axis)
+    return qz.FakeQuantSpec("none")
+
+
+def act_quant_spec(policy: QuantPolicy) -> qz.FakeQuantSpec:
+    """FakeQuantSpec for activations (dynamic per-tensor int8, or none)."""
+    if policy.quantized and policy.qat_acts:
+        return qz.FakeQuantSpec("int", 8)
+    return qz.FakeQuantSpec("none")
+
+
 def qat_weight(w: jax.Array, policy: QuantPolicy, axis=0) -> jax.Array:
     """Fake-quantized weight view for training; STE gradients."""
-    if policy.mode == ExecMode.W8A8:
-        return qz.fake_quant_int(w, 8, axis=axis)
-    if policy.mode == ExecMode.W4A8_POW2:
-        return qz.fake_quant_pow2(w, axis=axis)
-    return w
+    return qz.fake_quant(w, weight_quant_spec(policy, axis=axis))
 
 
 def qat_act(x: jax.Array, policy: QuantPolicy) -> jax.Array:
     """Fake-quantized activation (dynamic per-tensor int8)."""
-    if policy.quantized and policy.qat_acts:
-        return qz.fake_quant_int(x, 8, axis=None)
-    return x
+    return qz.fake_quant(x, act_quant_spec(policy))
 
 
 # ---------------------------------------------------------------------------

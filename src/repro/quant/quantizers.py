@@ -8,10 +8,15 @@
 * fake-quantization with straight-through estimators for QAT;
 * int4 nibble packing for the Pallas W4A8 kernel.
 
-All functions are pure and jit/vmap/grad-safe.
+Every fake-quant entry point is driven by one :class:`FakeQuantSpec`
+config: :func:`quantize_dequantize` / :func:`fake_quant` dispatch on the
+spec, and the historical per-kind functions are thin wrappers that build
+the equivalent spec.  All functions are pure and jit/vmap/grad-safe.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +48,7 @@ def dequantize_int(q: jax.Array, scale: jax.Array,
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def quantize_dequantize_int(x: jax.Array, bits: int, axis=None) -> jax.Array:
+def _qdq_int(x: jax.Array, bits: int, axis=None) -> jax.Array:
     # stay in x.dtype (int8 levels are exact in bf16): a f32 scale would
     # promote the whole fake-quant chain to f32 and double its HBM traffic
     scale = int_scale(x, bits, axis).astype(x.dtype)
@@ -83,12 +88,12 @@ def pow2_scale(w: jax.Array, axis=None) -> jax.Array:
     return _absmax(w, axis)
 
 
-def quantize_dequantize_pow2(w: jax.Array, axis=None) -> jax.Array:
+def _qdq_pow2(w: jax.Array, axis=None) -> jax.Array:
     scale = pow2_scale(w, axis)
     return pow2_decode(pow2_encode(w, scale), scale, w.dtype)
 
 
-def quantize_dequantize_pow2_2term(w: jax.Array, axis=None) -> jax.Array:
+def _qdq_pow2_2term(w: jax.Array, axis=None) -> jax.Array:
     """Two-term pow2 ("two shifts + add", LightPE-2 datapath).
 
     Greedy residual: v1 = pow2(w); v2 = pow2(w - v1); result = v1 + v2.
@@ -103,6 +108,70 @@ def quantize_dequantize_pow2_2term(w: jax.Array, axis=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Unified fake-quant config
+# ---------------------------------------------------------------------------
+
+FAKE_QUANT_KINDS = ("none", "int", "pow2", "pow2_2term")
+
+# code width is fixed by the datapath for the shift-based kinds
+_KIND_BITS = {"none": 0, "int": 8, "pow2": 4, "pow2_2term": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeQuantSpec:
+    """One config describing any fake-quant transform in this module.
+
+    ``kind`` picks the quantizer family ("none" is the fp passthrough),
+    ``bits`` the code width (fixed per datapath for the pow2 kinds, so it
+    defaults per kind and only "int" accepts other widths), ``axis`` the
+    reduction axis of the scale.  ``per_channel`` without an explicit
+    ``axis`` resolves to axis 0 — the (d_in, d_out) weight convention
+    used across qlinear / the QAT loop / the calibrator.
+    """
+
+    kind: str = "int"
+    bits: int | None = None
+    axis: int | None = None
+    per_channel: bool = False
+
+    def __post_init__(self):
+        if self.kind not in FAKE_QUANT_KINDS:
+            raise ValueError(
+                f"unknown fake-quant kind {self.kind!r}; "
+                f"expected one of {FAKE_QUANT_KINDS}")
+        if self.bits is None:
+            object.__setattr__(self, "bits", _KIND_BITS[self.kind])
+        elif self.kind in ("pow2", "pow2_2term", "none"):
+            if self.bits != _KIND_BITS[self.kind]:
+                raise ValueError(
+                    f"kind {self.kind!r} has a fixed {_KIND_BITS[self.kind]}"
+                    f"-bit code; got bits={self.bits}")
+        elif not 2 <= self.bits <= 32:
+            raise ValueError(f"int bits must be in [2, 32]; got {self.bits}")
+        if self.axis is not None and not self.per_channel:
+            object.__setattr__(self, "per_channel", True)
+
+    @property
+    def resolved_axis(self) -> int | None:
+        """Scale axis after applying the per_channel default (axis 0)."""
+        if self.axis is not None:
+            return self.axis
+        return 0 if self.per_channel else None
+
+
+def quantize_dequantize(x: jax.Array, spec: FakeQuantSpec) -> jax.Array:
+    """Quantize-dequantize ``x`` per ``spec`` (no STE; use for PTQ/eval)."""
+    if spec.kind == "none":
+        return x
+    axis = spec.resolved_axis
+    if spec.kind == "int":
+        return _qdq_int(x, spec.bits, axis)
+    if spec.kind == "pow2":
+        return _qdq_pow2(x, axis)
+    return _qdq_pow2_2term(x, axis)
+
+
+# ---------------------------------------------------------------------------
 # Straight-through estimators (QAT)
 # ---------------------------------------------------------------------------
 
@@ -111,16 +180,37 @@ def ste(x: jax.Array, qdq: jax.Array) -> jax.Array:
     return x + jax.lax.stop_gradient(qdq - x)
 
 
+def fake_quant(x: jax.Array, spec: FakeQuantSpec) -> jax.Array:
+    """Fake-quantize ``x`` per ``spec``: forward = qdq, gradient = id."""
+    if spec.kind == "none":
+        return x
+    return ste(x, quantize_dequantize(x, spec))
+
+
+# -- historical per-kind entry points: thin wrappers over the spec form --
+
+def quantize_dequantize_int(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    return quantize_dequantize(x, FakeQuantSpec("int", bits, axis))
+
+
+def quantize_dequantize_pow2(w: jax.Array, axis=None) -> jax.Array:
+    return quantize_dequantize(w, FakeQuantSpec("pow2", axis=axis))
+
+
+def quantize_dequantize_pow2_2term(w: jax.Array, axis=None) -> jax.Array:
+    return quantize_dequantize(w, FakeQuantSpec("pow2_2term", axis=axis))
+
+
 def fake_quant_int(x: jax.Array, bits: int, axis=None) -> jax.Array:
-    return ste(x, quantize_dequantize_int(x, bits, axis))
+    return fake_quant(x, FakeQuantSpec("int", bits, axis))
 
 
 def fake_quant_pow2(x: jax.Array, axis=None) -> jax.Array:
-    return ste(x, quantize_dequantize_pow2(x, axis))
+    return fake_quant(x, FakeQuantSpec("pow2", axis=axis))
 
 
 def fake_quant_pow2_2term(x: jax.Array, axis=None) -> jax.Array:
-    return ste(x, quantize_dequantize_pow2_2term(x, axis))
+    return fake_quant(x, FakeQuantSpec("pow2_2term", axis=axis))
 
 
 # ---------------------------------------------------------------------------

@@ -118,7 +118,9 @@ class SearchCheckpointer:
     def save(self, *, gen: int, evals: int, pop: np.ndarray, F: np.ndarray,
              arch_g: np.ndarray, arch_F: np.ndarray, ref: np.ndarray,
              history: list, all_F: list, rng_state: dict,
-             eps_vec: np.ndarray | None) -> str:
+             eps_vec: np.ndarray | None,
+             accuracy_state: dict | None = None,
+             accuracy_digest: str | None = None) -> str:
         state = {
             "kind": "search",
             "gen": int(gen),
@@ -142,6 +144,15 @@ class SearchCheckpointer:
         }
         if eps_vec is not None:
             state["eps_vec"] = np.asarray(eps_vec, dtype=np.float64)
+        # the exact accuracy table the run was scored with (tiered
+        # accuracy models, repro.explore.accuracy): resume pins it and
+        # verifies the digest so a changed calibration can't silently
+        # re-score a resumed front
+        if accuracy_state is not None:
+            state["accuracy_state"] = {k: np.asarray(v)
+                                       for k, v in accuracy_state.items()}
+        if accuracy_digest is not None:
+            state["accuracy_digest"] = str(accuracy_digest)
         with obs_trace.span("checkpoint.save", kind="search",
                             gen=int(gen)):
             path = save_state(self.ckpt_dir, gen, state, keep=self.keep)
@@ -174,6 +185,8 @@ class SearchCheckpointer:
             "all_F": all_F,
             "rng_state": json.loads(state["rng_state"]),
             "eps_vec": state.get("eps_vec"),
+            "accuracy_state": state.get("accuracy_state"),
+            "accuracy_digest": state.get("accuracy_digest"),
         }
 
 

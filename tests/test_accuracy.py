@@ -1,0 +1,427 @@
+"""Tiered accuracy subsystem (ISSUE 10): the AccuracyModel protocol and
+its three tiers, tier-1 calibration + npz cache, tier-2 quantized-forward
+elite validation, the objective registry's deprecation shims, and
+checkpoint pinning of calibration tables.
+
+Every calibration in this module runs against the smallest zoo config
+(mamba2-130m) with a module-scoped cache directory, so the table is
+measured once and every later use is a cache hit.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.dse import ExploreSpec, run
+from repro.core.pe import PEType
+from repro.core.workloads import get_workload
+from repro.explore.accuracy import (AccuracyModel, AccuracySpec,
+                                    CalibratedAccuracy, ProxyAccuracy,
+                                    resolve_accuracy, validate_elites)
+from repro.explore.objectives import (FLOOR_PENALTY,
+                                      LEGACY_OBJECTIVE_ALIASES,
+                                      MULTI_OBJECTIVES, OBJECTIVE_REGISTRY,
+                                      OBJECTIVES, accuracy_floor_violation,
+                                      mode_noise_table, quant_noise,
+                                      reset_sqnr_table, resolve_objectives,
+                                      sqnr_floor_violation)
+from repro.explore.search import Evaluator, nsga2, random_search
+from repro.explore.space import space_for_workload, space_for_workloads
+from repro.quant.calibrate import (calibrate_model, calibration_cache_stats,
+                                   calibration_key,
+                                   reset_calibration_cache_stats)
+
+TYPES = tuple(PEType)
+MODEL = "mamba2-130m"                  # smallest zoo config
+
+WL = get_workload("vgg16")
+SPACE = space_for_workload(WL)
+MACS = np.array([l.macs for l in WL.layers], dtype=np.float64)
+
+
+def _assigns(n=16, seed=0):
+    _, assign = SPACE.decode(SPACE.random_population(
+        n, np.random.default_rng(seed)))
+    return assign
+
+
+@pytest.fixture(scope="module")
+def calib_dir(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("calib"))
+
+
+@pytest.fixture(scope="module")
+def cal(calib_dir) -> CalibratedAccuracy:
+    return CalibratedAccuracy(AccuracySpec(tier=1, model=MODEL,
+                                           cache_dir=calib_dir))
+
+
+# ---------------------------------------------------------------------------
+# AccuracySpec
+# ---------------------------------------------------------------------------
+
+def test_spec_parse():
+    assert AccuracySpec.parse("proxy") == AccuracySpec()
+    c = AccuracySpec.parse(f"calibrated:{MODEL}")
+    assert (c.tier, c.model) == (1, MODEL)
+    m = AccuracySpec.parse(f"measured:{MODEL}")
+    assert (m.tier, m.model) == (2, MODEL)
+    for bad in ("", "proxy:x", "calibrated", "calibrated:", "exact:x"):
+        with pytest.raises(ValueError, match="bad accuracy spec|expected"):
+            AccuracySpec.parse(bad)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="tier must be"):
+        AccuracySpec(tier=3)
+    with pytest.raises(ValueError, match="takes no model"):
+        AccuracySpec(tier=0, model=MODEL)
+    with pytest.raises(ValueError, match="pass\\s+model="):
+        AccuracySpec(tier=1)
+    with pytest.raises(ValueError, match="floor_db must be > 0"):
+        AccuracySpec(floor_db=0.0)
+    with pytest.raises(ValueError, match="floor_db must be > 0"):
+        AccuracySpec(floor_db=(20.0, -1.0))
+    with pytest.raises(ValueError, match="max_elites"):
+        AccuracySpec(tier=2, model=MODEL, max_elites=0)
+    # scalar and per-workload tuple floors both normalize
+    assert AccuracySpec(floor_db=np.float32(20)).floor_db == 20.0
+    assert AccuracySpec(floor_db=[20, 25]).floor_db == (20.0, 25.0)
+
+
+def test_resolve_accuracy_coercions(cal):
+    assert isinstance(resolve_accuracy(None), ProxyAccuracy)
+    assert isinstance(resolve_accuracy("proxy"), ProxyAccuracy)
+    assert resolve_accuracy(cal) is cal           # model instances pass through
+    with pytest.raises(TypeError, match="accuracy must be"):
+        resolve_accuracy(42)
+
+
+def test_models_satisfy_protocol(cal):
+    assert isinstance(ProxyAccuracy(), AccuracyModel)
+    assert isinstance(cal, AccuracyModel)
+
+
+# ---------------------------------------------------------------------------
+# tier 0: ProxyAccuracy
+# ---------------------------------------------------------------------------
+
+def test_proxy_matches_quant_noise_bitwise():
+    assign = _assigns()
+    p = ProxyAccuracy()
+    assert np.array_equal(p.score(assign, MACS), quant_noise(assign, MACS))
+
+
+def test_proxy_state_restore_pins_table():
+    assign = _assigns()
+    p = ProxyAccuracy()
+    t = p.state()["mode_table"]
+    assert np.array_equal(t, mode_noise_table())
+    d0 = p.digest()
+    p.restore_state({"mode_table": t * 2.0})      # pin a different table
+    assert p.digest() != d0
+    assert np.array_equal(p.score(assign, MACS),
+                          2.0 * quant_noise(assign, MACS))
+    # pinning the real table reproduces the live scores exactly
+    p.restore_state({"mode_table": t})
+    assert p.digest() == d0
+    assert np.array_equal(p.score(assign, MACS), quant_noise(assign, MACS))
+
+
+def test_reset_sqnr_table_remeasures_identically():
+    t0 = mode_noise_table().copy()
+    reset_sqnr_table()
+    assert np.array_equal(mode_noise_table(), t0)
+    assert np.array_equal(mode_noise_table(refresh=True), t0)
+
+
+# ---------------------------------------------------------------------------
+# tier 1: CalibratedAccuracy + cache
+# ---------------------------------------------------------------------------
+
+def test_calibration_table_shape_and_sanity(cal):
+    tab = cal.calibration
+    L, T = tab.table.shape
+    assert T == len(TYPES) and L == tab.n_layers >= 2
+    assert (tab.table >= 0).all()
+    fp32 = TYPES.index(PEType.FP32)
+    assert (tab.table[:, fp32] == 0).all()        # fp32 pays no noise
+    # real tensors produce per-layer variation the tier-0 proxy cannot
+    lp1 = TYPES.index(PEType.LIGHTPE1)
+    assert np.ptp(tab.table[:, lp1]) > 0
+    assert (tab.absmax > 0).all() and (tab.std > 0).all()
+
+
+def test_layer_table_proportional_mapping(cal):
+    tab = cal.calibration.table
+    lm = cal.calibration.n_layers
+    n = SPACE.n_layers
+    t = cal.layer_table(n)
+    idx = (np.arange(n) * lm) // n
+    assert np.array_equal(t, tab[idx])
+    assert cal.layer_table(n) is t                # memoized
+    assert np.array_equal(cal.layer_table(lm), tab)
+
+
+def test_calibrated_score_semantics(cal):
+    assign = _assigns()
+    s = cal.score(assign, MACS)
+    assert s.shape == (len(assign),) and (s >= 0).all()
+    assert not np.array_equal(s, quant_noise(assign, MACS))
+    # fp32-everywhere is the zero of the scale, as in the proxy
+    fp32 = np.full((1, SPACE.n_layers), TYPES.index(PEType.FP32))
+    assert cal.score(fp32, MACS)[0] == 0.0
+
+
+def test_calibrated_state_restore_digest_roundtrip(cal, calib_dir):
+    assign = _assigns()
+    other = CalibratedAccuracy(AccuracySpec(tier=1, model=MODEL,
+                                            cache_dir=calib_dir))
+    other.restore_state({k: v.copy() for k, v in cal.state().items()})
+    assert other.digest() == cal.digest()
+    assert np.array_equal(other.score(assign, MACS), cal.score(assign, MACS))
+    # a perturbed table is a different calibration
+    s = {k: v.copy() for k, v in cal.state().items()}
+    s["table"] = s["table"] * 1.5
+    other.restore_state(s)
+    assert other.digest() != cal.digest()
+
+
+def test_calibration_cache_hit_on_rerun(cal, calib_dir):
+    reset_calibration_cache_stats()
+    t2 = calibrate_model(MODEL, cache_dir=calib_dir)
+    stats = calibration_cache_stats()
+    assert stats == {"hits": 1, "misses": 0}
+    assert np.array_equal(t2.table, cal.calibration.table)
+    assert t2.digest() == cal.digest()
+    # refresh bypasses the entry and re-measures the same table
+    t3 = calibrate_model(MODEL, cache_dir=calib_dir, refresh=True)
+    assert calibration_cache_stats()["misses"] == 1
+    assert np.array_equal(t3.table, t2.table)
+
+
+def test_calibration_key_separates_specs():
+    keys = {calibration_key(MODEL),
+            calibration_key(MODEL, seed=1),
+            calibration_key(MODEL, percentile=50.0),
+            calibration_key(MODEL, per_channel=False),
+            calibration_key("gemma3-4b")}
+    assert len(keys) == 5
+
+
+# ---------------------------------------------------------------------------
+# objective registry + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_registry_canonical_names():
+    assert "accuracy_noise" in OBJECTIVES
+    assert "worst_accuracy_noise" in MULTI_OBJECTIVES
+    assert "mean_accuracy_noise" in MULTI_OBJECTIVES
+    assert set(LEGACY_OBJECTIVE_ALIASES) == {
+        "quant_noise", "worst_quant_noise", "mean_quant_noise"}
+    assert not set(LEGACY_OBJECTIVE_ALIASES) & set(OBJECTIVE_REGISTRY)
+    with pytest.raises(ValueError, match="unknown objective"):
+        resolve_objectives(("speed",))
+
+
+def test_legacy_objective_names_warn_and_resolve():
+    for old, new in LEGACY_OBJECTIVE_ALIASES.items():
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            assert resolve_objectives((old,)) == (new,)
+
+
+def test_sqnr_floor_violation_shim_parity():
+    assign = _assigns()
+    want = accuracy_floor_violation([assign], [MACS], 20.0)
+    with pytest.warns(DeprecationWarning, match="accuracy_floor_violation"):
+        got = sqnr_floor_violation([assign], [MACS], 20.0)
+    assert np.array_equal(got, want)
+    assert (want >= 0).all() and want.shape == (len(assign),)
+
+
+def test_engine_sqnr_floor_kwarg_folds_into_accuracy():
+    with pytest.warns(DeprecationWarning, match="sqnr_floor_db"):
+        a = random_search(SPACE, WL, 32, seed=1, backend="numpy",
+                          sqnr_floor_db=20.0)
+    b = random_search(SPACE, WL, 32, seed=1, backend="numpy",
+                      accuracy=AccuracySpec(floor_db=20.0))
+    assert np.array_equal(a.genomes, b.genomes)
+    assert np.array_equal(a.front_objectives, b.front_objectives)
+
+
+def test_both_floor_spellings_rejected():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="not\\s+both"):
+            Evaluator(SPACE, WL, backend="numpy", sqnr_floor_db=20.0,
+                      accuracy=AccuracySpec(floor_db=20.0))
+
+
+def test_preset_floor_folds_with_warning():
+    from repro.configs.coexplore_presets import CoExplorePreset
+    with pytest.warns(DeprecationWarning, match="sqnr_floor_db"):
+        p = CoExplorePreset(name="x", sqnr_floor_db=21.0)
+    assert p.sqnr_floor_db is None
+    assert p.accuracy == AccuracySpec(floor_db=21.0)
+    with pytest.warns(DeprecationWarning):
+        q = CoExplorePreset(name="y", objectives=(
+            "neg_perf_per_area", "energy_j", "quant_noise"))
+    assert q.objectives == ("neg_perf_per_area", "energy_j",
+                            "accuracy_noise")
+
+
+def test_floor_turns_into_static_penalty():
+    g = SPACE.random_population(32, np.random.default_rng(4))
+    free = Evaluator(SPACE, WL, backend="numpy").evaluate(g)
+    # a 200 dB floor is unattainable for any quantized layer
+    hard = Evaluator(SPACE, WL, backend="numpy",
+                     accuracy=AccuracySpec(floor_db=200.0)).evaluate(g)
+    _, assign = SPACE.decode(g)
+    quantized = (assign != TYPES.index(PEType.FP32)).any(axis=1)
+    assert quantized.any()
+    assert (hard[quantized] > FLOOR_PENALTY / 2).all()
+    assert np.array_equal(hard[~quantized], free[~quantized])
+
+
+def test_explore_spec_validates_accuracy_string():
+    s = ExploreSpec.mixed("vgg16", accuracy="proxy")
+    assert s.accuracy == AccuracySpec()
+    with pytest.raises(ValueError, match="bad accuracy spec"):
+        ExploreSpec.mixed("vgg16", accuracy="calibrated:")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint pinning
+# ---------------------------------------------------------------------------
+
+def test_resume_bit_identical_with_calibrated_accuracy(cal, tmp_path):
+    from repro.runtime.dse_checkpoint import resume_search
+    base = nsga2(SPACE, WL, 48, pop_size=8, seed=5, backend="numpy",
+                 accuracy=cal)
+    res = resume_search(SPACE, WL, 48, checkpoint_dir=str(tmp_path),
+                        checkpoint_every=2, pop_size=8, seed=5,
+                        backend="numpy", accuracy=cal,
+                        fail_at_generation={2: 1})
+    assert res.stats.get("restarts") == 1
+    assert np.array_equal(base.genomes, res.genomes)
+    assert np.array_equal(base.front_objectives, res.front_objectives)
+
+
+def test_resume_refuses_different_calibration(cal, calib_dir, tmp_path):
+    nsga2(SPACE, WL, 32, pop_size=8, seed=5, backend="numpy",
+          accuracy=cal, checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    other = CalibratedAccuracy(AccuracySpec(tier=1, model=MODEL,
+                                            percentile=50.0,
+                                            cache_dir=calib_dir))
+    assert other.digest() != cal.digest()
+    with pytest.raises(ValueError, match="refusing to resume"):
+        nsga2(SPACE, WL, 32, pop_size=8, seed=5, backend="numpy",
+              accuracy=other, checkpoint_dir=str(tmp_path),
+              checkpoint_every=1)
+
+
+# ---------------------------------------------------------------------------
+# tier 2: quantized-forward elite validation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tier2(calib_dir):
+    acc = CalibratedAccuracy(AccuracySpec(tier=2, model=MODEL,
+                                          cache_dir=calib_dir,
+                                          max_elites=3))
+    res = nsga2(SPACE, WL, 48, pop_size=8, seed=7, backend="numpy",
+                accuracy=acc)
+    return res, acc
+
+
+def test_validate_elites_measures_loss_deltas(tier2):
+    res, acc = tier2
+    v = validate_elites(res, acc)
+    n = len(v.elite_indices)
+    assert 1 <= n <= 3
+    assert v.baseline_loss > 0
+    assert np.isfinite(v.loss_delta).all()
+    assert v.quant_loss.shape == (n,)
+    assert v.measured_objectives.shape == (n, len(res.objectives))
+    assert v.accuracy_column == list(res.objectives).index("accuracy_noise")
+    assert np.array_equal(v.measured_objectives[:, v.accuracy_column],
+                          v.loss_delta)
+    assert v.pareto_mask.dtype == bool and v.pareto_mask.sum() >= 1
+    s = v.summary()
+    assert s["model"] == MODEL and s["n_elites"] == n
+    # deterministic end to end: fixed init seed, fixed eval batch
+    v2 = validate_elites(res, acc)
+    assert np.array_equal(v2.loss_delta, v.loss_delta)
+    assert v2.baseline_loss == v.baseline_loss
+
+
+def test_validate_elites_rejects_proxy(tier2):
+    res, _ = tier2
+    with pytest.raises(ValueError, match="tier-0 proxy"):
+        validate_elites(res, "proxy")
+
+
+def test_validate_elites_rejects_multi_workload(cal):
+    wls = (get_workload("vgg16"), get_workload("resnet34"))
+    msp = space_for_workloads(wls)
+    res = nsga2(msp, wls, 24, pop_size=8, seed=3, backend="numpy")
+    with pytest.raises(ValueError, match="single-workload only"):
+        validate_elites(res, cal)
+
+
+def test_run_attaches_tier2_validation(calib_dir):
+    spec = AccuracySpec(tier=2, model=MODEL, cache_dir=calib_dir,
+                        max_elites=2)
+    res = run(ExploreSpec.mixed("vgg16", preset="quick", budget=32,
+                                pop_size=8, seed=2, backend="numpy",
+                                accuracy=spec))
+    assert res.validation is not None
+    assert res.validation.summary()["n_elites"] <= 2
+    # tier 1 attaches nothing
+    t1 = AccuracySpec(tier=1, model=MODEL, cache_dir=calib_dir)
+    res1 = run(ExploreSpec.mixed("vgg16", preset="quick", budget=32,
+                                 pop_size=8, seed=2, backend="numpy",
+                                 accuracy=t1))
+    assert res1.validation is None
+
+
+def test_many_facade_rejects_tier2(calib_dir):
+    spec = AccuracySpec(tier=2, model=MODEL, cache_dir=calib_dir)
+    with pytest.raises(ValueError, match="single-workload only"):
+        run(ExploreSpec.many(("vgg16", "resnet34"), precision="mixed",
+                             preset="many-quick", budget=16,
+                             backend="numpy", accuracy=spec))
+
+
+# ---------------------------------------------------------------------------
+# golden calibrated front (the committed calibrated-quick preset)
+# ---------------------------------------------------------------------------
+
+def test_calibrated_quick_reproduces_golden_front():
+    """The committed tier-1 preset reproduces its checked-in golden front
+    bit-for-bit, and that front's *membership* differs from the proxy's —
+    the calibrated signal changes which genomes survive, not just their
+    scores.  Regenerate with
+    ``python benchmarks/accuracy_bench.py --regen-golden``."""
+    golden = json.loads(
+        (pathlib.Path(__file__).parent / "golden_calibrated_front.json")
+        .read_text())
+    res = run(ExploreSpec.mixed(golden["workload"], preset=golden["preset"],
+                                seed=golden["seed"],
+                                backend=golden["backend"]))
+    assert list(res.objectives) == golden["objectives"]
+    acc = resolve_accuracy(f"calibrated:{MODEL}")
+    assert acc.digest() == golden["calibration_digest"]
+    want_g = res.space.unpack_genomes(
+        np.array(golden["front_genomes_u16"], dtype=np.uint16))
+    assert np.array_equal(res.genomes, want_g)
+    np.testing.assert_allclose(
+        res.front_objectives,
+        np.array(golden["front_objectives"], dtype=np.float64), rtol=1e-9)
+
+    prox = run(ExploreSpec.mixed(golden["workload"], preset="quick",
+                                 seed=golden["seed"],
+                                 backend=golden["backend"]))
+    assert set(res.space.genome_keys(res.genomes)) != \
+        set(prox.space.genome_keys(prox.genomes))

@@ -1,0 +1,132 @@
+"""Property-based invariants of the tier-1 accuracy calibration (ISSUE 10
+satellite): permutation invariance of the noise measurement, bit-width
+monotonicity of the int quantizer family, the one-term/two-term pow2
+ordering, and the exact algebra of the MAC-weighted table reduction.
+Requires `hypothesis` (skipped when absent; CI installs it).
+
+The full calibrator runs a real zoo model, far too slow per hypothesis
+example — these tests exercise the same noise measurement
+(:func:`repro.quant.calibrate._rel_noise` over
+:func:`repro.quant.quantizers.quantize_dequantize`) and table reduction
+(:func:`repro.explore.accuracy._mac_weighted`) on generated tensors.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.explore.accuracy import _mac_weighted  # noqa: E402
+from repro.quant.calibrate import _per_channel, _rel_noise  # noqa: E402
+from repro.quant.quantizers import (FakeQuantSpec,  # noqa: E402
+                                    quantize_dequantize)
+
+MAX_EXAMPLES = 40
+
+# finite, non-degenerate calibration tensors: float32-representable
+# magnitudes well inside the exponent range, never all-zero
+finite = st.floats(min_value=-64.0, max_value=64.0, width=32,
+                   allow_nan=False, allow_infinity=False)
+
+
+def nonzero_arrays(min_size=4, max_size=64):
+    # a guaranteed O(1)-magnitude first element keeps absmax away from 0
+    # without a rejection filter (hypothesis loves all-zero lists)
+    return st.tuples(
+        st.floats(min_value=0.5, max_value=64.0, allow_nan=False),
+        st.lists(finite, min_size=min_size - 1, max_size=max_size - 1),
+    ).map(lambda t: np.asarray([t[0], *t[1]], dtype=np.float64))
+
+
+def _noise(x64: np.ndarray, spec: FakeQuantSpec) -> float:
+    x32 = np.asarray(x64, dtype=np.float32)
+    return _rel_noise(x64, quantize_dequantize(x32, spec))
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(x=nonzero_arrays(), bits=st.integers(2, 12), seed=st.integers(0, 99))
+def test_noise_invariant_under_tensor_permutation(x, bits, seed):
+    """Per-tensor calibration noise is a set function of the tensor: the
+    absmax scale and the element-wise quantizer cannot see element order,
+    so any permutation of the calibration tensor measures the same noise
+    (up to float64 summation order in the mean)."""
+    perm = np.random.default_rng(seed).permutation(len(x))
+    spec = FakeQuantSpec("int", bits)
+    assert math.isclose(_noise(x, spec), _noise(x[perm], spec),
+                        rel_tol=1e-9, abs_tol=0.0)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(x=nonzero_arrays(min_size=8, max_size=64), rows=st.integers(2, 8),
+       seed=st.integers(0, 99))
+def test_per_channel_noise_invariant_under_row_permutation(x, rows, seed):
+    """Per-output-channel calibration (scale per column of a
+    (d_in, d_out) weight) is invariant under permutation of the *input*
+    rows — the column-wise absmax scales don't move."""
+    w = np.resize(x, (rows, max(2, len(x) // rows)))
+    perm = np.random.default_rng(seed).permutation(rows)
+    spec = _per_channel(FakeQuantSpec("int", 4))
+    assert math.isclose(_noise(w, spec), _noise(w[perm], spec),
+                        rel_tol=1e-9, abs_tol=0.0)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(x=nonzero_arrays(), bits=st.integers(2, 11))
+def test_int_noise_nonnegative_and_monotone_in_bits(x, bits):
+    """Relative noise is >= 0 and monotone non-increasing in bit-width,
+    up to the finer grid's worst-case floor: one extra bit at least
+    halves the step, so noise(b+1) can only exceed noise(b) when both
+    already sit below the (b+1)-bit worst-case bound (step^2/4 plus the
+    float32 measurement noise) — e.g. a tensor exactly on the coarse
+    grid.  Above that floor, more bits strictly help."""
+    n_b = _noise(x, FakeQuantSpec("int", bits))
+    n_b1 = _noise(x, FakeQuantSpec("int", bits + 1))
+    assert n_b >= 0.0 and n_b1 >= 0.0
+    absmax = float(np.abs(x).max())
+    step = absmax / (2 ** bits - 1)               # (b+1)-bit step
+    worst = (step / 2 + 4e-7 * absmax) ** 2 / float(np.mean(x ** 2))
+    assert n_b1 <= max(n_b, worst)
+    if n_b > worst:
+        assert n_b1 < n_b
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(x=nonzero_arrays())
+def test_two_term_pow2_never_noisier_than_one_term(x):
+    """The LightPE-2 datapath's second shift term is applied per element
+    only where it reduces error, so the two-term mode family is noise-
+    monotone against one-term by construction (the mode-family analogue
+    of bit-width monotonicity)."""
+    one = _noise(x, FakeQuantSpec("pow2"))
+    two = _noise(x, FakeQuantSpec("pow2_2term"))
+    assert 0.0 <= two <= one * (1 + 1e-6) + 1e-12
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 999), layers=st.integers(2, 12),
+       n=st.integers(1, 6))
+def test_mac_weighted_table_reduction_algebra(seed, layers, n):
+    """The (L, T) table reduction behind CalibratedAccuracy.score: joint
+    permutation of (layers, macs, assignments) leaves scores unchanged,
+    scores are non-negative, zero-noise rows score zero, and raising one
+    layer's table entry never lowers a genome's score."""
+    rng = np.random.default_rng(seed)
+    table = rng.uniform(0.0, 1.0, size=(layers, 4))
+    table[:, 0] = 0.0                              # fp32 column
+    macs = rng.uniform(1.0, 100.0, size=layers)
+    assign = rng.integers(0, 4, size=(n, layers))
+    s = _mac_weighted(table, assign, macs)
+    assert s.shape == (n,) and (s >= 0).all()
+    assert np.allclose(
+        _mac_weighted(table, np.zeros_like(assign), macs), 0.0)
+    perm = rng.permutation(layers)
+    s_p = _mac_weighted(table[perm], assign[:, perm], macs[perm])
+    np.testing.assert_allclose(s_p, s, rtol=1e-12)
+    # monotone in the table: a noisier layer entry cannot help
+    l, t = int(rng.integers(layers)), int(rng.integers(1, 4))
+    worse = table.copy()
+    worse[l, t] += 1.0
+    assert (_mac_weighted(worse, assign, macs) >= s - 1e-15).all()

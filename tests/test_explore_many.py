@@ -11,9 +11,10 @@ from repro.core.dse_batch import sweep_mixed, sweep_mixed_many
 from repro.core.pe import PEType
 from repro.core.workloads import ConvLayer, Workload
 from repro.explore import (CoExploreManySpace, Evaluator,
+                           accuracy_floor_violation,
                            multi_objective_matrix, nsga2, pareto_mask_k,
                            quant_noise, random_search, space_for_workloads,
-                           sqnr_floor_violation, successive_halving)
+                           successive_halving)
 from repro.explore.objectives import (DEFAULT_MULTI_OBJECTIVES,
                                       MULTI_OBJECTIVES)
 from repro.explore.space import N_HW_GENES
@@ -154,7 +155,7 @@ def test_multi_objective_semantics():
     assert np.array_equal(cols["neg_worst_perf_per_area"],
                           -agg["perf_per_area"].min(axis=0))
     noise = np.stack([quant_noise(a, m) for a, m in zip(assigns, macs)])
-    assert np.array_equal(cols["worst_quant_noise"], noise.max(axis=0))
+    assert np.array_equal(cols["worst_accuracy_noise"], noise.max(axis=0))
     edp = agg["energy_j"] * lat
     assert np.array_equal(cols["worst_edp"], edp.max(axis=0))
 
@@ -163,7 +164,7 @@ def test_multi_objective_semantics():
                                 weights=(1.0, 0.0, 0.0))
     assert np.array_equal(Fw[:, 0], lat[0])
 
-    with pytest.raises(ValueError, match="unknown multi-workload"):
+    with pytest.raises(ValueError, match="unknown objective"):
         multi_objective_matrix(agg, assigns, macs, ("speed",))
     with pytest.raises(ValueError, match="weights"):
         multi_objective_matrix(agg, assigns, macs, ("mean_latency_s",),
@@ -176,7 +177,7 @@ def test_sqnr_floor_constraints_penalize_noisy_genomes():
     g[0, 0] = SPACE.pe_types.index(PEType.FP32)
     g[0, N_HW_GENES:] = TYPES.index(PEType.FP32)
     agg, assigns, macs = _agg_for(g)
-    v = sqnr_floor_violation(assigns, macs, 20.0)
+    v = accuracy_floor_violation(assigns, macs, 20.0)
     assert v.shape == (64,)
     assert v[0] == 0.0
     assert (v >= 0).all()
@@ -190,7 +191,7 @@ def test_sqnr_floor_constraints_penalize_noisy_genomes():
     assert np.array_equal(F_free[feasible], F_floor[feasible])
     assert (F_floor[~feasible] > F_free[~feasible]).all()
     # per-workload floors broadcast
-    v3 = sqnr_floor_violation(assigns, macs, (20.0, 25.0, 30.0))
+    v3 = accuracy_floor_violation(assigns, macs, (20.0, 25.0, 30.0))
     assert (v3 >= v).all()
 
 
@@ -351,4 +352,7 @@ def test_many_presets_registered():
     assert {"many-quick", "many-default", "many-thorough"} <= set(PRESETS)
     assert set(get_preset("many-default").objectives) <= \
         set(MULTI_OBJECTIVES)
-    assert get_preset("many-thorough").sqnr_floor_db == 20.0
+    # the floor now rides on the accuracy spec (sqnr_floor_db folded)
+    thorough = get_preset("many-thorough")
+    assert thorough.sqnr_floor_db is None
+    assert thorough.accuracy.floor_db == 20.0

@@ -249,7 +249,7 @@ def test_objective_matrix_serving_floor_penalty():
     from repro.explore.objectives import FLOOR_PENALTY, objective_matrix
     agg = {"latency_s": np.array([0.5]), "energy_j": np.array([1.0]),
            "perf_per_area": np.array([1.0]), "area_mm2": np.array([1.0]),
-           "quant_noise": np.array([0.0])}
+           "accuracy_noise": np.array([0.0])}
     from repro.serving.traffic import resolve_traffic
     f = objective_matrix(
         agg, None, None,
